@@ -1,0 +1,54 @@
+"""Roofline benchmark: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the per-(arch x shape) roofline terms — compute / memory /
+collective seconds, dominant bottleneck, and useful-FLOPs ratio.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({
+                "name": f"roofline/{rec['arch']}/{rec['shape']}",
+                "us_per_call": -1.0,
+                "derived": -1.0,
+                "extra": {"status": rec.get("status"),
+                          "reason": rec.get("reason", rec.get("error", ""))[:120]},
+            })
+            continue
+        rl = rec["roofline"]
+        dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                  key=lambda k: rl[k])
+        rows.append({
+            "name": f"roofline/{rec['arch']}/{rec['shape']}",
+            # dominant term in microseconds = the step-time lower bound
+            "us_per_call": 1e6 * rl[dom],
+            "derived": rl["useful_ratio"],
+            "extra": {
+                "bottleneck": rl["bottleneck"],
+                "t_compute_s": rl["t_compute_s"],
+                "t_memory_s": rl["t_memory_s"],
+                "t_collective_s": rl["t_collective_s"],
+                "temp_bytes_per_dev": rec["memory"]["temp_bytes"],
+                "compile_s": rec["t_compile_s"],
+            },
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.4f}")

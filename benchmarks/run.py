@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run --only table1,fig2,roofline,kernels``.
+Scale with --fast (CI) / default (paper-shaped, minutes on CPU).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="table1,fig2,semi,roofline,kernels")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    which = set(args.only.split(","))
+
+    rows = []
+    if "table1" in which:
+        from benchmarks import table1_rates
+        rows += table1_rates.run(
+            iters=200 if args.fast else 600,
+            seeds=(0,) if args.fast else (0, 1, 2),
+        )
+    if "fig2" in which:
+        from benchmarks import fig2_cnn_grid
+        rows += fig2_cnn_grid.run(
+            n=6 if args.fast else 10,
+            iters=40 if args.fast else 120,
+            n_data=1500 if args.fast else 4000,
+        )
+        if not args.fast:  # Fig 3: n=30 grid
+            rows += fig2_cnn_grid.run(
+                n=30, alphas=(0.05, 0.1), iters=120, n_data=4000,
+            )
+    if "semi" in which:
+        from benchmarks import semi_async
+        rows += semi_async.run(
+            iters=200 if args.fast else 400,
+            seeds=(0,) if args.fast else (0, 1),
+        )
+    if "roofline" in which:
+        from benchmarks import roofline
+        rows += roofline.run("single")
+    if "kernels" in which:
+        from benchmarks import kernels_bench
+        rows += kernels_bench.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.5f}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

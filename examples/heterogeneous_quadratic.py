@@ -1,0 +1,47 @@
+"""The paper's core phenomenon, isolated: on arbitrarily heterogeneous data,
+vanilla ASGD converges to the WRONG point; DuDe-ASGD converges to the true
+stationary point at async speed.
+
+Each worker i holds F_i(w) = 0.5 w'A_i w - b_i'w with very different b_i
+(heterogeneity zeta is effectively unbounded).  We report distance to the
+exact minimizer of F = mean(F_i) and simulated wall-clock.
+
+  PYTHONPATH=src python examples/heterogeneous_quadratic.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALGO_NAMES, make_algo, simulate, truncated_normal_speeds
+
+N, P, HET = 8, 10, 5.0
+rng = np.random.default_rng(0)
+A = [np.diag(rng.uniform(0.5, 2.0, P)) for _ in range(N)]
+b = [rng.normal(size=P) * HET for _ in range(N)]
+wstar = np.linalg.solve(sum(A) / N, sum(b) / N)
+
+
+def grad_fn(params, batch, key):
+    Ai, bi = batch
+    g = Ai @ params - bi + 0.05 * jax.random.normal(key, (P,))
+    return 0.5 * params @ Ai @ params - bi @ params, g
+
+
+def sample_fn(i, rng_):
+    return (jnp.asarray(A[i], jnp.float32), jnp.asarray(b[i], jnp.float32))
+
+
+speeds = truncated_normal_speeds(N, std=5.0, seed=1)  # extreme stragglers
+print(f"worker speeds: {np.round(speeds.times, 2)}")
+print(f"{'algorithm':<16} {'|w-w*|':>8} {'sim-time':>9} {'#grads':>7} {'tau_max':>8}")
+for name in ALGO_NAMES:
+    res = simulate(make_algo(name, N), speeds, grad_fn, sample_fn,
+                   jnp.zeros(P), lr=0.03, total_iters=800, record_every=1000)
+    err = float(np.linalg.norm(np.asarray(res.params) - wstar))
+    t = res.times[-1] if len(res.times) else float("nan")
+    print(f"{name:<16} {err:8.4f} {t:9.1f} {res.n_grads:7d} {res.tau_max:8d}")
+
+print("\nDuDe-ASGD matches sync SGD's solution with a fraction of the "
+      "gradients and wall-clock; vanilla/uniform ASGD stall at a "
+      "heterogeneity-proportional bias (paper Table 1).")

@@ -1,0 +1,53 @@
+"""Quickstart: DuDe-ASGD in ~40 lines.
+
+Trains a tiny transformer LM with the paper's dual-delayed semi-asynchronous
+protocol (mode B): 4 workers with heterogeneous speeds, per-worker data
+skew, incremental server aggregation.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DuDeConfig, delay_stats, dude_init,
+                        make_round_schedule, truncated_normal_speeds)
+from repro.data import make_token_sampler
+from repro.launch.steps import make_train_step
+from repro.models import lm_init
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+
+cfg = ModelConfig(
+    name="quickstart-lm", arch_type="dense", num_layers=2, d_model=128,
+    num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
+    dtype=jnp.float32, remat=False, attn_chunk=32, n_workers=4,
+)
+
+params = lm_init(jax.random.PRNGKey(0), cfg)
+opt = sgd(0.05)
+opt_state = opt.init(params)
+dude_cfg = DuDeConfig(cfg.n_workers, jnp.float32)
+dude_state = dude_init(params, dude_cfg)
+step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+
+# heterogeneous speeds (paper §5: s_i ~ TN(1, std)) -> round schedule
+speeds = truncated_normal_speeds(cfg.n_workers, std=1.0, seed=1)
+schedule = make_round_schedule(speeds, rounds=60)
+print("speeds:", np.round(speeds.times, 2), delay_stats(schedule))
+
+# heterogeneous data: each worker draws from its own token distribution
+sampler = make_token_sampler(cfg.n_workers, cfg.vocab_size, seq_len=32,
+                             batch=2, heterogeneity=2.0, seed=0)
+rng = np.random.default_rng(0)
+
+for r in range(schedule.rounds):
+    per = [sampler(i, rng) for i in range(cfg.n_workers)]
+    batch = {k: jnp.asarray(np.stack([p[k] for p in per])) for k in per[0]}
+    params, opt_state, dude_state, m = step(
+        params, opt_state, dude_state, batch,
+        jnp.asarray(schedule.start[r]), jnp.asarray(schedule.commit[r]))
+    if r % 10 == 0:
+        print(f"round {r:3d}  loss {float(m['loss']):.4f}")
+print("done — dual-delayed aggregated gradient, zero straggler stalls.")

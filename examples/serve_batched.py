@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a batch of prompts and decode tokens with
+the production serve_step (KV caches, GQA flash-decode math, SWA support).
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch qwen3_1_7b]
+"""
+
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0], "--arch", args.arch, "--smoke",
+                "--batch", "4", "--prompt-len", "24", "--gen-len", "12"]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Checkpointing: pytree -> npz payload + msgpack manifest.
+
+Layout:  <dir>/step_<N>/arrays.npz  (leaf i -> "a<i>")
+         <dir>/step_<N>/manifest.msgpack  (treedef repr, paths, shapes, dtypes)
+
+Arrays are gathered to host (fine for CPU and for per-host sharded saves —
+a real multi-host deployment would write per-process shards; the manifest
+format already records logical paths so that extension is local to save/load).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Pytree = Any
+
+
+def _paths_and_leaves(tree: Pytree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        paths.append("/".join(parts))
+    return paths, [l for _, l in flat]
+
+
+def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    paths, leaves = _paths_and_leaves(tree)
+    arrays = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        a = np.asarray(jax.device_get(l))
+        dtypes.append(str(a.dtype))
+        if str(a.dtype) == "bfloat16":  # numpy can't serialize ml_dtypes
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": dtypes,
+    }
+    with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return d
+
+
+def restore_checkpoint(directory: str, step: Optional[int], like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (validates paths/shapes)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(d, "arrays.npz"))
+    paths, leaves = _paths_and_leaves(like)
+    if paths != manifest["paths"]:
+        raise ValueError("checkpoint structure mismatch")
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for i, ref in enumerate(flat):
+        arr = data[f"a{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(f"shape mismatch at {paths[i]}: {arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

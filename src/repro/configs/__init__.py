@@ -1,0 +1,50 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``.
+
+Each module defines CONFIG (exact assigned numbers, source cited) — the full
+config is exercised via the multi-pod dry-run (ShapeDtypeStruct only); smoke
+tests use ``CONFIG.smoke()``.
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = (
+    "llava_next_mistral_7b",
+    "qwen1_5_110b",
+    "xlstm_1_3b",
+    "musicgen_large",
+    "starcoder2_3b",
+    "olmoe_1b_7b",
+    "qwen2_0_5b",
+    "zamba2_2_7b",
+    "qwen3_1_7b",
+    "kimi_k2_1t_a32b",
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "musicgen-large": "musicgen_large",
+    "starcoder2-3b": "starcoder2_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+})
+
+
+def get_config(name: str) -> ModelConfig:
+    key = _ALIASES.get(name, name)
+    if key not in ARCH_IDS:
+        raise ValueError(f"unknown arch {name!r}; options: {sorted(_ALIASES)}")
+    return import_module(f"repro.configs.{key}").CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,35 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) vocab=163840,
+MoE 384 experts top-8 + 1 shared, expert d_ff=2048 — trillion-param
+paper-table entry.  [arXiv:2501.kimi2]
+
+Layer 0 is dense (first_k_dense_replace=1, d_ff 18432); 60 MoE layers scanned.
+1T total / ~32B active params: the extreme memory + all-to-all stressor —
+DuDe runs with n_workers=2, bf16 buffers; EXPERIMENTS §Dry-run reports the
+per-device byte shortfalls honestly.  sliding_window is a framework extension
+(beyond-spec) enabling long_500k.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=2048,
+    moe_d_ff=2048,
+    dense_d_ff=18432,
+    vocab_size=163840,
+    head_dim=112,
+    prefix_layers=("attn",),
+    block_pattern=("moe",),
+    num_experts=384,
+    experts_per_tok=8,
+    num_shared_experts=1,
+    qk_norm=True,
+    sliding_window=8192,
+    n_workers=2,
+    source="arXiv:2501.kimi2",
+)

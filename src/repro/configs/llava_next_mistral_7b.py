@@ -1,0 +1,31 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B language backbone of LLaVA-NeXT.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000 — anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+The vision side (SigLIP/CLIP ViT + anyres tile grid) is the sanctioned stub:
+``input_specs`` supplies 1152-d patch embeddings (2 tiles x 576 patches); the
+backbone owns the multimodal projector.  Mistral's 4096-token sliding window
+makes long_500k decodable.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_type="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    rope_theta=1e6,
+    sliding_window=4096,
+    frontend="vision",
+    frontend_dim=1152,
+    num_prefix_tokens=1152,   # 2 anyres tiles x 576 patches
+    n_workers=16,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

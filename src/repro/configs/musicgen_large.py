@@ -1,0 +1,29 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048
+— decoder-only over EnCodec tokens.  [arXiv:2306.05284]
+
+4 EnCodec codebooks (delay-pattern interleave abstracted as per-step sums of
+4 codebook embeddings + 4 output heads).  Conditioning frontend (T5 text /
+melody) is the sanctioned stub: 64 conditioning-frame embeddings prepended.
+Full attention, no sub-quadratic claim => long_500k is SKIPPED for this arch
+(DESIGN.md §4).
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    head_dim=64,
+    num_codebooks=4,
+    frontend="audio",
+    frontend_dim=768,
+    num_prefix_tokens=64,
+    n_workers=16,
+    source="arXiv:2306.05284",
+)

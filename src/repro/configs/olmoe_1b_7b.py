@@ -1,0 +1,29 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (kv=16) vocab=50304,
+MoE 64 experts top-8, expert d_ff=1024 — qk-norm.  [arXiv:2409.02060]
+
+Expert-parallel over the `model` axis (64/16 = 4 experts per device);
+the dispatch/combine all-to-all is the MoE collective roofline term.
+sliding_window is a framework extension enabling long_500k (beyond-spec).
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    arch_type="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    moe_d_ff=1024,
+    vocab_size=50304,
+    head_dim=128,
+    qk_norm=True,
+    block_pattern=("moe",),
+    num_experts=64,
+    experts_per_tok=8,
+    sliding_window=4096,
+    n_workers=16,
+    source="arXiv:2409.02060",
+)

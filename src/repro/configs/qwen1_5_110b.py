@@ -1,0 +1,27 @@
+"""qwen1.5-110b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064 — QKV bias.  [hf:Qwen/Qwen1.5-0.5B (family card), 110B variant]
+
+The big-dense stressor for the mesh: 110B params => DuDe server state is the
+dominant HBM term, so this arch defaults to n_workers=4 with bf16 buffers
+(DESIGN.md §7).  sliding_window is a framework extension (off in the source
+model) enabling the long_500k shape; EXPERIMENTS notes it as beyond-spec.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    arch_type="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    sliding_window=8192,
+    n_workers=4,
+    source="hf:Qwen/Qwen1.5-0.5B",
+)

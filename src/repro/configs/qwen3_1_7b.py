@@ -1,0 +1,23 @@
+"""qwen3-1.7b [dense] — 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk_norm, GQA, tied embeddings.  [hf:Qwen/Qwen3-8B (family)]
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    sliding_window=4096,
+    n_workers=16,
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,26 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE.  [arXiv:2402.19173]
+
+StarCoder2's native 4096 sliding window enables long_500k.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e5,
+    sliding_window=4096,
+    mlp_gated=False,  # starcoder2 uses a 2-matrix GELU MLP
+
+    n_workers=16,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,23 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks.  [arXiv:2405.04517]
+
+Period-8 pattern (7 mLSTM : 1 sLSTM) following the paper's xLSTM[7:1] ratio;
+48 layers = 6 scanned groups.  Attention-free => long_500k decodes natively
+with O(state) memory.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    n_workers=16,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,27 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 blocks + shared attention block.
+[arXiv:2411.15242]
+
+Period-6 pattern: 5 Mamba2 blocks then one Mamba2 block followed by the
+SHARED attention+MLP block (one weight set reused at all 9 occurrences —
+zamba2's parameter-sharing trick).  54 layers = 9 scanned groups.
+Mamba2 backbone => long_500k decodes natively.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    arch_type="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    head_dim=80,
+    ssm_state=64,
+    block_pattern=("mamba",) * 5 + ("mamba_shared_attn",),
+    n_workers=16,
+    source="arXiv:2411.15242",
+)

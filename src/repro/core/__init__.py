@@ -1,0 +1,28 @@
+"""DuDe-ASGD core: the paper's contribution as composable JAX modules.
+
+Public API:
+  * DuDeConfig / DuDeState / dude_init / dude_commit / dude_round — Algorithm 1
+    and the semi-asynchronous SPMD variant (see DESIGN.md modes A/B).
+  * schedules — worker speed models and arrival schedules.
+  * baselines — Table-1 comparison algorithms.
+  * simulator — event-driven asynchronous-training harness.
+"""
+
+from .dude import DuDeConfig, DuDeState, dude_commit, dude_init, dude_round
+from .schedules import (
+    RoundSchedule,
+    SpeedModel,
+    delay_stats,
+    event_stream,
+    make_round_schedule,
+    truncated_normal_speeds,
+)
+from .baselines import ALGO_NAMES, ServerAlgo, make_algo
+from .simulator import SimResult, simulate
+
+__all__ = [
+    "DuDeConfig", "DuDeState", "dude_commit", "dude_init", "dude_round",
+    "RoundSchedule", "SpeedModel", "delay_stats", "event_stream",
+    "make_round_schedule", "truncated_normal_speeds",
+    "ALGO_NAMES", "ServerAlgo", "make_algo", "SimResult", "simulate",
+]

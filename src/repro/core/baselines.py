@@ -1,0 +1,211 @@
+"""Baseline distributed SGD algorithms from the paper's Table 1.
+
+Each algorithm is expressed as a *server update rule* consumed by the
+event-driven simulator (``core/simulator.py``).  All rules are pure functions
+jitted once; scheduling semantics (who computes when, who receives models)
+live in the simulator's per-discipline drivers.
+
+Implemented (paper Table 1):
+  * Synchronous SGD            [Khaled & Richtarik 2023]  — round-based
+  * MIFA (no local updates)    [Gu et al. 2021]           — round-based, full agg
+  * FedBuff                    [Nguyen et al. 2022]       — semi-async, partial agg
+  * Vanilla ASGD               [Mishchenko et al. 2022]   — fully async
+  * Uniform ASGD               [Koloskova et al. 2022]    — async + random routing
+  * Shuffled ASGD              [Islamov et al. 2024]      — async + shuffled routing
+  * DuDe-ASGD (this paper)     — fully async, full aggregation, dual delays
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dude import DuDeConfig, DuDeState, dude_commit, dude_init
+
+Pytree = Any
+
+__all__ = ["ServerAlgo", "make_algo", "ALGO_NAMES"]
+
+ALGO_NAMES = (
+    "sync_sgd",
+    "mifa",
+    "fedbuff",
+    "vanilla_asgd",
+    "uniform_asgd",
+    "shuffled_asgd",
+    "dude_asgd",
+)
+
+
+def _sgd_apply(params: Pytree, direction: Pytree, lr: float) -> Pytree:
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, direction)
+
+
+@dataclasses.dataclass
+class ServerAlgo:
+    """A server-side update rule.
+
+    ``scheduling`` tells the simulator which event-loop discipline to use:
+      * "greedy"   — worker restarts immediately on the freshest model
+                     (vanilla ASGD, DuDe-ASGD, FedBuff workers)
+      * "routed"   — server routes each new model to a sampled worker's queue
+                     (Uniform / Shuffled ASGD)
+      * "rounds"   — synchronous rounds (sync SGD, MIFA)
+    """
+
+    name: str
+    scheduling: str
+    init_state: Callable[[Pytree], Any]
+    # (state, worker, grad, params, lr) -> (state, new_params, applied: bool)
+    on_gradient: Callable[..., tuple]
+    # rounds discipline only: (state, grads [n,...] or dict, mask, params, lr)
+    on_round: Optional[Callable[..., tuple]] = None
+    route: Optional[str] = None  # "uniform" | "shuffled"
+
+
+# ---------------------------------------------------------------- sync / MIFA
+
+
+def _make_sync(n: int) -> ServerAlgo:
+    def init_state(grad_like):
+        return ()
+
+    def on_round(state, stacked_grads, mask, params, lr):
+        # mask is all-ones for sync SGD; average of fresh gradients.
+        g = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
+        return state, _sgd_apply(params, g, lr)
+
+    return ServerAlgo("sync_sgd", "rounds", init_state, None, on_round=on_round)
+
+
+def _make_mifa(n: int) -> ServerAlgo:
+    """MIFA w/o local updates: per-worker gradient memory, rounds with
+    partial participation; absent workers contribute their stale entry."""
+
+    def init_state(grad_like):
+        return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), grad_like)
+
+    def on_round(memory, stacked_grads, mask, params, lr):
+        m = mask.reshape((-1,) + (1,) * 0)
+
+        def upd(mem, g):
+            mm = mask.reshape((-1,) + (1,) * (g.ndim - 1))
+            return jnp.where(mm, g, mem)
+
+        memory = jax.tree.map(upd, memory, stacked_grads)
+        g = jax.tree.map(lambda mem: jnp.mean(mem, axis=0), memory)
+        return memory, _sgd_apply(params, g, lr)
+
+    return ServerAlgo("mifa", "rounds", init_state, None, on_round=on_round)
+
+
+# ------------------------------------------------------------------- FedBuff
+
+
+def _make_fedbuff(n: int, buffer_size: int = 4) -> ServerAlgo:
+    """FedBuff with K=1 local step: buffer ``buffer_size`` deltas, then apply
+    their mean.  State = (accumulated delta sum, count)."""
+
+    def init_state(grad_like):
+        acc = jax.tree.map(jnp.zeros_like, grad_like)
+        return (acc, jnp.zeros((), jnp.int32))
+
+    def on_gradient(state, worker, grad, params, lr):
+        acc, cnt = state
+        acc = jax.tree.map(lambda a, g: a + g, acc, grad)
+        cnt = cnt + 1
+
+        def flush(_):
+            g = jax.tree.map(lambda a: a / buffer_size, acc)
+            new_params = _sgd_apply(params, g, lr)
+            zero = jax.tree.map(jnp.zeros_like, acc)
+            return (zero, jnp.zeros((), jnp.int32)), new_params, jnp.array(True)
+
+        def hold(_):
+            return (acc, cnt), params, jnp.array(False)
+
+        return jax.lax.cond(cnt >= buffer_size, flush, hold, None)
+
+    return ServerAlgo("fedbuff", "greedy", init_state, on_gradient)
+
+
+# ------------------------------------------------------- asynchronous family
+
+
+def _make_vanilla(n: int) -> ServerAlgo:
+    def init_state(grad_like):
+        return ()
+
+    def on_gradient(state, worker, grad, params, lr):
+        return state, _sgd_apply(params, grad, lr), jnp.array(True)
+
+    return ServerAlgo("vanilla_asgd", "greedy", init_state, on_gradient)
+
+
+def _make_routed(n: int, route: str) -> ServerAlgo:
+    algo = _make_vanilla(n)
+    name = "uniform_asgd" if route == "uniform" else "shuffled_asgd"
+    return dataclasses.replace(algo, name=name, scheduling="routed", route=route)
+
+
+def _make_dude(n: int, buffer_dtype=jnp.float32) -> ServerAlgo:
+    cfg = DuDeConfig(n_workers=n, buffer_dtype=buffer_dtype)
+
+    def init_state(grad_like):
+        return dude_init(grad_like, cfg)
+
+    def on_gradient(state: DuDeState, worker, grad, params, lr):
+        state, g = dude_commit(state, worker, grad, cfg)
+        return state, _sgd_apply(params, g, lr), jnp.array(True)
+
+    return ServerAlgo("dude_asgd", "greedy", init_state, on_gradient)
+
+
+def _make_dude_semi(n: int, c: int = 2, buffer_dtype=jnp.float32) -> ServerAlgo:
+    """Semi-asynchronous DuDe (paper §3): the server folds every arriving
+    delta into g~ immediately (incremental aggregation) but only updates the
+    global model once |C_t| = c deltas have arrived — trading wait time for
+    smaller tau_max^(c) = tau_max / c."""
+    cfg = DuDeConfig(n_workers=n, buffer_dtype=buffer_dtype)
+
+    def init_state(grad_like):
+        return (dude_init(grad_like, cfg), jnp.zeros((), jnp.int32))
+
+    def on_gradient(state, worker, grad, params, lr):
+        dude_state, pending = state
+        dude_state, g = dude_commit(dude_state, worker, grad, cfg)
+        pending = pending + 1
+
+        def flush(_):
+            return ((dude_state, jnp.zeros((), jnp.int32)),
+                    _sgd_apply(params, g, lr), jnp.array(True))
+
+        def hold(_):
+            return ((dude_state, pending), params, jnp.array(False))
+
+        return jax.lax.cond(pending >= c, flush, hold, None)
+
+    return ServerAlgo(f"dude_semi_c{c}", "greedy", init_state, on_gradient)
+
+
+def make_algo(name: str, n: int, **kw) -> ServerAlgo:
+    if name == "sync_sgd":
+        return _make_sync(n)
+    if name == "mifa":
+        return _make_mifa(n)
+    if name == "fedbuff":
+        return _make_fedbuff(n, **kw)
+    if name == "vanilla_asgd":
+        return _make_vanilla(n)
+    if name == "uniform_asgd":
+        return _make_routed(n, "uniform")
+    if name == "shuffled_asgd":
+        return _make_routed(n, "shuffled")
+    if name == "dude_asgd":
+        return _make_dude(n, **kw)
+    if name == "dude_semi":
+        return _make_dude_semi(n, **kw)
+    raise ValueError(f"unknown algorithm {name!r}; options: {ALGO_NAMES} + dude_semi")

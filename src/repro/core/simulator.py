@@ -1,0 +1,191 @@
+"""Event-driven asynchronous-training simulator (DESIGN.md mode A).
+
+Reproduces the paper's experimental protocol exactly: continuous-time worker
+completions from the fixed-computation-speed model, zero communication time,
+one server iteration per gradient arrival (fully async) or per round
+(synchronous disciplines).  The numerical work (forward/backward, server
+update) is jitted JAX; the event loop is host Python.
+
+The simulator is model-agnostic: pass ``grad_fn(params, batch, rng) ->
+(loss, grads)`` and a ``sample_fn(worker, rng) -> batch`` drawing from that
+worker's (heterogeneous) local data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import ServerAlgo
+from .schedules import SpeedModel
+
+Pytree = Any
+
+__all__ = ["SimResult", "simulate"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    times: np.ndarray        # simulated wall-clock at each record
+    iters: np.ndarray        # server iterations at each record
+    losses: np.ndarray       # recorded metric (running train loss or eval)
+    grad_norms: np.ndarray
+    params: Pytree
+    tau_max: int
+    n_grads: int             # stochastic gradients computed (sample complexity)
+
+
+def _record(eval_fn, params, running_loss, g):
+    if eval_fn is not None:
+        return float(eval_fn(params))
+    return float(running_loss)
+
+
+def simulate(
+    algo: ServerAlgo,
+    speeds: SpeedModel,
+    grad_fn: Callable,
+    sample_fn: Callable,
+    params0: Pytree,
+    lr: float,
+    total_iters: int,
+    seed: int = 0,
+    record_every: int = 10,
+    eval_fn: Optional[Callable] = None,
+    ema: float = 0.9,
+    max_time: Optional[float] = None,
+) -> SimResult:
+    """Run one asynchronous training simulation.
+
+    Workers compute gradients on the model version they last received; model
+    versions are tracked explicitly so the dual delay (model staleness vs.
+    data freshness) is physical, not emulated.
+    """
+    n = speeds.n
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+
+    grad_fn = jax.jit(grad_fn)
+    state = algo.init_state(jax.tree.map(jnp.zeros_like, params0))
+    on_gradient = jax.jit(algo.on_gradient) if algo.on_gradient else None
+    on_round = jax.jit(algo.on_round) if algo.on_round else None
+
+    params = params0
+    t_now = 0.0
+    it = 0
+    n_grads = 0
+    running = None
+    tau_max = 0
+    times, iters, losses, gnorms = [], [], [], []
+
+    def rec(g):
+        gn = float(
+            jnp.sqrt(
+                sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g))
+            )
+        )
+        times.append(t_now)
+        iters.append(it)
+        losses.append(_record(eval_fn, params, running, g))
+        gnorms.append(gn)
+
+    if algo.scheduling == "rounds":
+        # --- synchronous / round-based disciplines (sync SGD, MIFA) --------
+        round_time = float(np.max(speeds.times))  # straggler-bound
+        participate_p = 1.0 if algo.name == "sync_sgd" else 0.8
+        while it < total_iters and (max_time is None or t_now < max_time):
+            key, *wkeys = jax.random.split(key, n + 1)
+            grads, loss_acc = [], 0.0
+            mask = (
+                np.ones(n, bool)
+                if algo.name == "sync_sgd"
+                else rng.random(n) < participate_p
+            )
+            if not mask.any():
+                mask[rng.integers(n)] = True
+            for i in range(n):
+                batch = sample_fn(i, rng)
+                loss, g = grad_fn(params, batch, wkeys[i])
+                grads.append(g)
+                loss_acc += float(loss) * mask[i]
+                n_grads += int(mask[i])
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+            state, params = on_round(
+                state, stacked, jnp.asarray(mask), params, lr
+            )
+            mean_loss = loss_acc / max(1, mask.sum())
+            running = mean_loss if running is None else ema * running + (1 - ema) * mean_loss
+            t_now += round_time
+            it += 1
+            tau_max = max(tau_max, 1)
+            if it % record_every == 0:
+                rec(jax.tree.map(jnp.zeros_like, params0))
+        return SimResult(
+            algo.name, np.array(times), np.array(iters), np.array(losses),
+            np.array(gnorms), params, tau_max, n_grads,
+        )
+
+    # --- asynchronous disciplines (greedy / routed) ------------------------
+    # Each worker holds the model version it will compute on.  version_iter[i]
+    # tracks the server iteration at which that model was produced (for tau).
+    worker_params = [params for _ in range(n)]
+    version_iter = [0] * n
+    heap: list[tuple[float, int]] = []  # (finish_time, worker)
+    queues = [1 for _ in range(n)]  # pending models per worker (routed mode)
+    shuffle_order: list[int] = []
+
+    for i in range(n):
+        heapq.heappush(heap, (speeds.times[i], i))
+
+    def next_routed_worker() -> int:
+        nonlocal shuffle_order
+        if algo.route == "uniform":
+            return int(rng.integers(n))
+        if not shuffle_order:
+            shuffle_order = list(rng.permutation(n))
+        return int(shuffle_order.pop())
+
+    while it < total_iters and (max_time is None or t_now < max_time):
+        t_now, i = heapq.heappop(heap)
+        key, k1 = jax.random.split(key)
+        batch = sample_fn(i, rng)
+        loss, g = grad_fn(worker_params[i], batch, k1)
+        n_grads += 1
+        tau_max = max(tau_max, it + 1 - version_iter[i])
+        state, params, applied = on_gradient(state, jnp.int32(i), g, params, lr)
+        it += 1 if bool(applied) else 0
+        lossf = float(loss)
+        running = lossf if running is None else ema * running + (1 - ema) * lossf
+
+        if algo.scheduling == "greedy":
+            worker_params[i] = params
+            version_iter[i] = it
+            heapq.heappush(heap, (t_now + speeds.times[i], i))
+        else:  # routed (Uniform / Shuffled ASGD)
+            queues[i] -= 1
+            j = next_routed_worker()
+            worker_params[j] = params  # latest model enqueued for worker j
+            version_iter[j] = it
+            queues[j] += 1
+            if queues[i] > 0:  # keep draining this worker's backlog
+                heapq.heappush(heap, (t_now + speeds.times[i], i))
+            if queues[j] == 1 and j != i:
+                heapq.heappush(heap, (t_now + speeds.times[j], j))
+            if not heap:  # all queues empty: route to a random idle worker
+                j = int(rng.integers(n))
+                queues[j] += 1
+                heapq.heappush(heap, (t_now + speeds.times[j], j))
+
+        if bool(applied) and it % record_every == 0:
+            rec(g)
+
+    return SimResult(
+        algo.name, np.array(times), np.array(iters), np.array(losses),
+        np.array(gnorms), params, tau_max, n_grads,
+    )

@@ -1,0 +1,9 @@
+from .partition import dirichlet_partition, label_distribution
+from .pipeline import ShardIterator, make_sample_fn, round_batch_fn
+from .synthetic import class_gaussian_images, make_token_sampler
+
+__all__ = [
+    "dirichlet_partition", "label_distribution",
+    "ShardIterator", "make_sample_fn", "round_batch_fn",
+    "class_gaussian_images", "make_token_sampler",
+]

@@ -1,0 +1,65 @@
+"""Host-side data pipeline: per-worker shard iterators over a partitioned
+dataset, with deterministic shuffling and minibatch assembly.
+
+The event-driven simulator asks for one minibatch per gradient job
+(``sample_fn(worker, rng)``); the SPMD production path asks for a *global*
+round batch laid out [n_workers, per_worker_batch, ...].
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["ShardIterator", "make_sample_fn", "round_batch_fn"]
+
+
+class ShardIterator:
+    """Infinite shuffled iterator over one worker's index shard."""
+
+    def __init__(self, indices: np.ndarray, batch: int, seed: int = 0):
+        self.indices = np.asarray(indices)
+        self.batch = batch
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(len(self.indices))
+        self._pos = 0
+
+    def next_indices(self) -> np.ndarray:
+        out = []
+        need = self.batch
+        while need > 0:
+            take = min(need, len(self._order) - self._pos)
+            out.append(self._order[self._pos : self._pos + take])
+            self._pos += take
+            need -= take
+            if self._pos >= len(self._order):
+                self._order = self.rng.permutation(len(self.indices))
+                self._pos = 0
+        return self.indices[np.concatenate(out)]
+
+
+def make_sample_fn(
+    data: np.ndarray, labels: np.ndarray, shards: list[np.ndarray],
+    batch: int, seed: int = 0,
+) -> Callable:
+    """sample_fn(worker, rng) -> {"x": [B,...], "y": [B]} for the simulator."""
+    iters = [ShardIterator(s, batch, seed + i) for i, s in enumerate(shards)]
+
+    def sample(worker: int, rng: np.random.Generator):
+        idx = iters[worker].next_indices()
+        return {"x": data[idx], "y": labels[idx]}
+
+    return sample
+
+
+def round_batch_fn(sample_fn: Callable, n_workers: int) -> Callable:
+    """Assemble a per-round global batch [n_workers, B, ...] for mode B."""
+
+    def global_batch(rng: np.random.Generator):
+        per = [sample_fn(i, rng) for i in range(n_workers)]
+        return {
+            k: np.stack([p[k] for p in per], axis=0) for k in per[0]
+        }
+
+    return global_batch

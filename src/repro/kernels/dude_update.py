@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused DuDe-ASGD server round on flat parameter tiles.
+
+The server hot loop (paper Alg. 1 lines 4-6 + the semi-async variant) is a
+pure streaming op over Theta(n * p) buffer state: per round it must
+  commit:  g_bar += sum_i cm_i * (inflight_i - G~_i) / n ;  G~_i <- inflight_i
+  latch:   inflight_i <- fresh_i  (where start_i)
+  apply:   w <- w - eta * g_bar
+Arithmetic intensity is O(1) flops/byte => HBM-bandwidth-bound, so the win is
+FUSION: one pass over the five streams instead of the ~9 separate elementwise
+HLO ops XLA emits, plus no intermediate materialization.
+
+Grid: 1-D over tiles of the flattened parameter vector.  Each program
+instance owns a [n_workers, TILE] slab of the stacked buffers and a [TILE]
+slice of g_bar/params in VMEM.  TILE defaults to 2048 lanes x 8 sublanes
+f32 = 64 KiB per stream — five streams resident fit easily in 128 MiB VMEM
+while keeping the DMA pipeline deep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 16384  # f32 elements per program instance per stream row
+
+
+def _dude_kernel(cm_ref, sm_ref, fresh_ref, gw_ref, infl_ref, gbar_ref,
+                 w_ref, gw_out, infl_out, gbar_out, w_out, *, n_workers: int,
+                 eta: float):
+    cm = cm_ref[...].astype(jnp.float32)  # [n]
+    sm = sm_ref[...]                       # [n] bool
+    fresh = fresh_ref[...].astype(jnp.float32)   # [n, T]
+    gw = gw_ref[...].astype(jnp.float32)         # [n, T]
+    infl = infl_ref[...].astype(jnp.float32)     # [n, T]
+    gbar = gbar_ref[...]                          # [T] f32
+
+    delta = cm[:, None] * (infl - gw)
+    gbar_new = gbar + jnp.sum(delta, axis=0) / n_workers
+    gw_new = jnp.where(cm[:, None] > 0, infl, gw)
+    infl_new = jnp.where(sm[:, None], fresh, infl)
+
+    gw_out[...] = gw_new.astype(gw_out.dtype)
+    infl_out[...] = infl_new.astype(infl_out.dtype)
+    gbar_out[...] = gbar_new
+    w_out[...] = w_ref[...] - jnp.float32(eta) * gbar_new
+
+
+def dude_update_pallas(
+    commit_mask: jnp.ndarray,   # [n] bool
+    start_mask: jnp.ndarray,    # [n] bool
+    fresh: jnp.ndarray,         # [n, P] fresh gradients (live model)
+    g_workers: jnp.ndarray,     # [n, P] buffer dtype
+    inflight: jnp.ndarray,      # [n, P] buffer dtype
+    g_bar: jnp.ndarray,         # [P] f32
+    w: jnp.ndarray,             # [P] f32 params
+    *,
+    eta: float,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+):
+    """Returns (g_workers', inflight', g_bar', w')."""
+    n, P = fresh.shape
+    assert g_workers.shape == (n, P) and inflight.shape == (n, P)
+    assert g_bar.shape == (P,) and w.shape == (P,)
+    tile = min(tile, P)
+    assert P % tile == 0, f"P={P} % tile={tile}"
+    grid = (P // tile,)
+
+    row = pl.BlockSpec((n, tile), lambda i: (0, i))
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    mask = pl.BlockSpec((n,), lambda i: (0,))
+
+    kernel = functools.partial(_dude_kernel, n_workers=n, eta=eta)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[mask, mask, row, row, row, vec, vec],
+        out_specs=[row, row, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, P), g_workers.dtype),
+            jax.ShapeDtypeStruct((n, P), inflight.dtype),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), w.dtype),
+        ],
+        interpret=interpret,
+    )(commit_mask.astype(jnp.float32), start_mask, fresh, g_workers,
+      inflight, g_bar, w)

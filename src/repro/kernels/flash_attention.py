@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention
+with GQA, online softmax, and VMEM-tiled block processing.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the last axis is
+sequential on TPU, so running (m, l, acc) live in VMEM scratch across kv
+blocks.  Block shapes default to 128x128 (MXU-aligned); KV blocks fully
+above the causal diagonal are skipped with ``pl.when`` (no FLOPs, halving
+work vs. the XLA masked path).  HBM traffic is O(S * hd) per head — the
+[S, S] score matrix never leaves VMEM, which is the memory-roofline win
+recorded in EXPERIMENTS §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  blk_q: int, blk_k: int, seq_k: int, causal: bool,
+                  window: Optional[int], scale: float, n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * blk_q
+    k_start = ik * blk_k
+
+    # causal / window block-level skip: fully-masked KV blocks do no work
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + blk_q - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # [blk_q, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [blk_k, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k.T  # [blk_q, blk_k]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + p @ v
+        m_sc[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Sk, K, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+):
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Sk) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = (Sq + pad_q) // blk_q
+    nk = (Sk + pad_k) // blk_k
+
+    kernel = functools.partial(
+        _flash_kernel, blk_q=blk_q, blk_k=blk_k, seq_k=Sk, causal=causal,
+        window=window, scale=1.0 / (hd ** 0.5), n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq + pad_q, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),      # running max m
+            pltpu.VMEM((blk_q,), jnp.float32),      # running denom l
+            pltpu.VMEM((blk_q, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash-decode — one query token against a long KV cache.
+
+Grid: (batch, kv_heads, num_seq_blocks); the seq axis is sequential, carrying
+(m, l, acc) for the G=H/K query heads of this kv head in VMEM scratch.
+Blocks past ``length`` are skipped entirely (no DMA-wasted FLOPs), and with a
+sliding window only ~window/blk_s blocks do work — the optimization the pure
+XLA path can't express (it reads and masks the whole cache).  Memory per
+step: O(length * hd) cache reads, the decode roofline's dominant term.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                   blk_s: int, window: Optional[int], scale: float,
+                   n_blocks: int):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    length = len_ref[0]
+    s_start = js * blk_s
+    live = s_start < length
+    if window is not None:
+        live = jnp.logical_and(live, s_start + blk_s > length - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale   # [G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # [blk_s, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k.T                                          # [G, blk_s]
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        if window is not None:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + p @ v
+        m_sc[...] = m_new
+
+    @pl.when(js == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jnp.ndarray,        # [B, 1, H, hd]
+    k_cache: jnp.ndarray,  # [B, S, K, hd]
+    v_cache: jnp.ndarray,
+    length,                # scalar int: #valid cache positions
+    *,
+    window: Optional[int] = None,
+    blk_s: int = 512,
+    interpret: bool = False,
+):
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    blk_s = min(blk_s, S)
+    assert S % blk_s == 0, f"S={S} % blk_s={blk_s}"
+    nb = S // blk_s
+    qg = q.reshape(B, KV, G, hd)
+    length_arr = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, blk_s=blk_s, window=window,
+        scale=1.0 / (hd ** 0.5), n_blocks=nb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk_s, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, blk_s, 1, hd), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length_arr, qg, k_cache, v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,55 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python for correctness validation against ``ref.py``;
+on TPU the same code lowers through Mosaic.  The ``interpret`` default
+auto-detects the backend.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dude_update import dude_update_pallas
+from .flash_attention import flash_attention_pallas
+from .flash_decode import flash_decode_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("eta", "tile", "interpret"))
+def dude_update(commit_mask, start_mask, fresh, g_workers, inflight, g_bar, w,
+                *, eta: float, tile: int = 16384,
+                interpret: Optional[bool] = None):
+    itp = _default_interpret() if interpret is None else interpret
+    return dude_update_pallas(
+        commit_mask, start_mask, fresh, g_workers, inflight, g_bar, w,
+        eta=eta, tile=tile, interpret=itp,
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, blk_q: int = 128,
+                    blk_k: int = 128, interpret: Optional[bool] = None):
+    itp = _default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        interpret=itp,
+    )
+
+
+@partial(jax.jit, static_argnames=("window", "blk_s", "interpret"))
+def flash_decode(q, k_cache, v_cache, length, *, window: Optional[int] = None,
+                 blk_s: int = 512, interpret: Optional[bool] = None):
+    itp = _default_interpret() if interpret is None else interpret
+    return flash_decode_pallas(
+        q, k_cache, v_cache, length, window=window, blk_s=blk_s, interpret=itp,
+    )

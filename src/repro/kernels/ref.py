@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dude_update_ref(g_bar, g_workers, inflight, fresh, start_mask, commit_mask,
+                    n_workers: int):
+    """Fused DuDe round on ONE flat parameter tensor.
+
+    g_bar     [P]     f32
+    g_workers [n, P]  buffer dtype
+    inflight  [n, P]  buffer dtype
+    fresh     [n, P]  gradient of the live model per worker
+    masks     [n]     bool
+    Returns (g_bar', g_workers', inflight').  Semantics == core.dude.dude_round.
+    """
+    cm = commit_mask[:, None].astype(jnp.float32)
+    infl32 = inflight.astype(jnp.float32)
+    gw32 = g_workers.astype(jnp.float32)
+    delta = cm * (infl32 - gw32)
+    g_bar_new = g_bar + jnp.sum(delta, axis=0) / n_workers
+    gw_new = jnp.where(commit_mask[:, None], infl32.astype(g_workers.dtype),
+                       g_workers)
+    infl_new = jnp.where(start_mask[:, None],
+                         fresh.astype(inflight.dtype), inflight)
+    return g_bar_new, gw_new, infl_new
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] (GQA).  Full materialized softmax."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, length):
+    """q [B,1,H,hd]; k/v_cache [B,S,K,hd]; attends to positions < length."""
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(S)[None, :] < length
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,187 @@
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) lowers,
+compiles, and fits — and extract the roofline terms (deliverables e + g).
+
+MUST set the device-count override before ANY other import (jax locks the
+device count on first init).  Do not set this globally: smoke tests and
+benches see 1 device.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config           # noqa: E402
+from repro.core.dude import DuDeConfig                   # noqa: E402
+from repro.launch.costs import model_flops_6nd, param_counts, roofline  # noqa: E402
+from repro.launch.hlo_analysis import analyze_collectives, memory_stats  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh, mesh_num_devices  # noqa: E402
+from repro.launch.steps import (                          # noqa: E402
+    INPUT_SHAPES,
+    TrainOptions,
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    serve_specs,
+    shape_supported,
+    train_batch_specs,
+)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            parse_hlo: bool = True, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    ok, why = shape_supported(cfg, shape_name)
+    rec: dict = {
+        "arch": cfg.name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": param_counts(cfg),
+    }
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_num_devices(mesh)
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    t0 = time.time()
+    try:
+        with mesh:
+            if kind == "train":
+                dude_cfg = DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+                (st_shapes, st_sh) = abstract_train_state(cfg, mesh, dude_cfg=dude_cfg)
+                (b_shapes, mask_sds), (b_sh, mask_sh) = train_batch_specs(
+                    cfg, mesh, shape_name
+                )
+                options = (
+                    TrainOptions(grad_dtype=jnp.bfloat16, constrain_grads=True)
+                    if optimized else TrainOptions()
+                )
+                step = make_train_step(cfg, mesh, dude_cfg=dude_cfg,
+                                       options=options)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(st_sh[0], st_sh[1], st_sh[2], b_sh, mask_sh, mask_sh),
+                    out_shardings=(st_sh[0], st_sh[1], st_sh[2], None),
+                    donate_argnums=(0, 1, 2),
+                )
+                lowered = jitted.lower(
+                    st_shapes[0], st_shapes[1], st_shapes[2],
+                    b_shapes, mask_sds, mask_sds,
+                )
+            elif kind == "prefill":
+                (args, shardings) = serve_specs(cfg, mesh, shape_name)
+                step = make_prefill_step(cfg, mesh)
+                jitted = jax.jit(step, in_shardings=shardings,
+                                 out_shardings=(None, shardings[2]),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(*args)
+            else:  # decode
+                (args, shardings) = serve_specs(cfg, mesh, shape_name)
+                use_window = (
+                    shape_name == "long_500k" and cfg.sliding_window is not None
+                )
+                step = make_decode_step(cfg, mesh, use_window=use_window)
+                jitted = jax.jit(step, in_shardings=shardings,
+                                 out_shardings=(None, shardings[2]),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(*args)
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        rec["status"] = "ok"
+        rec["t_lower_s"] = round(t_lower, 1)
+        rec["t_compile_s"] = round(t_compile, 1)
+        rec["memory"] = memory_stats(compiled)
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {
+            "flops": float(ca.get("flops", -1)),
+            "bytes": float(ca.get("bytes accessed", -1)),
+        }
+        if parse_hlo:
+            hlo = compiled.as_text()
+            rec["hlo_chars"] = len(hlo)
+            coll = analyze_collectives(hlo)
+            del hlo
+        else:
+            coll = {"total_bytes": 0.0, "per_op": {}, "counts": {}}
+        rec["collectives"] = coll
+        rl = roofline(cfg, shape_name, chips, coll["total_bytes"], HW)
+        rec["roofline"] = {
+            "t_compute_s": rl.t_compute, "t_memory_s": rl.t_memory,
+            "t_collective_s": rl.t_collective, "bottleneck": rl.bottleneck,
+            "analytic_flops": rl.flops, "analytic_hbm_bytes": rl.hbm,
+            "collective_bytes": rl.collective,
+            "model_flops_6nd": rl.model_flops, "useful_ratio": rl.useful_ratio,
+        }
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        jax.clear_caches()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip collective parsing (faster)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper train options (bf16 grads, "
+                         "reduce-scatter constraint) — §Perf variants")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                rec = run_one(arch, shape, mp, parse_hlo=not args.no_hlo,
+                              optimized=args.optimized)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f" compile={rec['t_compile_s']}s "
+                        f"bottleneck={rec['roofline']['bottleneck']}"
+                    )
+                elif status == "FAILED":
+                    n_fail += 1
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {tag}{extra}", flush=True)
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Post-optimization HLO analysis: collective-traffic accounting.
+
+``compiled.cost_analysis()`` does not report collective bytes, and it counts
+while-loop (lax.scan) bodies ONCE — so both collectives and scan-body traffic
+must be scaled by trip counts.  This module parses ``compiled.as_text()``:
+
+  1. split the module into computations,
+  2. find collective instructions (+ shapes -> bytes),
+  3. build the call graph (while bodies/conditions, fusions, calls),
+  4. estimate while trip counts from the loop-condition's integer constant,
+  5. DFS from ENTRY multiplying by enclosing trip counts.
+
+Byte convention per op (documented in EXPERIMENTS §Roofline): bytes = max of
+input/output tuple sizes — the payload that crosses links once under an
+optimal ring schedule; all-reduce counted 2x (reduce-scatter + all-gather
+phases).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes appearing in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation headers are unindented lines ending in '{' (instructions
+    are indented); robust to arbitrarily nested tuple parameter lists."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if line[0] not in " }" and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)", line.strip())
+            if m and m.group(1) != "HloModule":
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        stripped = line.strip()
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-_]+)", hlo, re.M)
+    if m:
+        return m.group(1)
+    raise ValueError("no ENTRY computation found")
+
+
+def analyze_collectives(hlo: str, default_trip: int = 1) -> dict:
+    """Returns {"per_op": {op: bytes}, "total_bytes": int, "counts": {...}}."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+
+    # direct collective bytes + call edges per computation
+    direct: dict[str, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    counts: dict[str, int] = defaultdict(int)
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    trip_cache: dict[str, float] = {}
+
+    def trip_count(cond_name: str) -> float:
+        if cond_name in trip_cache:
+            return trip_cache[cond_name]
+        best = default_trip
+        for line in comps.get(cond_name, ()):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                best = max(best, int(c))
+        trip_cache[cond_name] = float(best)
+        return float(best)
+
+    for name, lines in comps.items():
+        for line in lines:
+            mo = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}\.]+)\s+([\w\-]+)\(", line)
+            if not mo:
+                continue
+            out_shape, op = mo.groups()
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue  # counted at -start
+                out_b = _shape_bytes(out_shape)
+                # operand shapes appear in the args for typed HLO; use max
+                arg_b = _shape_bytes(line[mo.end():])
+                payload = max(out_b, arg_b)
+                if base == "all-reduce":
+                    payload *= 2  # reduce-scatter + all-gather phases
+                direct[name][base] += payload
+                counts[base] += 1
+            # call edges
+            if base == "while":
+                body = re.search(r"body=%?([\w\.\-_]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-_]+)", line)
+                if body:
+                    t = trip_count(cond.group(1)) if cond else default_trip
+                    edges[name].append((body.group(1), t))
+                if cond:
+                    edges[name].append((cond.group(1), 1.0))
+            else:
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    for callee in re.findall(attr + r"=\{?%?([\w\.\-_,% ]+)\}?", line):
+                        for c in callee.replace("%", "").split(","):
+                            c = c.strip()
+                            if c in comps:
+                                edges[name].append((c, 1.0))
+
+    per_op: dict[str, float] = defaultdict(float)
+    visited: set[str] = set()
+
+    def dfs(name: str, mult: float, depth: int = 0):
+        if depth > 50:
+            return
+        visited.add(name)
+        for op, b in direct.get(name, {}).items():
+            per_op[op] += b * mult
+        for callee, t in edges.get(name, ()):  # multiply through loops
+            dfs(callee, mult * t, depth + 1)
+
+    dfs(entry, 1.0)
+    # computations with collectives not reached from ENTRY (edge-parsing gap):
+    # count once rather than dropping silently.
+    for name, ops in direct.items():
+        if name not in visited:
+            for op, b in ops.items():
+                per_op[op] += b
+    total = sum(per_op.values())
+    return {
+        "per_op": dict(per_op),
+        "total_bytes": float(total),
+        "counts": dict(counts),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", 0),
+    }

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16x16), 2 pods = 512 chips.
+Functions (not module constants) so importing never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+    "hbm_bytes": 16e9,           # per chip
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CI-grade sharding tests (requires host-device override)."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_num_devices(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

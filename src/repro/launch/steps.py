@@ -1,0 +1,225 @@
+"""Jitted step builders for the production path (DESIGN.md mode B) and the
+serving path, plus ShapeDtypeStruct ``input_specs`` for the dry-run.
+
+train_step semantics (semi-async DuDe round):
+  1. every worker group computes the gradient of the live model on its own
+     heterogeneous shard — one vmapped backward, worker axis leading;
+  2. ``dude_round`` latches starting workers' gradients and commits finishing
+     workers' deltas (host-precomputed masks from the speed model);
+  3. the optimizer applies the dual-delayed aggregated direction g^t.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.dude import DuDeConfig, DuDeState, dude_init, dude_round
+from ..models import decode_step as model_decode_step
+from ..models import forward, init_decode_caches, lm_init, loss_fn, prefill
+from ..models.config import ModelConfig
+from ..models.stubs import token_shape
+from ..optim import sgd
+from ..sharding import (
+    batch_sharding,
+    cache_shardings,
+    dude_state_shardings,
+    make_shard_hook,
+    param_shardings,
+)
+
+Pytree = Any
+
+INPUT_SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic decode archs (DESIGN.md §4)."""
+    if shape_name == "long_500k" and not cfg.supports_long_decode():
+        return False, (
+            f"{cfg.name}: full attention without sliding window — long_500k "
+            "skipped (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+# ------------------------------------------------------------- step builders
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    """Beyond-paper §Perf knobs (defaults == paper-faithful baseline)."""
+    grad_dtype: Any = None        # cast per-worker grads (bf16 halves the
+                                  # gradient all-reduce payload)
+    constrain_grads: bool = False  # pin stacked grads to the DuDe-buffer
+                                   # sharding so GSPMD emits reduce-scatter
+                                   # instead of all-reduce + local slice
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
+                    dude_cfg: Optional[DuDeConfig] = None,
+                    options: TrainOptions = TrainOptions()) -> Callable:
+    opt = opt or sgd(0.01)
+    dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+    shard = make_shard_hook(mesh)
+
+    buf_sh = None
+    if options.constrain_grads and mesh is not None:
+        params_abs = abstract_params(cfg)
+        buf_sh = dude_state_shardings(params_abs, mesh,
+                                      dude_cfg.n_workers)["g_workers"]
+
+    def per_worker_grad(params, wbatch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, wbatch, cfg, shard=shard), has_aux=True
+        )(params)
+        if options.grad_dtype is not None:
+            grads = jax.tree.map(
+                lambda g: g.astype(options.grad_dtype), grads
+            )
+        return grads, metrics["loss"]
+
+    def train_step(params, opt_state, dude_state: DuDeState, batch,
+                   start_mask, commit_mask):
+        grads, losses = jax.vmap(per_worker_grad, in_axes=(None, 0))(params, batch)
+        if buf_sh is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, buf_sh)
+        dude_state, g = dude_round(dude_state, grads, start_mask, commit_mask,
+                                   dude_cfg)
+        params, opt_state = opt.apply(params, g, opt_state)
+        return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None) -> Callable:
+    shard = make_shard_hook(mesh)
+
+    def prefill_step(params, batch, caches):
+        return prefill(params, batch, caches, cfg, shard=shard)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, *, use_window: bool = False) -> Callable:
+    shard = make_shard_hook(mesh)
+
+    def serve_step(params, tokens, caches, index):
+        return model_decode_step(params, tokens, caches, index, cfg,
+                                 shard=shard, use_window=use_window)
+
+    return serve_step
+
+
+# ----------------------------------------------------- abstract state + specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda: lm_init(key, cfg))
+    # master params in f32 for <50B, bf16 at extreme scale (DESIGN.md §7)
+    big = cfg.name in ("qwen1.5-110b", "kimi-k2-1t-a32b")
+    dt = jnp.bfloat16 if big else jnp.float32
+    return jax.tree.map(lambda s: _sds(s.shape, dt), shapes)
+
+
+def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
+                         dude_cfg: Optional[DuDeConfig] = None):
+    """Returns (arg_shapes, arg_shardings) for params/opt/dude state."""
+    opt = opt or sgd(0.01)
+    dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+    params = abstract_params(cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    dude_state = jax.eval_shape(partial(dude_init, cfg=dude_cfg), params)
+
+    p_sh = param_shardings(params, mesh)
+    d_sh_dict = dude_state_shardings(params, mesh, dude_cfg.n_workers)
+    dude_sh = DuDeState(
+        g_bar=d_sh_dict["g_bar"], g_workers=d_sh_dict["g_workers"],
+        inflight=d_sh_dict["inflight"], acc_count=d_sh_dict["acc_count"],
+        step=d_sh_dict["step"],
+    )
+    repl = NamedSharding(mesh, P())
+    o_sh = jax.tree.map(lambda _: repl, opt_state)
+    # momentum/adam slots shard like params
+    if hasattr(opt_state, "slots") and opt_state.slots:
+        o_sh = type(opt_state)(step=repl, slots=param_shardings(opt_state.slots, mesh))
+    return (params, opt_state, dude_state), (p_sh, o_sh, dude_sh)
+
+
+def train_batch_specs(cfg: ModelConfig, mesh, shape_name: str,
+                      n_workers: Optional[int] = None):
+    """ShapeDtypeStructs + shardings for the worker-stacked round batch."""
+    spec = INPUT_SHAPES[shape_name]
+    n = n_workers or cfg.n_workers
+    S, GB = spec["seq_len"], spec["global_batch"]
+    assert GB % n == 0, f"batch {GB} % workers {n}"
+    b = GB // n
+    ts = token_shape(cfg, b, S)
+    tok_shape = (n,) + ts
+    lab_shape = (n, b, S) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ())
+    shapes = {
+        "tokens": _sds(tok_shape, jnp.int32),
+        "labels": _sds(lab_shape, jnp.int32),
+    }
+    shardings = {
+        "tokens": batch_sharding(mesh, worker_stacked=True, extra_dims=len(ts) - 1,
+                                 shape=tok_shape),
+        "labels": batch_sharding(mesh, worker_stacked=True,
+                                 extra_dims=len(lab_shape) - 2,
+                                 shape=lab_shape),
+    }
+    if cfg.frontend:
+        pshape = (n, b, cfg.num_prefix_tokens, cfg.frontend_dim)
+        shapes["prefix_emb"] = _sds(pshape, jnp.bfloat16)
+        shardings["prefix_emb"] = batch_sharding(mesh, worker_stacked=True,
+                                                 extra_dims=2, shape=pshape)
+    mask_sds = _sds((n,), jnp.bool_)
+    repl = NamedSharding(mesh, P())
+    return (shapes, mask_sds), (shardings, repl)
+
+
+def serve_specs(cfg: ModelConfig, mesh, shape_name: str):
+    """ShapeDtypeStructs + shardings for prefill/decode inputs."""
+    spec = INPUT_SHAPES[shape_name]
+    S, B = spec["seq_len"], spec["global_batch"]
+    kind = spec["kind"]
+    params = abstract_params(cfg)
+    p_sh = param_shardings(params, mesh)
+    caches = jax.eval_shape(
+        partial(init_decode_caches, cfg, B, S, dtype=jnp.bfloat16)
+    )
+    c_sh = cache_shardings(caches, mesh)
+    if kind == "prefill":
+        ts = token_shape(cfg, B, S)
+        batch = {"tokens": _sds(ts, jnp.int32)}
+        b_sh = {"tokens": batch_sharding(mesh, worker_stacked=False,
+                                         extra_dims=len(ts) - 1, shape=ts)}
+        if cfg.frontend:
+            batch["prefix_emb"] = _sds(
+                (B, cfg.num_prefix_tokens, cfg.frontend_dim), jnp.bfloat16
+            )
+            b_sh["prefix_emb"] = batch_sharding(
+                mesh, worker_stacked=False, extra_dims=2,
+                shape=(B, cfg.num_prefix_tokens, cfg.frontend_dim))
+        return (params, batch, caches), (p_sh, b_sh, c_sh)
+    # decode: one token
+    tshape = (B, 1) + ((cfg.num_codebooks,) if cfg.num_codebooks > 1 else ())
+    tokens = _sds(tshape, jnp.int32)
+    t_sh = batch_sharding(mesh, worker_stacked=False, extra_dims=len(tshape) - 1,
+                          shape=tshape)
+    index = _sds((), jnp.int32)
+    i_sh = NamedSharding(mesh, P())
+    return (params, tokens, caches, index), (p_sh, t_sh, c_sh, i_sh)

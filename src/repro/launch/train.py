@@ -1,0 +1,130 @@
+"""Production training driver (DESIGN.md mode B): round-based semi-async
+DuDe-ASGD on whatever mesh is available.
+
+On the real cluster this runs under the 16x16 / 2x16x16 production meshes
+(see dryrun.py for the lowering proof); on this CPU container it runs the
+same code path on a 1-device mesh at reduced scale.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --rounds 50 --seq-len 64 --per-worker-batch 2 --algo dude
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core import (
+    DuDeConfig, delay_stats, dude_init, make_round_schedule,
+    truncated_normal_speeds,
+)
+from repro.data import make_token_sampler
+from repro.launch.steps import make_train_step
+from repro.models import lm_init, param_count
+from repro.models.stubs import make_prefix_embeddings
+from repro.optim import adamw, momentum_sgd, sgd
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config variant (CPU-scale)")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--per-worker-batch", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--opt", default="sgd", choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--algo", default="dude", choices=["dude", "dude_accum"])
+    ap.add_argument("--speed-std", type=float, default=1.0,
+                    help="worker speed heterogeneity (paper std)")
+    ap.add_argument("--heterogeneity", type=float, default=1.0,
+                    help="data distribution skew across workers")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    n = cfg.n_workers
+    key = jax.random.PRNGKey(args.seed)
+
+    print(f"[train] arch={cfg.name} workers={n} devices={jax.device_count()}")
+    params = lm_init(key, cfg)
+    print(f"[train] params={param_count(params):,}")
+
+    opt = {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[args.opt](args.lr)
+    opt_state = opt.init(params)
+    dude_cfg = DuDeConfig(n, cfg.dude_buffer_dtype if not args.smoke else jnp.float32,
+                          accumulate=args.algo == "dude_accum")
+    dude_state = dude_init(params, dude_cfg)
+    if args.resume and args.ckpt_dir:
+        params = restore_checkpoint(args.ckpt_dir, None, params)
+        print("[train] resumed from checkpoint")
+
+    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+
+    speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
+    sch = make_round_schedule(speeds, args.rounds)
+    print(f"[train] schedule: {delay_stats(sch)}")
+
+    sampler = make_token_sampler(
+        n, cfg.vocab_size, args.seq_len, args.per_worker_batch,
+        heterogeneity=args.heterogeneity, seed=args.seed,
+    )
+    rng = np.random.default_rng(args.seed)
+    S_total = args.seq_len + cfg.num_prefix_tokens
+
+    def round_batch():
+        per = [sampler(i, rng) for i in range(n)]
+        toks = np.stack([p["tokens"] for p in per])
+        labs = np.stack([p["labels"] for p in per])
+        if cfg.num_codebooks > 1:
+            toks = np.repeat(toks[..., None], cfg.num_codebooks, -1)
+            labs = np.repeat(labs[..., None], cfg.num_codebooks, -1)
+        if cfg.num_prefix_tokens:
+            pad = -np.ones((n, args.per_worker_batch, cfg.num_prefix_tokens)
+                           + labs.shape[3:], labs.dtype)
+            labs = np.concatenate([pad, labs], axis=2)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        if cfg.frontend:
+            pe = make_prefix_embeddings(key, cfg, args.per_worker_batch)
+            batch["prefix_emb"] = jnp.broadcast_to(pe[None], (n,) + pe.shape)
+        return batch
+
+    t0 = time.time()
+    history = []
+    for r in range(sch.rounds):
+        params, opt_state, dude_state, metrics = step(
+            params, opt_state, dude_state, round_batch(),
+            jnp.asarray(sch.start[r]), jnp.asarray(sch.commit[r]),
+        )
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if r % args.log_every == 0:
+            print(f"[round {r:4d}] loss={loss:.4f} "
+                  f"({(time.time() - t0) / (r + 1):.2f}s/round)")
+        if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, r + 1, params)
+
+    print(json.dumps({
+        "arch": cfg.name, "rounds": sch.rounds,
+        "first_loss": history[0], "last_loss": history[-1],
+        "wall_s": round(time.time() - t0, 1),
+    }))
+
+
+if __name__ == "__main__":
+    main()

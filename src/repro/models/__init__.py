@@ -1,0 +1,18 @@
+"""Model substrate: composable pure-JAX definitions for all assigned
+architecture families (dense / MoE / SSM / hybrid / VLM / audio backbones)."""
+
+from .config import ModelConfig
+from .model import (
+    decode_step,
+    forward,
+    init_decode_caches,
+    lm_init,
+    loss_fn,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "lm_init", "forward", "loss_fn", "prefill", "decode_step",
+    "init_decode_caches", "param_count",
+]

@@ -1,0 +1,72 @@
+"""The paper's experiment model: a small CNN with two convolutional layers
+for 10-class image classification (paper §5: CIFAR-10, CNN with two conv
+layers).  Pure JAX; used by the Fig-2/3 reproduction benchmarks and examples.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def cnn_init(key, n_classes: int = 10, ch_in: int = 3) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv(k, h, w, cin, cout):
+        fan = h * w * cin
+        return {
+            "kernel": jax.random.normal(k, (h, w, cin, cout), jnp.float32)
+            * jnp.sqrt(2.0 / fan),
+            "bias": jnp.zeros((cout,), jnp.float32),
+        }
+
+    def fc(k, din, dout):
+        return {
+            "kernel": jax.random.normal(k, (din, dout), jnp.float32)
+            * jnp.sqrt(2.0 / din),
+            "bias": jnp.zeros((dout,), jnp.float32),
+        }
+
+    return {
+        "conv1": conv(k1, 5, 5, ch_in, 32),
+        "conv2": conv(k2, 5, 5, 32, 64),
+        "fc1": fc(k3, 8 * 8 * 64, 128),
+        "fc2": fc(k4, 128, n_classes),
+    }
+
+
+def _conv2d(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["kernel"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["bias"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def cnn_apply(params: Pytree, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 32, 32, C] -> logits [B, n_classes]."""
+    h = _maxpool(jax.nn.relu(_conv2d(params["conv1"], x)))
+    h = _maxpool(jax.nn.relu(_conv2d(params["conv2"], h)))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["kernel"] + params["fc1"]["bias"])
+    return h @ params["fc2"]["kernel"] + params["fc2"]["bias"]
+
+
+def cnn_loss(params: Pytree, batch: dict) -> jnp.ndarray:
+    logits = cnn_apply(params, batch["x"])
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, batch["y"][:, None], axis=-1))
+
+
+def cnn_accuracy(params: Pytree, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.argmax(cnn_apply(params, x), axis=-1) == y)

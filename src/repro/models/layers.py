@@ -1,0 +1,102 @@
+"""Shared neural-net layers (pure JAX, no flax).
+
+Parameters are plain nested dicts; every layer is a pair of functions
+``init_*(key, ...) -> params`` and ``apply`` (inline).  Computation dtype is
+configurable (bf16 by default at scale); parameters are stored in f32 unless
+the caller casts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ----------------------------------------------------------------- init utils
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"kernel": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int):
+    return {"embedding": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["embedding"], ids, axis=0).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norm
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ mlp
+
+def mlp_init(key, d: int, d_ff: int, *, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d, d_ff), "down": dense_init(k2, d_ff, d)}
+    if gated:
+        p["gate"] = dense_init(k3, d, d_ff)
+    return p
+
+
+def mlp(p, x: jnp.ndarray) -> jnp.ndarray:
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = jax.nn.silu(dense(p["gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return dense(p["down"], h)
+
+
+# ----------------------------------------------------------------------- rope
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

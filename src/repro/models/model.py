@@ -1,0 +1,207 @@
+"""Language-model wrapper: embeddings, layer stack, head, loss, and the three
+entry points the launcher lowers (train forward, prefill, decode step).
+
+Batch dict convention (all entry points):
+  tokens      [B, S_text]            int32  (musicgen: [B, S_text, n_codebooks])
+  labels      [B, S_total]           int32, -1 = masked (train only)
+  prefix_emb  [B, P, frontend_dim]   float  (vlm/audio only; stub output)
+
+For frontend archs the effective sequence is [prefix_emb ; tokens] with total
+length P + S_text; positions are absolute over the total sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init, embed, embedding_init, rmsnorm, rmsnorm_init
+from .transformer import stack_apply, stack_caches, stack_init
+
+Pytree = Any
+ShardHook = Callable[[jnp.ndarray, str], jnp.ndarray]
+_id_hook: ShardHook = lambda x, name: x
+
+
+def lm_init(key, cfg: ModelConfig) -> Pytree:
+    k_emb, k_stack, k_head, k_proj = jax.random.split(key, 4)
+    params: dict = {"stack": stack_init(k_stack, cfg), "ln_f": rmsnorm_init(cfg.d_model)}
+    if cfg.num_codebooks > 1:
+        keys = jax.random.split(k_emb, cfg.num_codebooks)
+        params["embed"] = [embedding_init(k, cfg.vocab_size, cfg.d_model) for k in keys]
+        hkeys = jax.random.split(k_head, cfg.num_codebooks)
+        params["head"] = [dense_init(k, cfg.d_model, cfg.vocab_size, scale=0.02)
+                          for k in hkeys]
+    else:
+        params["embed"] = embedding_init(k_emb, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, scale=0.02)
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(k_proj, cfg.frontend_dim, cfg.d_model)
+    return params
+
+
+def _embed_tokens(params, tokens, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.num_codebooks > 1:
+        parts = [embed(params["embed"][c], tokens[..., c], cfg.dtype)
+                 for c in range(cfg.num_codebooks)]
+        return sum(parts)
+    return embed(params["embed"], tokens, cfg.dtype)
+
+
+def _head(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    x32 = x
+    if cfg.num_codebooks > 1:
+        return jnp.stack(
+            [dense(params["head"][c], x32) for c in range(cfg.num_codebooks)], axis=-2
+        )  # [B, S, n_cb, V]
+    if cfg.tie_embeddings:
+        return x32 @ params["embed"]["embedding"].T.astype(x32.dtype)
+    return dense(params["head"], x32)
+
+
+def _inputs_to_h(params, batch, cfg: ModelConfig) -> jnp.ndarray:
+    h = _embed_tokens(params, batch["tokens"], cfg)
+    if cfg.frontend:
+        pe = dense(params["frontend_proj"], batch["prefix_emb"].astype(cfg.dtype))
+        h = jnp.concatenate([pe, h], axis=1)
+    return h
+
+
+def forward(
+    params: Pytree,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    shard: ShardHook = _id_hook,
+    use_window: bool = False,
+):
+    """Full-sequence forward.  Returns (logits_f32, aux_loss)."""
+    h = _inputs_to_h(params, batch, cfg)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = shard(h, "act_resid")
+    h, _, aux = stack_apply(params["stack"], h, positions, cfg,
+                            shard=shard, use_window=use_window)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = _head(params, h, cfg).astype(jnp.float32)
+    return shard(logits, "logits"), aux
+
+
+def _masked_ce(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Returns (sum of -log p over unmasked labels, count)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask), jnp.sum(mask)
+
+
+def loss_fn(
+    params: Pytree,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    shard: ShardHook = _id_hook,
+) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross-entropy with -1-masked labels (+ MoE aux).
+
+    With ``cfg.ce_chunk > 0`` (and a single codebook) the LM head + CE run in
+    sequence chunks inside a checkpointed scan: the [T, V] logits tensor is
+    never materialized (fwd OR bwd) — the §Perf memory-term optimization for
+    large-vocab training (see EXPERIMENTS §Perf T2).
+    """
+    labels = batch["labels"]
+    if cfg.ce_chunk and cfg.num_codebooks == 1:
+        h = _inputs_to_h(params, batch, cfg)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h = shard(h, "act_resid")
+        h, _, aux = stack_apply(params["stack"], h, positions, cfg, shard=shard)
+        h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+        C = cfg.ce_chunk
+        nc = -(-S // C)
+        pad = nc * C - S
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        hc = h.reshape(B, nc, C, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, nc, C).transpose(1, 0, 2)
+
+        def chunk_loss(carry, inp):
+            hs, ls = inp
+            logits = _head(params, hs, cfg).astype(jnp.float32)
+            logits = shard(logits, "logits")
+            s, c = _masked_ce(logits, ls)
+            tot, cnt = carry
+            return (tot + s, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(chunk_loss), (jnp.zeros(()), jnp.zeros(())), (hc, lc)
+        )
+        loss = tot / jnp.maximum(cnt, 1.0)
+    else:
+        logits, aux = forward(params, batch, cfg, shard=shard)
+        s, c = _masked_ce(logits, labels)
+        loss = s / jnp.maximum(c, 1.0)
+    total = loss + aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------- decode
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> Pytree:
+    return stack_caches(cfg, batch, max_len, dtype)
+
+
+def prefill(
+    params: Pytree,
+    batch: dict,
+    caches: Pytree,
+    cfg: ModelConfig,
+    *,
+    shard: ShardHook = _id_hook,
+    use_window: bool = False,
+):
+    """Process a prompt, filling caches.  Returns (last_logits, caches)."""
+    h = _inputs_to_h(params, batch, cfg)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, caches, _ = stack_apply(
+        params["stack"], h, positions, cfg,
+        caches=caches, cache_index=0, shard=shard, use_window=use_window,
+    )
+    h = rmsnorm(params["ln_f"], h[:, -1:], cfg.norm_eps)
+    logits = _head(params, h, cfg).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(
+    params: Pytree,
+    tokens: jnp.ndarray,  # [B, 1] (musicgen: [B, 1, n_cb])
+    caches: Pytree,
+    index,                # scalar: position of this token
+    cfg: ModelConfig,
+    *,
+    shard: ShardHook = _id_hook,
+    use_window: bool = False,
+):
+    """One serving step: one new token against the cache.  Returns
+    (logits [B,1,(n_cb,)V], new_caches)."""
+    h = _embed_tokens(params, tokens, cfg)
+    B = h.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(index)[None, None], (B, 1))
+    h, caches, _ = stack_apply(
+        params["stack"], h, positions, cfg,
+        caches=caches, cache_index=index, shard=shard, use_window=use_window,
+    )
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = _head(params, h, cfg).astype(jnp.float32)
+    return logits, caches
+
+
+def param_count(params: Pytree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+scatter/gather dispatch, load-balance auxiliary loss.
+
+Dispatch is scatter-based (positions-in-expert via cumsum over slot one-hots)
+rather than the O(T*E*C) one-hot-einsum formulation — at 384 experts
+(kimi-k2) the dense dispatch tensor would not fit HBM.  Experts are stacked on
+a leading dim that shards over the ``model`` mesh axis (expert parallelism);
+the scatter/gather across token (data) and expert (model) shardings is what
+XLA lowers to all-to-all — the MoE collective term in §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    num_experts: int
+    experts_per_tok: int
+    d_ff: int              # per-expert hidden dim
+    capacity_factor: float = 1.25
+    num_shared_experts: int = 0
+    aux_coef: float = 0.01
+
+
+def moe_init(key, cfg: MoEConfig) -> Pytree:
+    kr, ku, kg, kd, ks = jax.random.split(key, 5)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    scale = 1.0 / jnp.sqrt(d)
+
+    def stack(k, shape, sc):
+        return jax.random.normal(k, shape, jnp.float32) * sc
+
+    p = {
+        "router": dense_init(kr, d, E, scale=0.02),
+        "wup": stack(ku, (E, d, f), scale),
+        "wgate": stack(kg, (E, d, f), scale),
+        "wdown": stack(kd, (E, f, d), 1.0 / jnp.sqrt(f)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = {
+            "up": dense_init(jax.random.fold_in(ks, 0), d, f * cfg.num_shared_experts),
+            "gate": dense_init(jax.random.fold_in(ks, 1), d, f * cfg.num_shared_experts),
+            "down": dense_init(jax.random.fold_in(ks, 2), f * cfg.num_shared_experts, d),
+        }
+    return p
+
+
+def moe_apply(p: Pytree, x: jnp.ndarray, cfg: MoEConfig):
+    """x: [B, S, d].  Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    xf = x.reshape(T, d)
+
+    logits = dense(p["router"], xf.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topi = jax.lax.top_k(probs, k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balance auxiliary loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)  # router prob mass per expert
+    ce = jnp.zeros((E,), jnp.float32)
+
+    capacity = max(1, int(cfg.capacity_factor * T * k / E))
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    pos_list, keep_list, oh_sum = [], [], jnp.zeros((T, E), jnp.float32)
+    for j in range(k):
+        oh = jax.nn.one_hot(topi[:, j], E, dtype=jnp.float32)  # [T, E]
+        prior = jnp.sum(oh_sum, axis=0, keepdims=True)  # tokens already placed
+        pos_in_e = jnp.cumsum(oh, axis=0) - 1.0 + prior  # [T, E]
+        pos = jnp.sum(oh * pos_in_e, axis=-1)  # [T]
+        keep = pos < capacity
+        pos_list.append(pos.astype(jnp.int32))
+        keep_list.append(keep)
+        oh_sum = oh_sum + oh
+        ce = ce + jnp.mean(oh, axis=0)
+    aux = cfg.aux_coef * E * jnp.sum((ce / k) * me)
+
+    # Scatter tokens into per-expert buffers [E, C, d].
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    for j in range(k):
+        contrib = jnp.where(keep_list[j][:, None], xf, 0)
+        buf = buf.at[topi[:, j], pos_list[j]].add(contrib, mode="drop")
+
+    # Expert FFN (SwiGLU), batched over experts.
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wup"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wgate"].astype(buf.dtype))
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wdown"].astype(h.dtype))
+
+    # Gather back and combine with gates.
+    y = jnp.zeros((T, d), jnp.float32)
+    for j in range(k):
+        picked = out_buf[topi[:, j], pos_list[j]]  # [T, d]
+        w = jnp.where(keep_list[j], gate_vals[:, j], 0.0)
+        y = y + w[:, None] * picked.astype(jnp.float32)
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(dense(sh["gate"], xf)) * dense(sh["up"], xf)
+        y = y + dense(sh["down"], hs).astype(jnp.float32)
+
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,476 @@
+"""State-space / recurrent sequence mixers: Mamba2 (SSD) and xLSTM.
+
+* Mamba2 uses the chunkwise-parallel SSD form (matmul-rich intra-chunk +
+  ``lax.scan`` carrying the inter-chunk state) — TPU-friendly: the quadratic
+  intra-chunk part maps to the MXU, the scan carries only [B,H,P,N] state.
+* xLSTM's mLSTM (matrix memory) and sLSTM (scalar memory, recurrent gates) use
+  exact per-step ``lax.scan`` recurrences with log-space gate stabilization.
+
+Each mixer exposes ``*_init``, ``*_apply`` (full sequence, returns final state)
+and ``*_step`` (single-token decode against a state cache), so decode shapes
+(`decode_32k`, `long_500k`) run with O(state) memory — the sub-quadratic path
+required for long-context decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+Pytree = Any
+
+
+# =============================================================== Mamba2 (SSD)
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64          # N
+    head_dim: int = 64         # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_init(key, cfg: Mamba2Config) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.num_heads
+    in_dim = 2 * di + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, in_dim),
+        "conv": jax.random.normal(k2, (cfg.conv_width, cfg.conv_dim), jnp.float32)
+        * (1.0 / jnp.sqrt(cfg.conv_width)),
+        "conv_bias": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(k3, di, cfg.d_model),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg: Mamba2Config):
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.num_heads
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di : 2 * di]
+    B_ = zxbcdt[..., 2 * di : 2 * di + N]
+    C_ = zxbcdt[..., 2 * di + N : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xin, B_, C_, dt
+
+
+def _causal_conv(x, kernel, bias):
+    """Depthwise causal conv. x: [B,S,C]; kernel: [W,C]."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i].astype(x.dtype) for i in range(W)
+    )
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def mamba2_apply(p, x, cfg: Mamba2Config, *, init_state: Optional[Pytree] = None):
+    """x: [B,S,d]. Returns (y [B,S,d], final_state {conv, ssm})."""
+    B, S, _ = x.shape
+    H, P, N, Q = cfg.num_heads, cfg.head_dim, cfg.d_state, cfg.chunk
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, B_, C_, dt_raw = _split_in_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xin, B_, C_], axis=-1)
+    if init_state is not None:
+        conv_in_full = jnp.concatenate([init_state["conv"].astype(conv_in.dtype), conv_in], axis=1)
+    else:
+        conv_in_full = conv_in
+    conv_out = _causal_conv(conv_in_full, p["conv"], p["conv_bias"])
+    conv_out = conv_out[:, -S:]
+    xin = conv_out[..., : cfg.d_inner]
+    B_ = conv_out[..., cfg.d_inner : cfg.d_inner + N]
+    C_ = conv_out[..., cfg.d_inner + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H], negative
+    dA = dt * A  # [B,S,H]
+
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+    B32, C32 = B_.astype(jnp.float32), C_.astype(jnp.float32)
+
+    # pad to multiple of chunk
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B32 = jnp.pad(B32, ((0, 0), (0, pad), (0, 0)))
+        C32 = jnp.pad(C32, ((0, 0), (0, pad), (0, 0)))
+
+    def chunkify(a):
+        return a.reshape((B, nq, Q) + a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    xc, dAc, dtc = chunkify(xh), chunkify(dA), chunkify(dt)
+    Bc, Cc = chunkify(B32), chunkify(C32)
+
+    def chunk_step(h, inp):
+        xq, dAq, dtq, Bq, Cq = inp  # [B,Q,...]
+        cum = jnp.cumsum(dAq, axis=1)  # [B,Q,H]
+        # intra-chunk quadratic part
+        li = cum[:, :, None, :]  # i
+        lj = cum[:, None, :, :]  # j
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], li - lj, -jnp.inf))
+        cb = jnp.einsum("bin,bjn->bij", Cq, Bq)  # [B,Q,Q]
+        scores = cb[..., None] * decay * dtq[:, None, :, :]  # [B,i,j,H]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", scores, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cq, h, jnp.exp(cum))
+        # new state
+        wj = jnp.exp(cum[:, -1:, :] - cum) * dtq  # [B,Q,H]
+        dstate = jnp.einsum("bjh,bjhp,bjn->bhpn", wj, xq, Bq)
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h + dstate
+        return h_new, y_diag + y_inter
+
+    h0 = (
+        init_state["ssm"].astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+    h_final, yc = jax.lax.scan(jax.checkpoint(chunk_step), h0, (xc, dAc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, nq * Q, H, P)[:, :S]
+    y = y + xh[:, :S] * p["D"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)
+    conv_tail_src = conv_in_full
+    conv_state = conv_tail_src[:, -(cfg.conv_width - 1):, :].astype(jnp.float32)
+    state = {"conv": conv_state, "ssm": h_final}
+    return out, state
+
+
+def mamba2_init_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32) -> Pytree:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state), dtype),
+    }
+
+
+def mamba2_step(p, x, state, cfg: Mamba2Config):
+    """Single-token decode. x: [B,1,d]. Returns (y [B,1,d], new_state)."""
+    y, new_state = mamba2_apply(p, x, cfg, init_state=state)
+    return y, new_state
+
+
+# ================================================================ xLSTM mLSTM
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    num_heads: int
+    expand: int = 2
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.num_heads
+
+
+def mlstm_init(key, cfg: MLSTMConfig) -> Pytree:
+    ks = jax.random.split(key, 8)
+    di, H, hd = cfg.d_inner, cfg.num_heads, cfg.head_dim
+
+    def blockdiag(k):  # xLSTM's block-diagonal (per-head) q/k/v projections
+        return jax.random.normal(k, (H, hd, hd), jnp.float32) / jnp.sqrt(hd)
+
+    return {
+        "up": dense_init(ks[0], cfg.d_model, 2 * di),
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32)
+        * (1.0 / jnp.sqrt(cfg.conv_width)),
+        "conv_bias": jnp.zeros((di,), jnp.float32),
+        "wq": blockdiag(ks[2]),
+        "wk": blockdiag(ks[3]),
+        "wv": blockdiag(ks[4]),
+        "wi": dense_init(ks[5], di, cfg.num_heads),
+        "wf": dense_init(ks[6], di, cfg.num_heads),
+        "norm": rmsnorm_init(di),
+        "down": dense_init(ks[7], di, cfg.d_model),
+    }
+
+
+def _blockdiag_apply(w, x, H, hd):
+    """x [B,S,di] -> per-head projection [B,S,H,hd]."""
+    xh = x.reshape(x.shape[0], x.shape[1], H, hd)
+    return jnp.einsum("bshd,hde->bshe", xh, w.astype(x.dtype))
+
+
+def mlstm_init_state(batch: int, cfg: MLSTMConfig, dtype=jnp.float32) -> Pytree:
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "C": jnp.zeros((batch, H, hd, hd), dtype),
+        "n": jnp.zeros((batch, H, hd), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def _mlstm_cell(carry, qkvif):
+    """One recurrence step. Shapes per t: q,k,v [B,H,hd]; i,f [B,H]."""
+    C, n, m = carry
+    q, k, v, ig, fg = qkvif
+    logf = jax.nn.log_sigmoid(fg)  # [B,H]
+    m_new = jnp.maximum(logf + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(logf + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k
+    C_new = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, carry0, chunk: int):
+    """Chunkwise-parallel mLSTM, exactly equal to the per-step recurrence.
+
+    Per chunk with b_i = cumsum(logsigmoid(f)) and a_j = logi_j - b_j:
+      m_i   = max(b_i + m_in, max_{j<=i}(b_i - b_j + logi_j))   (== per-step m)
+      num_i = sum_{j<=i} e^{b_i-b_j+logi_j-m_i} (k_j.q_i) v_j
+              + e^{b_i+m_in-m_i} C_in q_i
+      den_i = same with k_j -> scalar and n_in
+      h_i   = num_i / max(|den_i|, 1)
+    Carries (C, n, m) are per *chunk*, which is what makes 4k-token training
+    memory-feasible (the per-step form would save [B,H,hd,hd] per token for
+    the backward pass).
+    """
+    B, S, H, hd = q.shape
+    Q = min(chunk, S)
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        # pad steps must be no-ops on the carried state: i = -inf (inject
+        # nothing), logsigmoid(f=30) ~= 0 (no decay, stabilizer unchanged).
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+
+    def chunkify(a):
+        return a.reshape((B, nq, Q) + a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1)
+        )
+
+    qc, kc, vc = chunkify(q), chunkify(k), chunkify(v)
+    igc, fgc = chunkify(ig), chunkify(fg)
+
+    def chunk_step(carry, inp):
+        C_in, n_in, m_in = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qq, kk, vv, ii, ff = inp  # [B,Q,...]
+        logf = jax.nn.log_sigmoid(ff)  # [B,Q,H]
+        b = jnp.cumsum(logf, axis=1)
+        # pairwise decay: D_ij = b_i - b_j + logi_j for j <= i
+        Dij = b[:, :, None, :] - b[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Dij = jnp.where(tri[None, :, :, None], Dij, -jnp.inf)
+        m_intra = jnp.max(Dij, axis=2)  # [B,Q,H]
+        m_i = jnp.maximum(b + m_in[:, None, :], m_intra)
+        w_intra = jnp.exp(Dij - m_i[:, :, None, :])  # [B,i,j,H]
+        w_inter = jnp.exp(b + m_in[:, None, :] - m_i)  # [B,Q,H]
+        qk = jnp.einsum("bihd,bjhd->bijh", qq, kk)
+        num = jnp.einsum("bijh,bjhd->bihd", w_intra * qk, vv)
+        num = num + jnp.einsum("bqh,bhij,bqhj->bqhi", w_inter, C_in, qq)
+        den = jnp.einsum("bijh->bih", w_intra * qk)
+        den = den + jnp.einsum("bqh,bhj,bqhj->bqh", w_inter, n_in, qq)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # end-of-chunk state
+        bQ = b[:, -1, :]  # [B,H]
+        m_out = jnp.maximum(
+            bQ + m_in, jnp.max(bQ[:, None, :] - b + ii, axis=1)
+        )
+        w_state = jnp.exp(bQ[:, None, :] - b + ii - m_out[:, None, :])  # [B,Q,H]
+        C_out = (
+            jnp.exp(bQ + m_in - m_out)[:, :, None, None] * C_in
+            + jnp.einsum("bjh,bjhi,bjhd->bhid", w_state, vv, kk)
+        )
+        n_out = (
+            jnp.exp(bQ + m_in - m_out)[:, :, None] * n_in
+            + jnp.einsum("bjh,bjhd->bhd", w_state, kk)
+        )
+        return (C_out, n_out, m_out), h
+
+    (C, n, m), hs = jax.lax.scan(
+        jax.checkpoint(chunk_step), carry0, (qc, kc, vc, igc, fgc)
+    )
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nq * Q, H, hd)[:, :S]
+    return h, (C, n, m)
+
+
+def mlstm_apply(p, x, cfg: MLSTMConfig, *, init_state: Optional[Pytree] = None,
+                chunk: int = 256):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    up = dense(p["up"], x)
+    xi, z = jnp.split(up, 2, axis=-1)
+    if init_state is not None:
+        xi_full = jnp.concatenate([init_state["conv"].astype(xi.dtype), xi], axis=1)
+    else:
+        xi_full = xi
+    xc = _causal_conv(xi_full, p["conv"], p["conv_bias"])[:, -S:]
+    q = _blockdiag_apply(p["wq"], xc, H, hd).astype(jnp.float32)
+    k = _blockdiag_apply(p["wk"], xc, H, hd).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(hd)
+    )
+    v = _blockdiag_apply(p["wv"], xi, H, hd).astype(jnp.float32)
+    ig = dense(p["wi"], xc).astype(jnp.float32)  # [B,S,H]
+    fg = dense(p["wf"], xc).astype(jnp.float32)
+
+    if init_state is not None:
+        carry0 = (
+            init_state["C"].astype(jnp.float32),
+            init_state["n"].astype(jnp.float32),
+            init_state["m"].astype(jnp.float32),
+        )
+    else:
+        carry0 = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32),
+        )
+    if S == 1:
+        seq = (
+            q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+            v.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+            fg.transpose(1, 0, 2),
+        )
+        (C, n, m), hs = jax.lax.scan(_mlstm_cell, carry0, seq)
+        h = hs.transpose(1, 0, 2, 3)
+    else:
+        h, (C, n, m) = _mlstm_chunkwise(q, k, v, ig, fg, carry0, chunk)
+    h = h.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    out = dense(p["down"], h)
+    state = {
+        "conv": xi_full[:, -(cfg.conv_width - 1):, :].astype(jnp.float32),
+        "C": C, "n": n, "m": m,
+    }
+    return out, state
+
+
+def mlstm_step(p, x, state, cfg: MLSTMConfig):
+    return mlstm_apply(p, x, cfg, init_state=state)
+
+
+# ================================================================ xLSTM sLSTM
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    num_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def slstm_init(key, cfg: SLSTMConfig) -> Pytree:
+    ks = jax.random.split(key, 10)
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ff = int(8 * d / 3 / 64) * 64 or 64
+
+    def rec(k):  # block-diagonal (head-wise) recurrent weights
+        return jax.random.normal(k, (H, hd, hd), jnp.float32) * (1.0 / jnp.sqrt(hd))
+
+    return {
+        "wi": dense_init(ks[0], d, d), "ri": rec(ks[1]),
+        "wf": dense_init(ks[2], d, d), "rf": rec(ks[3]),
+        "wz": dense_init(ks[4], d, d), "rz": rec(ks[5]),
+        "wo": dense_init(ks[6], d, d), "ro": rec(ks[7]),
+        "norm": rmsnorm_init(d),
+        "ff_up": dense_init(ks[8], d, 2 * ff),
+        "ff_down": dense_init(ks[9], ff, d),
+    }
+
+
+def slstm_init_state(batch: int, cfg: SLSTMConfig, dtype=jnp.float32) -> Pytree:
+    d, H = cfg.d_model, cfg.num_heads
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def _slstm_cell(p, cfg: SLSTMConfig, carry, gates_t):
+    c, n, h, m = carry  # [B,d],[B,d],[B,d],[B,H]
+    gi, gf, gz, go = gates_t  # each [B,d] (input contributions)
+    B = c.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim
+    hh = h.reshape(B, H, hd)
+
+    def recur(r, x):
+        return jnp.einsum("bhi,hij->bhj", x, r).reshape(B, H * hd)
+
+    i_raw = gi + recur(p["ri"], hh)
+    f_raw = gf + recur(p["rf"], hh)
+    z_raw = gz + recur(p["rz"], hh)
+    o_raw = go + recur(p["ro"], hh)
+    # per-head stabilizer (max over head units of log gates)
+    logf = jax.nn.log_sigmoid(f_raw).reshape(B, H, hd)
+    logi = i_raw.reshape(B, H, hd)
+    m_new = jnp.maximum(
+        jnp.max(logf, axis=-1) + m, jnp.max(logi, axis=-1)
+    )  # [B,H]
+    i_p = jnp.exp(logi - m_new[..., None]).reshape(B, H * hd)
+    f_p = jnp.exp(logf + (m - m_new)[..., None]).reshape(B, H * hd)
+    c_new = f_p * c + i_p * jnp.tanh(z_raw)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(p, x, cfg: SLSTMConfig, *, init_state: Optional[Pytree] = None):
+    B, S, d = x.shape
+    gi = dense(p["wi"], x).astype(jnp.float32)
+    gf = dense(p["wf"], x).astype(jnp.float32)
+    gz = dense(p["wz"], x).astype(jnp.float32)
+    go = dense(p["wo"], x).astype(jnp.float32)
+    if init_state is not None:
+        carry0 = tuple(
+            init_state[k].astype(jnp.float32) for k in ("c", "n", "h", "m")
+        )
+    else:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        carry0 = (z0, z0, z0, jnp.full((B, cfg.num_heads), -1e30, jnp.float32))
+    seq = tuple(a.transpose(1, 0, 2) for a in (gi, gf, gz, go))
+    (c, n, h, m), hs = jax.lax.scan(
+        lambda ca, g: _slstm_cell(p, cfg, ca, g), carry0, seq
+    )
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(p["norm"], y)
+    u, g = jnp.split(dense(p["ff_up"], y), 2, axis=-1)
+    y = dense(p["ff_down"], jax.nn.silu(g) * u)
+    state = {"c": c, "n": n, "h": h, "m": m}
+    return y, state
+
+
+def slstm_step(p, x, state, cfg: SLSTMConfig):
+    return slstm_apply(p, x, cfg, init_state=state)

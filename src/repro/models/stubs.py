@@ -1,0 +1,43 @@
+"""Modality-frontend stubs (the one sanctioned carve-out).
+
+For [vlm] and [audio] architectures the assignment specifies the transformer
+backbone only; the vision encoder (ViT/SigLIP + anyres tiling) and the audio
+codec (EnCodec) are stubbed: ``input_specs()`` provides precomputed patch /
+conditioning embeddings of the right shape, and the model owns only the
+projector into d_model.  The stub generators below produce deterministic
+pseudo-embeddings for smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def prefix_embedding_shape(cfg: ModelConfig, batch: int) -> tuple:
+    return (batch, cfg.num_prefix_tokens, cfg.frontend_dim)
+
+
+def make_prefix_embeddings(key, cfg: ModelConfig, batch: int,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    """Deterministic stand-in for frontend outputs (smoke tests/examples).
+
+    vision: SigLIP-style patch embeddings for anyres tiles (llava-next).
+    audio:  conditioning-frame embeddings (musicgen text/melody prefix).
+    """
+    if not cfg.frontend:
+        raise ValueError(f"{cfg.name} has no frontend")
+    shape = prefix_embedding_shape(cfg, batch)
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def token_shape(cfg: ModelConfig, batch: int, seq_len: int) -> tuple:
+    """Shape of the token ids consumed by the backbone for a *total*
+    sequence length ``seq_len`` (prefix tokens are embeddings, not ids)."""
+    s_text = seq_len - cfg.num_prefix_tokens
+    assert s_text > 0, f"{cfg.name}: seq {seq_len} <= prefix {cfg.num_prefix_tokens}"
+    if cfg.num_codebooks > 1:
+        return (batch, s_text, cfg.num_codebooks)
+    return (batch, s_text)

@@ -1,0 +1,3 @@
+from .transforms import OptState, adamw, momentum_sgd, sgd
+
+__all__ = ["OptState", "sgd", "momentum_sgd", "adamw"]

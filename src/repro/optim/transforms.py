@@ -1,0 +1,98 @@
+"""Minimal pure-JAX optimizer transforms (no optax offline).
+
+API: ``opt = sgd(lr)``; ``state = opt.init(params)``;
+``params, state = opt.apply(params, direction, state)``.
+
+The *direction* is whatever the server algorithm produces — for DuDe-ASGD it
+is the dual-delayed aggregated gradient g^t, so optimizers compose with the
+paper's protocol unchanged (the paper uses plain SGD; momentum/AdamW are
+framework extensions applied on top of g^t).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    slots: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], OptState]
+    apply: Callable[[Pytree, Pytree, OptState], tuple[Pytree, OptState]]
+    name: str = "opt"
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), ())
+
+    def apply(params, g, state):
+        new = jax.tree.map(lambda p, d: p - lr * d.astype(p.dtype), params, g)
+        return new, OptState(state.step + 1, ())
+
+    return Optimizer(init, apply, "sgd")
+
+
+def momentum_sgd(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def apply(params, g, state):
+        m = jax.tree.map(
+            lambda mi, gi: beta * mi + gi.astype(jnp.float32), state.slots, g
+        )
+        d = (
+            jax.tree.map(lambda mi, gi: beta * mi + gi.astype(jnp.float32), m, g)
+            if nesterov else m
+        )
+        new = jax.tree.map(lambda p, di: p - lr * di.astype(p.dtype), params, d)
+        return new, OptState(state.step + 1, m)
+
+    return Optimizer(init, apply, "momentum")
+
+
+def adamw(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)},
+        )
+
+    def apply(params, g, state):
+        t = state.step + 1
+        m = jax.tree.map(
+            lambda mi, gi: b1 * mi + (1 - b1) * gi.astype(jnp.float32),
+            state.slots["m"], g,
+        )
+        v = jax.tree.map(
+            lambda vi, gi: b2 * vi + (1 - b2) * jnp.square(gi.astype(jnp.float32)),
+            state.slots["v"], g,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, mi, vi):
+            mh = mi / bc1
+            vh = vi / bc2
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return p - (lr * step).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, OptState(t, {"m": m, "v": v})
+
+    return Optimizer(init, apply, "adamw")

@@ -1,0 +1,14 @@
+from .specs import (
+    batch_sharding,
+    cache_shardings,
+    dp_axes,
+    dude_state_shardings,
+    make_shard_hook,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "param_spec", "param_shardings", "dude_state_shardings", "batch_sharding",
+    "cache_shardings", "make_shard_hook", "dp_axes",
+]

@@ -1,0 +1,242 @@
+"""Sharding rules: parameter / DuDe-state / batch / cache PartitionSpecs.
+
+Layout (DESIGN.md §5):
+  * Params: Megatron-TP over ``model`` on heads/ffn/experts/vocab dims ×
+    FSDP over ``data`` on the complementary dim; replicated over ``pod``.
+  * DuDe buffers (g~, G~_i, in-flight): leading worker dim — unsharded on a
+    single pod, ``pod``-sharded multi-pod (pods are worker-group boundaries);
+    parameter dims shard like the params (full-mesh elementwise state).
+  * Round batch [n_workers, B/n, S]: worker dim ``pod``-sharded (multi-pod)
+    or replicated; per-worker batch over ``data``.
+  * KV caches: batch over ``data`` (+``pod``), sequence over ``model``
+    (flash-decode / long-context layout; head-count agnostic).
+
+Every rule checks divisibility against the mesh and silently drops an axis
+that does not divide (replication is always correct, just more memory).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# param names whose rank-2 kernel is "down-like": (model, data) instead of
+# (data, model) — keeps each matmul's contracting dim sharded consistently.
+_DOWN_LIKE = ("wo", "down", "out_proj", "ff_down")
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, spec_entries, shape):
+    """Drop axes that don't divide their dim."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        if ax is None:
+            out.append(None)
+        elif dim % _axsize(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(pathstr: str, shape, mesh: Mesh, *, stacked: bool = False,
+               fsdp="data") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked`` — leaf lives under stack/groups and has a leading n_groups dim.
+    ``fsdp`` — axis (or axes tuple) carrying the FSDP shard of each kernel;
+    multi-pod perf option M1 uses ('pod', 'data').
+    """
+    if stacked:
+        inner = param_spec(pathstr, shape[1:], mesh, stacked=False, fsdp=fsdp)
+        return P(None, *inner)
+
+    name = pathstr.rsplit("/", 1)[-1]
+    parent = pathstr.split("/")[-2] if "/" in pathstr else ""
+    rank = len(shape)
+
+    if name == "embedding":  # [V, d]
+        return _fit(mesh, ("model", fsdp), shape)
+    if name in ("wup", "wgate"):  # MoE experts [E, d, f]
+        return _fit(mesh, ("model", fsdp, None), shape)
+    if name == "wdown":  # [E, f, d]
+        return _fit(mesh, ("model", None, fsdp), shape)
+    if name == "conv":  # [W, C] depthwise conv kernels
+        return _fit(mesh, (None, "model"), shape)
+    if name in ("ri", "rf", "rz", "ro") or (
+        name in ("wq", "wk", "wv") and rank == 3
+    ):  # block-diagonal per-head weights [H, hd, hd] (sLSTM rec, mLSTM qkv)
+        return _fit(mesh, (None, None, "model"), shape)
+    if name == "kernel":
+        if rank != 2:
+            return P(*([None] * rank))
+        if any(d in pathstr for d in _DOWN_LIKE):
+            return _fit(mesh, ("model", fsdp), shape)
+        return _fit(mesh, (fsdp, "model"), shape)
+    if name == "bias" and rank == 1:
+        if any(d in pathstr for d in _DOWN_LIKE):
+            return _fit(mesh, (fsdp,), shape)
+        return _fit(mesh, ("model",), shape)
+    # norms, gates, A_log, D, dt_bias, conv_bias, scales: replicate
+    return P(*([None] * rank))
+
+
+def param_shardings(params: Pytree, mesh: Mesh, *, pod_fsdp: bool = False) -> Pytree:
+    fsdp = ("pod", "data") if (pod_fsdp and "pod" in mesh.shape) else "data"
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = "/groups/" in ps
+        out.append(NamedSharding(
+            mesh, param_spec(ps, leaf.shape, mesh, stacked=stacked, fsdp=fsdp)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dude_state_shardings(params: Pytree, mesh: Mesh, n_workers: int) -> dict:
+    """Shardings for DuDeState: g_bar like params, stacked buffers with a
+    leading worker dim (pod-sharded when divisible)."""
+    multi_pod = "pod" in mesh.shape
+    worker_ax = "pod" if (multi_pod and n_workers % mesh.shape["pod"] == 0) else None
+
+    def one(path, leaf, extra_axis):
+        ps = _path_str(path)
+        stacked = "/groups/" in ps
+        inner = param_spec(ps, leaf.shape, mesh, stacked=stacked)
+        if extra_axis is False:
+            return NamedSharding(mesh, inner)
+        return NamedSharding(mesh, P(worker_ax, *inner))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    gbar = jax.tree_util.tree_unflatten(
+        treedef, [one(p, l, False) for p, l in flat]
+    )
+    buf = jax.tree_util.tree_unflatten(
+        treedef, [one(p, l, True) for p, l in flat]
+    )
+    scalar = NamedSharding(mesh, P())
+    vec = NamedSharding(mesh, P())
+    return {
+        "g_bar": gbar, "g_workers": buf, "inflight": buf,
+        "acc_count": vec, "step": scalar,
+    }
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_sharding(mesh: Mesh, *, worker_stacked: bool, extra_dims: int = 1,
+                   shape=None):
+    """Sharding for token batches.
+
+    worker_stacked: [n_workers, B/n, S?] — worker dim over 'pod' (if present),
+    per-worker batch over 'data'.  Otherwise [B, ...] over all dp axes.
+    Axes that do not divide their dim (e.g. batch=1 at long_500k) are dropped.
+    """
+    if worker_stacked:
+        wax = "pod" if "pod" in mesh.shape else None
+        spec = (wax, "data") + (None,) * extra_dims
+    else:
+        dp = dp_axes(mesh)
+        # try the full dp product; fall back to 'data' alone; else replicate
+        if shape is not None and shape[0] % _axsize(mesh, dp) != 0:
+            dp = "data" if shape[0] % _axsize(mesh, "data") == 0 else None
+        spec = (dp,) + (None,) * extra_dims
+    if shape is not None:
+        fitted = []
+        for dim, ax in zip(shape, spec):
+            fitted.append(ax if (ax is None or dim % _axsize(mesh, ax) == 0) else None)
+        spec = tuple(fitted) + spec[len(shape):]
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(caches: Pytree, mesh: Mesh) -> Pytree:
+    """KV caches [(G,) B, S, K, hd] — batch over dp, sequence over model.
+    SSM states [(G,) B, H, ...] — batch over dp, heads over model."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = ps.startswith("groups/") or "/groups/" in ps
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+        name = ps.rsplit("/", 1)[-1]
+        if name in ("k", "v") and len(body) == 4:  # [B, S, K, hd]
+            ent = (dp, "model", None, None)
+        elif name == "ssm" and len(body) == 4:  # [B, H, P, N]
+            ent = (dp, "model", None, None)
+        elif name == "C" and len(body) == 4:  # mLSTM [B, H, hd, hd]
+            if body[1] % _axsize(mesh, "model") == 0:
+                ent = (dp, "model", None, None)
+            else:  # few big heads: shard the matrix-memory rows instead
+                ent = (dp, None, "model", None)
+        elif name == "conv" and len(body) == 3:  # [B, W-1, C]
+            ent = (dp, None, "model")
+        elif len(body) >= 2:
+            ent = (dp,) + (None,) * (len(body) - 1)
+        elif len(body) == 1:
+            ent = (dp,)
+        else:
+            ent = ()
+        # divisibility fit on the body
+        fitted = []
+        for dim, ax in zip(body, ent):
+            fitted.append(ax if dim % _axsize(mesh, ax) == 0 else None)
+        return NamedSharding(mesh, P(*(lead + tuple(fitted))))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def make_shard_hook(mesh: Optional[Mesh]):
+    """Activation sharding-constraint hook passed into the model."""
+    if mesh is None:
+        return lambda x, name: x
+    dp = dp_axes(mesh)
+    specs = {
+        "act_resid": lambda s: P(dp, *([None] * (len(s) - 1))),
+        "act_heads": lambda s: P(dp, None, "model", None),
+        "act_kv": lambda s: P(dp, None, "model" if s[2] % _axsize(mesh, "model") == 0 else None, None),
+        "logits": lambda s: P(dp, *([None] * (len(s) - 2)), "model"),
+    }
+
+    def hook(x, name):
+        fn = specs.get(name)
+        if fn is None:
+            return x
+        spec = fn(x.shape)
+        fitted = []
+        for dim, ax in zip(x.shape, spec):
+            fitted.append(ax if dim % _axsize(mesh, ax) == 0 else None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fitted)))
+
+    return hook

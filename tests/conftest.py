@@ -1,0 +1,9 @@
+import os
+
+# Keep single-device defaults for smoke tests/benches (the dry-run sets its
+# own 512-device override in its own process).  Cap CPU threads for CI noise.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,185 @@
+"""DuDe-ASGD core invariants (paper Alg. 1 / §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DuDeConfig, dude_commit, dude_init, dude_round,
+    make_round_schedule, truncated_normal_speeds, delay_stats,
+)
+
+
+def _rand_tree(rng, shape=(5,)):
+    return {
+        "w": jnp.asarray(rng.normal(size=shape), jnp.float32),
+        "b": jnp.asarray(rng.normal(), jnp.float32),
+    }
+
+
+def test_incremental_equals_full_aggregation():
+    """The paper's incremental rule g <- g + (G_new - G_old)/n must equal
+    recomputing the full average of stored gradients (algebraic identity)."""
+    rng = np.random.default_rng(0)
+    n = 5
+    cfg = DuDeConfig(n_workers=n)
+    st = dude_init(_rand_tree(rng), cfg)
+    stored = [jax.tree.map(jnp.zeros_like, _rand_tree(rng)) for _ in range(n)]
+    for t in range(40):
+        i = int(rng.integers(n))
+        g = _rand_tree(rng)
+        st, gbar = dude_commit(st, jnp.int32(i), g, cfg)
+        stored[i] = g
+        full = jax.tree.map(lambda *xs: sum(xs) / n, *stored)
+        np.testing.assert_allclose(gbar["w"], full["w"], atol=1e-5)
+        np.testing.assert_allclose(gbar["b"], full["b"], atol=1e-5)
+
+
+def test_round_equals_commit_sequence():
+    """Mode B (dude_round with masks) == mode A (dude_commit per worker) when
+    the round's commit set is applied worker-by-worker."""
+    rng = np.random.default_rng(1)
+    n = 4
+    cfg = DuDeConfig(n_workers=n)
+    st_round = dude_init(_rand_tree(rng), cfg)
+    st_seq = dude_init(_rand_tree(rng), cfg)
+    latched = [None] * n
+
+    speeds = truncated_normal_speeds(n, std=1.0, seed=2)
+    sch = make_round_schedule(speeds, rounds=20)
+    for r in range(sch.rounds):
+        fresh = [_rand_tree(rng) for _ in range(n)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *fresh)
+        # mode A: commit the latched gradient of every finishing worker
+        for i in np.nonzero(sch.commit[r])[0]:
+            st_seq, g_seq = dude_commit(st_seq, jnp.int32(int(i)), latched[i], cfg)
+        for i in np.nonzero(sch.start[r])[0]:
+            latched[i] = fresh[i]
+        # mode B
+        st_round, g_round = dude_round(
+            st_round, stacked, jnp.asarray(sch.start[r]),
+            jnp.asarray(sch.commit[r]), cfg,
+        )
+        np.testing.assert_allclose(
+            st_round.g_bar["w"], st_seq.g_bar["w"], atol=1e-5
+        )
+
+
+def test_reduces_to_sync_sgd():
+    """tau_i = 1 for all i (everyone starts+commits every round) => g^t is the
+    plain synchronous average of fresh gradients (paper §3)."""
+    rng = np.random.default_rng(3)
+    n = 4
+    cfg = DuDeConfig(n_workers=n)
+    st = dude_init(_rand_tree(rng), cfg)
+    ones = jnp.ones(n, bool)
+    prev = [None]
+    for r in range(5):
+        fresh = [_rand_tree(rng) for _ in range(n)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *fresh)
+        st, g = dude_round(st, stacked, ones, ones, cfg)
+        # commits apply the gradient latched LAST round => one-round lag
+        if prev[0] is not None:
+            expect = jax.tree.map(lambda *xs: sum(xs) / n, *prev[0])
+            np.testing.assert_allclose(g["w"], expect["w"], atol=1e-5)
+        prev[0] = fresh
+
+
+def test_delay_invariant_tau_ge_d_plus_1():
+    """Paper Eq. (4): tau_i(t) >= d_i(t) + 1 on simulated schedules: a
+    committed gradient's model is from its start round, data drawn at start,
+    so model delay == duration >= 1 and data is fresh to the server."""
+    speeds = truncated_normal_speeds(8, std=5.0, seed=4)
+    sch = make_round_schedule(speeds, rounds=100)
+    start_round = np.full(8, -1)
+    for r in range(sch.rounds):
+        for i in range(8):
+            if sch.commit[r, i]:
+                assert start_round[i] >= 0
+                tau = r - start_round[i]
+                assert tau >= 1  # == d_i + 1 with data drawn at start
+                assert tau == sch.duration[i]
+            if sch.start[r, i]:
+                start_round[i] = r
+    stats = delay_stats(sch)
+    assert stats["tau_max"] >= 1
+
+
+def test_accumulate_variant_running_mean():
+    rng = np.random.default_rng(5)
+    n = 2
+    cfg = DuDeConfig(n_workers=n, accumulate=True)
+    st = dude_init(_rand_tree(rng), cfg)
+    start = jnp.array([True, True])
+    none = jnp.array([False, False])
+    g1 = [_rand_tree(rng) for _ in range(n)]
+    g2 = [_rand_tree(rng) for _ in range(n)]
+    st, _ = dude_round(st, jax.tree.map(lambda *x: jnp.stack(x), *g1),
+                       start, none, cfg)
+    st, _ = dude_round(st, jax.tree.map(lambda *x: jnp.stack(x), *g2),
+                       none, none, cfg)
+    want = 0.5 * (g1[0]["w"] + g2[0]["w"])
+    np.testing.assert_allclose(st.inflight["w"][0], want, atol=1e-5)
+
+
+def test_buffer_dtype_configurable():
+    cfg = DuDeConfig(n_workers=3, buffer_dtype=jnp.bfloat16)
+    st = dude_init({"w": jnp.zeros((4,))}, cfg)
+    assert st.g_workers["w"].dtype == jnp.bfloat16
+    assert st.g_bar["w"].dtype == jnp.float32
+
+
+def test_indexed_commit_equals_masked_sweep():
+    """Beyond-paper §Perf variant: gather/scatter commits must be bit-for-bit
+    equivalent to the paper-faithful masked full-buffer sweep."""
+    from repro.core.dude import dude_round_indexed, masks_to_indices
+    rng = np.random.default_rng(11)
+    n = 6
+    cfg = DuDeConfig(n_workers=n)
+    like = {"w": jnp.zeros((5,))}
+    s1 = dude_init(like, cfg)
+    s2 = dude_init(like, cfg)
+    for t in range(20):
+        fresh = {"w": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+        start = rng.random(n) < 0.5
+        commit = rng.random(n) < 0.4
+        s1, g1 = dude_round(s1, fresh, jnp.asarray(start),
+                            jnp.asarray(commit), cfg)
+        s2, g2 = dude_round_indexed(
+            s2, fresh, jnp.asarray(masks_to_indices(start, n, n)),
+            jnp.asarray(masks_to_indices(commit, n, n)), cfg,
+        )
+        np.testing.assert_allclose(g1["w"], g2["w"], atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1.g_workers["w"]),
+                                   np.asarray(s2.g_workers["w"]), atol=1e-5)
+
+
+def test_semi_async_variant():
+    """Paper §3 semi-async: the server waits for c completions per update;
+    convergence preserved and model delay shrinks with c (tau^(c)=tau/c)."""
+    import jax
+    from repro.core import make_algo, simulate
+    rng = np.random.default_rng(0)
+    n, P = 4, 5
+    A = [np.diag(rng.uniform(0.5, 2.0, P)) for _ in range(n)]
+    b = [rng.normal(size=P) * 3 for _ in range(n)]
+    wstar = np.linalg.solve(sum(A) / n, sum(b) / n)
+
+    def grad_fn(params, batch, key):
+        Ai, bi = batch
+        return (0.0, Ai @ params - bi + 0.01 * jax.random.normal(key, (P,)))
+
+    def sample_fn(i, rng_):
+        return (jnp.asarray(A[i], jnp.float32), jnp.asarray(b[i], jnp.float32))
+
+    speeds = truncated_normal_speeds(n, std=5.0, seed=1)
+    errs = {}
+    for c in (1, 2, 4):
+        algo = make_algo("dude_semi", n, c=c) if c > 1 else \
+            make_algo("dude_asgd", n)
+        res = simulate(algo, speeds, grad_fn, sample_fn, jnp.zeros(P),
+                       lr=0.05, total_iters=300 // c + 60, record_every=10_000)
+        errs[c] = float(np.linalg.norm(np.asarray(res.params) - wstar))
+    for c, e in errs.items():
+        assert e < 0.15, (c, errs)

@@ -1,0 +1,196 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DuDeConfig, dude_commit, dude_init, dude_round,
+    make_round_schedule, truncated_normal_speeds,
+)
+from repro.core.compression import ef_encode, dequantize, quantize
+from repro.data import dirichlet_partition, label_distribution
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(
+    n=st.integers(2, 6),
+    steps=st.integers(1, 30),
+    seed=st.integers(0, 10_000),
+)
+def test_incremental_aggregation_identity(n, steps, seed):
+    """For ANY commit sequence, g_bar == mean of last-committed gradients."""
+    rng = np.random.default_rng(seed)
+    cfg = DuDeConfig(n_workers=n)
+    like = {"w": jnp.zeros(3)}
+    stt = dude_init(like, cfg)
+    stored = [jax.tree.map(jnp.zeros_like, like) for _ in range(n)]
+    for _ in range(steps):
+        i = int(rng.integers(n))
+        g = {"w": jnp.asarray(rng.normal(size=3), jnp.float32)}
+        stt, gbar = dude_commit(stt, jnp.int32(i), g, cfg)
+        stored[i] = g
+    full = sum(np.asarray(s["w"]) for s in stored) / n
+    np.testing.assert_allclose(np.asarray(gbar["w"]), full, atol=1e-4)
+
+
+@SET
+@given(
+    n=st.integers(2, 8),
+    std=st.floats(0.1, 5.0),
+    rounds=st.integers(5, 60),
+    seed=st.integers(0, 10_000),
+)
+def test_schedule_validity(n, std, rounds, seed):
+    """Round schedules: jobs tile time with duration >= 1; a commit at r
+    implies a start at r - duration; no worker has two open jobs."""
+    speeds = truncated_normal_speeds(n, std=std, seed=seed)
+    sch = make_round_schedule(speeds, rounds)
+    assert sch.start.shape == (rounds, n)
+    open_job = np.zeros(n, bool)
+    start_at = np.full(n, -1)
+    for r in range(rounds):
+        for i in range(n):
+            if sch.commit[r, i]:
+                assert open_job[i]
+                assert r - start_at[i] == sch.duration[i] >= 1
+                open_job[i] = False
+            if sch.start[r, i]:
+                assert not open_job[i]
+                open_job[i] = True
+                start_at[i] = r
+
+
+@SET
+@given(
+    n=st.integers(2, 10),
+    alpha=st.floats(0.02, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_dirichlet_partition_valid(n, alpha, seed):
+    """Every index assigned exactly once; every worker non-empty; lower alpha
+    => more skew (checked in aggregate elsewhere)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=500)
+    shards = dirichlet_partition(labels, n, alpha, seed=seed)
+    allidx = np.sort(np.concatenate(shards))
+    np.testing.assert_array_equal(allidx, np.arange(500))
+    assert all(len(s) >= 1 for s in shards)
+    dist = label_distribution(labels, shards)
+    np.testing.assert_allclose(dist.sum(axis=1), 1.0, atol=1e-6)
+
+
+@SET
+@given(
+    shape=st.sampled_from([(8,), (4, 8), (16, 3)]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 1000),
+)
+def test_quantize_bounded_error(shape, scale, seed):
+    x = jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape) * scale, jnp.float32
+    )
+    q = quantize(x)
+    err = jnp.max(jnp.abs(dequantize(q) - x))
+    bound = jnp.max(jnp.abs(x)) / 127.0 + 1e-9
+    assert float(err) <= float(bound) * 1.01
+
+
+@SET
+@given(seed=st.integers(0, 1000), steps=st.integers(1, 20))
+def test_error_feedback_telescopes(seed, steps):
+    """Sum of EF-decoded commits == sum of true values minus final residual
+    (the EF-SGD unbiasedness-in-the-limit identity)."""
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros(6)
+    total_true = jnp.zeros(6)
+    total_sent = jnp.zeros(6)
+    for _ in range(steps):
+        x = jnp.asarray(rng.normal(size=6), jnp.float32)
+        q, err = ef_encode(x, err)
+        total_true = total_true + x
+        total_sent = total_sent + dequantize(q)
+    np.testing.assert_allclose(
+        np.asarray(total_sent + err), np.asarray(total_true), atol=1e-4
+    )
+
+
+@SET
+@given(
+    n=st.integers(2, 5),
+    seed=st.integers(0, 500),
+)
+def test_dude_round_masks_arbitrary(n, seed):
+    """dude_round with ARBITRARY mask patterns keeps g_bar == mean of stored
+    buffers (the incremental identity at round granularity)."""
+    rng = np.random.default_rng(seed)
+    cfg = DuDeConfig(n_workers=n)
+    like = {"w": jnp.zeros(4)}
+    stt = dude_init(like, cfg)
+    stored = np.zeros((n, 4))
+    latched = np.zeros((n, 4))
+    for _ in range(15):
+        fresh = rng.normal(size=(n, 4)).astype(np.float32)
+        start = rng.random(n) < 0.5
+        commit = rng.random(n) < 0.5
+        stt, gbar = dude_round(
+            stt, {"w": jnp.asarray(fresh)}, jnp.asarray(start),
+            jnp.asarray(commit), cfg,
+        )
+        stored[commit] = latched[commit]
+        latched[start] = fresh[start]
+        np.testing.assert_allclose(
+            np.asarray(gbar["w"]), stored.mean(axis=0), atol=1e-4
+        )
+
+
+@SET
+@given(seed=st.integers(0, 300))
+def test_compressed_dude_preserves_invariant(seed):
+    """Compressed-delta DuDe: g_bar must equal the mean of the (decoded)
+    stored buffers at every step — the incremental invariant survives
+    quantization exactly because server and worker apply the same decoded
+    delta."""
+    from repro.core.compression import compressed_commit
+    from repro.core.dude import DuDeConfig, dude_init
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n = 3
+    cfg = DuDeConfig(n_workers=n)
+    like = {"w": jnp.zeros(5)}
+    stt = dude_init(like, cfg)
+    err = {"w": jnp.zeros((5,))}
+    for t in range(12):
+        i = int(rng.integers(n))
+        g = {"w": jnp.asarray(rng.normal(size=5), jnp.float32)}
+        stt, gbar, err = compressed_commit(stt, jnp.int32(i), g, err, cfg)
+        mean_buf = np.asarray(stt.g_workers["w"]).astype(np.float32).mean(axis=0)
+        np.testing.assert_allclose(np.asarray(gbar["w"]), mean_buf, atol=1e-4)
+
+
+def test_compressed_dude_converges_quadratic():
+    """int8+EF compressed DuDe still reaches the true optimum (EF telescopes);
+    the wire payload is 4x smaller than f32 deltas."""
+    from repro.core.compression import compressed_commit
+    from repro.core.dude import DuDeConfig, dude_init
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    n, P = 4, 6
+    A = [np.diag(rng.uniform(0.5, 2.0, P)) for _ in range(n)]
+    b = [rng.normal(size=P) * 3 for _ in range(n)]
+    wstar = np.linalg.solve(sum(A) / n, sum(b) / n)
+    cfg = DuDeConfig(n_workers=n)
+    stt = dude_init(jnp.zeros(P), cfg)
+    errs = [jnp.zeros(P) for _ in range(n)]
+    w = jnp.zeros(P)
+    for t in range(600):
+        i = t % n
+        g = jnp.asarray(A[i] @ np.asarray(w) - b[i], jnp.float32)
+        stt, gbar, errs[i] = compressed_commit(stt, jnp.int32(i), g, errs[i], cfg)
+        w = w - 0.05 * gbar
+    assert np.linalg.norm(np.asarray(w) - wstar) < 0.05

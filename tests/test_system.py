@@ -1,0 +1,90 @@
+"""End-to-end system behaviour: the paper's protocol training real models.
+
+1. Event-driven (mode A): a small CNN on Dirichlet-partitioned class-Gaussian
+   images — DuDe-ASGD improves accuracy under extreme heterogeneity where
+   vanilla ASGD degrades (paper Fig. 2, miniature).
+2. Round-based SPMD (mode B): a small transformer LM trained with the DuDe
+   train_step under a heterogeneous-speed schedule — loss decreases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DuDeConfig, dude_init, make_algo, make_round_schedule, simulate,
+    truncated_normal_speeds,
+)
+from repro.data import class_gaussian_images, dirichlet_partition, make_sample_fn
+from repro.launch.steps import make_train_step
+from repro.models import lm_init
+from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+
+
+def test_cnn_dude_beats_vanilla_under_heterogeneity():
+    n = 6
+    x, y = class_gaussian_images(n=2400, seed=0)
+    shards = dirichlet_partition(y, n, alpha=0.05, seed=0)
+    sample_fn_np = make_sample_fn(x, y, shards, batch=32, seed=0)
+
+    def sample_fn(i, rng):
+        b = sample_fn_np(i, rng)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    def grad_fn(params, batch, key):
+        loss, g = jax.value_and_grad(cnn_loss)(params, batch)
+        return loss, g
+
+    params0 = cnn_init(jax.random.PRNGKey(0))
+    speeds = truncated_normal_speeds(n, std=1.0, seed=1)
+    xe, ye = jnp.asarray(x[:512]), jnp.asarray(y[:512])
+
+    accs = {}
+    for name in ("dude_asgd", "vanilla_asgd"):
+        # paper's step-size range is {0.001, 0.005, 0.01} (§5)
+        res = simulate(make_algo(name, n), speeds, grad_fn, sample_fn,
+                       params0, lr=0.01, total_iters=300, record_every=1000)
+        accs[name] = float(cnn_accuracy(res.params, xe, ye))
+    # with alpha=0.05 each worker is ~single-class; vanilla overweights fast
+    # workers' classes.  DuDe must beat chance and at least match vanilla
+    # (the full-scale comparison lives in benchmarks/fig2_cnn_grid.py).
+    assert accs["dude_asgd"] > 0.14, accs
+    assert accs["dude_asgd"] >= accs["vanilla_asgd"] - 0.02, accs
+
+
+def test_spmd_train_loop_loss_decreases():
+    cfg = ModelConfig(
+        name="tiny", arch_type="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=64, dtype=jnp.float32,
+        remat=False, attn_chunk=16, n_workers=4,
+    )
+    n = cfg.n_workers
+    key = jax.random.PRNGKey(0)
+    params = lm_init(key, cfg)
+    opt = sgd(0.05)
+    opt_state = opt.init(params)
+    dude_cfg = DuDeConfig(n, jnp.float32)
+    dude_state = dude_init(params, dude_cfg)
+    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+
+    speeds = truncated_normal_speeds(n, std=1.0, seed=2)
+    sch = make_round_schedule(speeds, rounds=30)
+
+    # learnable structure: every worker sees shifted arithmetic sequences
+    def batch_for_round(r):
+        base = jnp.arange(24) + r
+        toks = jnp.stack([(base + i) % cfg.vocab_size for i in range(n)])
+        toks = toks[:, None, :]  # [n, b=1, S]
+        labels = jnp.concatenate([toks[..., 1:], toks[..., :1]], axis=-1)
+        return {"tokens": toks, "labels": labels}
+
+    losses = []
+    for r in range(sch.rounds):
+        params, opt_state, dude_state, metrics = step(
+            params, opt_state, dude_state, batch_for_round(r),
+            jnp.asarray(sch.start[r]), jnp.asarray(sch.commit[r]),
+        )
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
