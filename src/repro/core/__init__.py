@@ -3,12 +3,20 @@
 Public API:
   * DuDeConfig / DuDeState / dude_init / dude_commit / dude_round — Algorithm 1
     and the semi-asynchronous SPMD variant (see DESIGN.md modes A/B).
+  * engine / flatten — the flat-buffer ServerEngine the above wrap: one padded
+    [P]/[n, P] state layout, three interchangeable backends
+    (reference / indexed / pallas).
   * schedules — worker speed models and arrival schedules.
   * baselines — Table-1 comparison algorithms.
   * simulator — event-driven asynchronous-training harness.
 """
 
-from .dude import DuDeConfig, DuDeState, dude_commit, dude_init, dude_round
+from .dude import (
+    DuDeConfig, DuDeState, dude_commit, dude_init, dude_round,
+    dude_round_indexed, masks_to_indices,
+)
+from .engine import BACKENDS, DuDeEngine, EngineState, masks_to_indices_jnp
+from .flatten import FlatSpec, make_flat_spec
 from .schedules import (
     RoundSchedule,
     SpeedModel,
@@ -22,6 +30,9 @@ from .simulator import SimResult, simulate
 
 __all__ = [
     "DuDeConfig", "DuDeState", "dude_commit", "dude_init", "dude_round",
+    "dude_round_indexed", "masks_to_indices",
+    "BACKENDS", "DuDeEngine", "EngineState", "masks_to_indices_jnp",
+    "FlatSpec", "make_flat_spec",
     "RoundSchedule", "SpeedModel", "delay_stats", "event_stream",
     "make_round_schedule", "truncated_normal_speeds",
     "ALGO_NAMES", "ServerAlgo", "make_algo", "SimResult", "simulate",

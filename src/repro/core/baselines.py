@@ -5,6 +5,13 @@ event-driven simulator (``core/simulator.py``).  All rules are pure functions
 jitted once; scheduling semantics (who computes when, who receives models)
 live in the simulator's per-discipline drivers.
 
+Since the ServerEngine refactor every stateful rule keeps its server memory
+in the flat layout of ``core/flatten.py`` — DuDe state is a ``DuDeEngine``
+``EngineState`` (padded ``[P]``/``[n, P]`` slabs), MIFA's gradient memory a
+flat ``[n, P]`` slab, FedBuff's accumulator a flat ``[P]`` vector.  Gradients
+are raveled once on arrival and the aggregated direction unraveled once for
+the parameter update; everything in between is a single-buffer streaming op.
+
 Implemented (paper Table 1):
   * Synchronous SGD            [Khaled & Richtarik 2023]  — round-based
   * MIFA (no local updates)    [Gu et al. 2021]           — round-based, full agg
@@ -23,7 +30,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .dude import DuDeConfig, DuDeState, dude_commit, dude_init
+from .engine import DuDeEngine
+from .flatten import make_flat_spec
 
 Pytree = Any
 
@@ -61,9 +69,12 @@ class ServerAlgo:
     init_state: Callable[[Pytree], Any]
     # (state, worker, grad, params, lr) -> (state, new_params, applied: bool)
     on_gradient: Callable[..., tuple]
-    # rounds discipline only: (state, grads [n,...] or dict, mask, params, lr)
+    # rounds discipline only:
+    # (state, grads [n,...], mask, params, lr) -> (state, new_params, direction)
     on_round: Optional[Callable[..., tuple]] = None
     route: Optional[str] = None  # "uniform" | "shuffled"
+    # rounds discipline: per-round worker participation probability
+    participate_p: float = 1.0
 
 
 # ---------------------------------------------------------------- sync / MIFA
@@ -76,53 +87,56 @@ def _make_sync(n: int) -> ServerAlgo:
     def on_round(state, stacked_grads, mask, params, lr):
         # mask is all-ones for sync SGD; average of fresh gradients.
         g = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
-        return state, _sgd_apply(params, g, lr)
+        return state, _sgd_apply(params, g, lr), g
 
     return ServerAlgo("sync_sgd", "rounds", init_state, None, on_round=on_round)
 
 
 def _make_mifa(n: int) -> ServerAlgo:
-    """MIFA w/o local updates: per-worker gradient memory, rounds with
-    partial participation; absent workers contribute their stale entry."""
+    """MIFA w/o local updates: per-worker gradient memory (one flat [n, P]
+    slab), rounds with partial participation; absent workers contribute their
+    stale entry."""
+    box = {}
 
     def init_state(grad_like):
-        return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), grad_like)
+        spec = box["spec"] = make_flat_spec(grad_like)
+        return jnp.zeros((n, spec.padded_size), jnp.float32)
 
     def on_round(memory, stacked_grads, mask, params, lr):
-        m = mask.reshape((-1,) + (1,) * 0)
+        spec = box["spec"]
+        fresh = spec.ravel_stacked(stacked_grads)
+        memory = jnp.where(mask[:, None], fresh, memory)
+        g = spec.unravel(jnp.mean(memory, axis=0))
+        return memory, _sgd_apply(params, g, lr), g
 
-        def upd(mem, g):
-            mm = mask.reshape((-1,) + (1,) * (g.ndim - 1))
-            return jnp.where(mm, g, mem)
-
-        memory = jax.tree.map(upd, memory, stacked_grads)
-        g = jax.tree.map(lambda mem: jnp.mean(mem, axis=0), memory)
-        return memory, _sgd_apply(params, g, lr)
-
-    return ServerAlgo("mifa", "rounds", init_state, None, on_round=on_round)
+    return ServerAlgo("mifa", "rounds", init_state, None, on_round=on_round,
+                      participate_p=0.8)
 
 
 # ------------------------------------------------------------------- FedBuff
 
 
 def _make_fedbuff(n: int, buffer_size: int = 4) -> ServerAlgo:
-    """FedBuff with K=1 local step: buffer ``buffer_size`` deltas, then apply
-    their mean.  State = (accumulated delta sum, count)."""
+    """FedBuff with K=1 local step: buffer ``buffer_size`` deltas in one flat
+    [P] accumulator, then apply their mean."""
+    box = {}
 
     def init_state(grad_like):
-        acc = jax.tree.map(jnp.zeros_like, grad_like)
-        return (acc, jnp.zeros((), jnp.int32))
+        spec = box["spec"] = make_flat_spec(grad_like)
+        return (jnp.zeros((spec.padded_size,), jnp.float32),
+                jnp.zeros((), jnp.int32))
 
     def on_gradient(state, worker, grad, params, lr):
+        spec = box["spec"]
         acc, cnt = state
-        acc = jax.tree.map(lambda a, g: a + g, acc, grad)
+        acc = acc + spec.ravel(grad)
         cnt = cnt + 1
 
         def flush(_):
-            g = jax.tree.map(lambda a: a / buffer_size, acc)
+            g = spec.unravel(acc / buffer_size)
             new_params = _sgd_apply(params, g, lr)
-            zero = jax.tree.map(jnp.zeros_like, acc)
-            return (zero, jnp.zeros((), jnp.int32)), new_params, jnp.array(True)
+            return ((jnp.zeros_like(acc), jnp.zeros((), jnp.int32)),
+                    new_params, jnp.array(True))
 
         def hold(_):
             return (acc, cnt), params, jnp.array(False)
@@ -151,35 +165,46 @@ def _make_routed(n: int, route: str) -> ServerAlgo:
     return dataclasses.replace(algo, name=name, scheduling="routed", route=route)
 
 
-def _make_dude(n: int, buffer_dtype=jnp.float32) -> ServerAlgo:
-    cfg = DuDeConfig(n_workers=n, buffer_dtype=buffer_dtype)
+def _make_dude(n: int, buffer_dtype=jnp.float32,
+               backend: str = "reference") -> ServerAlgo:
+    box = {}
 
     def init_state(grad_like):
-        return dude_init(grad_like, cfg)
+        eng = box["eng"] = DuDeEngine.for_tree(
+            grad_like, n, buffer_dtype=buffer_dtype, backend=backend)
+        return eng.init()
 
-    def on_gradient(state: DuDeState, worker, grad, params, lr):
-        state, g = dude_commit(state, worker, grad, cfg)
+    def on_gradient(state, worker, grad, params, lr):
+        eng = box["eng"]
+        state, g_flat = eng.commit(state, worker, eng.spec.ravel(grad))
+        g = eng.spec.unravel(g_flat)
         return state, _sgd_apply(params, g, lr), jnp.array(True)
 
     return ServerAlgo("dude_asgd", "greedy", init_state, on_gradient)
 
 
-def _make_dude_semi(n: int, c: int = 2, buffer_dtype=jnp.float32) -> ServerAlgo:
+def _make_dude_semi(n: int, c: int = 2, buffer_dtype=jnp.float32,
+                    backend: str = "reference") -> ServerAlgo:
     """Semi-asynchronous DuDe (paper §3): the server folds every arriving
     delta into g~ immediately (incremental aggregation) but only updates the
     global model once |C_t| = c deltas have arrived — trading wait time for
     smaller tau_max^(c) = tau_max / c."""
-    cfg = DuDeConfig(n_workers=n, buffer_dtype=buffer_dtype)
+    box = {}
 
     def init_state(grad_like):
-        return (dude_init(grad_like, cfg), jnp.zeros((), jnp.int32))
+        eng = box["eng"] = DuDeEngine.for_tree(
+            grad_like, n, buffer_dtype=buffer_dtype, backend=backend)
+        return (eng.init(), jnp.zeros((), jnp.int32))
 
     def on_gradient(state, worker, grad, params, lr):
+        eng = box["eng"]
         dude_state, pending = state
-        dude_state, g = dude_commit(dude_state, worker, grad, cfg)
+        dude_state, g_flat = eng.commit(dude_state, worker,
+                                        eng.spec.ravel(grad))
         pending = pending + 1
 
         def flush(_):
+            g = eng.spec.unravel(g_flat)
             return ((dude_state, jnp.zeros((), jnp.int32)),
                     _sgd_apply(params, g, lr), jnp.array(True))
 

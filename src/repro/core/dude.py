@@ -18,24 +18,35 @@ Two entry points, matching DESIGN.md execution modes:
                          workers.  The dual delay is physical: a committed
                          gradient was latched ``tau`` rounds ago.
 
-State is a pytree-of-stacked-buffers so it shards trivially over a mesh (the
-update is elementwise except for one mean over the worker axis).  Buffer dtype
-is configurable (the Theta(n p) server memory is the paper's stated trade-off);
-optional error-feedback compression lives in ``compression.py``.
+The public API keeps pytree-of-stacked-buffers state (``DuDeState``) so it
+shards trivially over a mesh and checkpoints per-leaf, but since the
+ServerEngine refactor the actual update math runs on ONE flat buffer layout:
+each call ravels state + gradients into padded ``[P]``/``[n, P]`` slabs
+(``core/flatten.py``), dispatches to a ``DuDeEngine`` backend
+(``core/engine.py`` — ``"reference"`` masked sweep, ``"indexed"``
+gather/scatter, or the fused ``"pallas"`` kernel), and unravels the result.
+Under jit the ravel/unravel are pure layout ops that XLA fuses away.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from .engine import DuDeEngine, EngineState
+from .flatten import make_flat_spec
 
 Pytree = Any
 
-__all__ = ["DuDeConfig", "DuDeState", "dude_init", "dude_commit", "dude_round"]
+__all__ = [
+    "DuDeConfig", "DuDeState", "dude_init", "dude_commit", "dude_round",
+    "dude_round_indexed", "masks_to_indices",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +90,47 @@ def dude_init(grad_like: Pytree, cfg: DuDeConfig) -> DuDeState:
     )
 
 
+# ------------------------------------------------------- engine plumbing
+
+@lru_cache(maxsize=None)
+def _engine_cached(spec, n_workers, buffer_dtype, accumulate, backend,
+                   interpret) -> DuDeEngine:
+    return DuDeEngine(spec=spec, n_workers=n_workers,
+                      buffer_dtype=buffer_dtype, accumulate=accumulate,
+                      backend=backend, interpret=interpret)
+
+
+def engine_for(state: DuDeState, cfg: DuDeConfig, backend: str = "reference",
+               interpret: Optional[bool] = None) -> DuDeEngine:
+    """The (cached) engine whose flat layout matches ``state.g_bar``."""
+    spec = make_flat_spec(state.g_bar)
+    return _engine_cached(spec, cfg.n_workers, cfg.buffer_dtype or jnp.float32,
+                          cfg.accumulate, backend, interpret)
+
+
+def _ravel_state(eng: DuDeEngine, state: DuDeState) -> EngineState:
+    bdt = eng.buffer_dtype
+    return EngineState(
+        g_bar=eng.spec.ravel(state.g_bar, jnp.float32),
+        g_workers=eng.spec.ravel_stacked(state.g_workers, bdt),
+        inflight=eng.spec.ravel_stacked(state.inflight, bdt),
+        acc_count=state.acc_count,
+        step=state.step,
+    )
+
+
+def _unravel_state(eng: DuDeEngine, fstate: EngineState) -> DuDeState:
+    return DuDeState(
+        g_bar=eng.spec.unravel(fstate.g_bar),
+        g_workers=eng.spec.unravel_stacked(fstate.g_workers, cast=False),
+        inflight=eng.spec.unravel_stacked(fstate.inflight, cast=False),
+        acc_count=fstate.acc_count,
+        step=fstate.step,
+    )
+
+
+# ------------------------------------------------------------ public API
+
 def dude_commit(
     state: DuDeState, worker: jnp.ndarray, grad: Pytree, cfg: DuDeConfig
 ) -> tuple[DuDeState, Pytree]:
@@ -87,41 +139,11 @@ def dude_commit(
     ``worker`` is a traced int32 scalar; ``grad`` the fresh stochastic gradient
     G_j^t.  Returns the new state and the aggregated direction g^t.
     """
-    n = cfg.n_workers
-
-    def upd(gbar, gw, g):
-        g = g.astype(jnp.float32)
-        old = jax.lax.dynamic_index_in_dim(gw, worker, axis=0, keepdims=False)
-        delta = (g - old.astype(jnp.float32)) / n
-        gbar = gbar + delta
-        gw = jax.lax.dynamic_update_index_in_dim(
-            gw, g.astype(gw.dtype), worker, axis=0
-        )
-        return gbar, gw
-
-    flat_bar, treedef = jax.tree.flatten(state.g_bar)
-    flat_gw = treedef.flatten_up_to(state.g_workers)
-    flat_g = treedef.flatten_up_to(grad)
-    new_bar, new_gw = [], []
-    for b, w, g in zip(flat_bar, flat_gw, flat_g):
-        nb, nw = upd(b, w, g)
-        new_bar.append(nb)
-        new_gw.append(nw)
-    g_bar = jax.tree.unflatten(treedef, new_bar)
-    g_workers = jax.tree.unflatten(treedef, new_gw)
-    st = DuDeState(
-        g_bar=g_bar,
-        g_workers=g_workers,
-        inflight=state.inflight,
-        acc_count=state.acc_count,
-        step=state.step + 1,
-    )
-    return st, g_bar
-
-
-def _bmask(mask: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    """Broadcast [n] mask against [n, ...] buffer."""
-    return mask.reshape((-1,) + (1,) * (x.ndim - 1))
+    eng = engine_for(state, cfg)
+    fstate, g_bar = eng.commit(_ravel_state(eng, state),
+                               worker, eng.spec.ravel(grad))
+    new_state = _unravel_state(eng, fstate)
+    return new_state, new_state.g_bar
 
 
 def dude_round(
@@ -130,6 +152,8 @@ def dude_round(
     start_mask: jnp.ndarray,  # [n] bool — worker starts a job this round
     commit_mask: jnp.ndarray,  # [n] bool — worker's in-flight gradient commits
     cfg: DuDeConfig,
+    backend: str = "reference",
+    interpret: Optional[bool] = None,
 ) -> tuple[DuDeState, Pytree]:
     """Semi-asynchronous SPMD round (paper §3, semi-async variant).
 
@@ -141,49 +165,16 @@ def dude_round(
          into their in-flight buffer.
     The aggregated direction g^t changes only through committed deltas, exactly
     the incremental rule  g^t = g^{t-1} + (1/n) sum_{i in C_t} (G_i^new - G~_i).
+
+    ``backend`` selects the engine update path ("reference" | "indexed" |
+    "pallas"); all are semantically equivalent (tests/test_engine.py).
     """
-    n = cfg.n_workers
-    cm = commit_mask.astype(jnp.float32)
-    sm = start_mask
-
-    def upd(gbar, gw, infl, g):
-        g32 = g.astype(jnp.float32)
-        infl32 = infl.astype(jnp.float32)
-        # 1. commit finishing workers
-        delta = _bmask(cm, infl32) * (infl32 - gw.astype(jnp.float32))
-        gbar = gbar + jnp.sum(delta, axis=0) / n
-        gw = jnp.where(_bmask(commit_mask, gw), infl32.astype(gw.dtype), gw)
-        # 2. latch/accumulate fresh gradients of starting workers
-        if cfg.accumulate:
-            # running mean over the job's rounds (beyond-paper variant)
-            cnt = state.acc_count.astype(jnp.float32)
-            newcnt = jnp.where(sm, 1.0, cnt + 1.0)
-            w_new = 1.0 / newcnt
-            mixed = infl32 * (1.0 - _bmask(w_new, infl32)) + g32 * _bmask(w_new, g32)
-            infl = mixed.astype(infl.dtype)
-        else:
-            infl = jnp.where(_bmask(sm, infl), g32.astype(infl.dtype), infl)
-        return gbar, gw, infl
-
-    flat_bar, treedef = jax.tree.flatten(state.g_bar)
-    flat_gw = treedef.flatten_up_to(state.g_workers)
-    flat_in = treedef.flatten_up_to(state.inflight)
-    flat_g = treedef.flatten_up_to(fresh_grads)
-    nb, nw, ni = [], [], []
-    for b, w, il, g in zip(flat_bar, flat_gw, flat_in, flat_g):
-        b2, w2, i2 = upd(b, w, il, g)
-        nb.append(b2)
-        nw.append(w2)
-        ni.append(i2)
-    newcnt = jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32)
-    st = DuDeState(
-        g_bar=jax.tree.unflatten(treedef, nb),
-        g_workers=jax.tree.unflatten(treedef, nw),
-        inflight=jax.tree.unflatten(treedef, ni),
-        acc_count=newcnt,
-        step=state.step + 1,
-    )
-    return st, st.g_bar
+    eng = engine_for(state, cfg, backend=backend, interpret=interpret)
+    fstate, _ = eng.round(_ravel_state(eng, state),
+                          eng.spec.ravel_stacked(fresh_grads),
+                          start_mask, commit_mask)
+    new_state = _unravel_state(eng, fstate)
+    return new_state, new_state.g_bar
 
 
 def dude_round_indexed(
@@ -202,47 +193,16 @@ def dude_round_indexed(
     Padding convention: indices == n are dropped (scatter mode="drop").
     The host passes fixed-width index arrays so shapes stay static.
     """
-    n = cfg.n_workers
-
-    def upd(gbar, gw, infl, g):
-        g32 = g.astype(jnp.float32)
-        # commit: delta for the selected rows only
-        rows_in = jnp.take(infl, commit_idx, axis=0, mode="fill",
-                           fill_value=0).astype(jnp.float32)
-        rows_gw = jnp.take(gw, commit_idx, axis=0, mode="fill",
-                           fill_value=0).astype(jnp.float32)
-        valid = (commit_idx < n).astype(jnp.float32)
-        delta = (rows_in - rows_gw) * valid.reshape((-1,) + (1,) * (gw.ndim - 1))
-        gbar = gbar + jnp.sum(delta, axis=0) / n
-        gw = gw.at[commit_idx].set(rows_in.astype(gw.dtype), mode="drop")
-        # latch: selected fresh rows only
-        fresh_rows = jnp.take(g32, start_idx, axis=0, mode="fill", fill_value=0)
-        infl = infl.at[start_idx].set(fresh_rows.astype(infl.dtype), mode="drop")
-        return gbar, gw, infl
-
-    flat_bar, treedef = jax.tree.flatten(state.g_bar)
-    flat_gw = treedef.flatten_up_to(state.g_workers)
-    flat_in = treedef.flatten_up_to(state.inflight)
-    flat_g = treedef.flatten_up_to(fresh_grads)
-    nb, nw, ni = [], [], []
-    for b, w, il, g in zip(flat_bar, flat_gw, flat_in, flat_g):
-        b2, w2, i2 = upd(b, w, il, g)
-        nb.append(b2)
-        nw.append(w2)
-        ni.append(i2)
-    st = DuDeState(
-        g_bar=jax.tree.unflatten(treedef, nb),
-        g_workers=jax.tree.unflatten(treedef, nw),
-        inflight=jax.tree.unflatten(treedef, ni),
-        acc_count=state.acc_count,
-        step=state.step + 1,
-    )
-    return st, st.g_bar
+    eng = engine_for(state, cfg, backend="indexed")
+    fstate, _ = eng.round_indexed(_ravel_state(eng, state),
+                                  eng.spec.ravel_stacked(fresh_grads),
+                                  start_idx, commit_idx)
+    new_state = _unravel_state(eng, fstate)
+    return new_state, new_state.g_bar
 
 
-def masks_to_indices(mask: "np.ndarray", n: int, width: int):
+def masks_to_indices(mask: np.ndarray, n: int, width: int) -> np.ndarray:
     """Host helper: bool mask [n] -> fixed-width index array padded with n."""
-    import numpy as np
     idx = np.nonzero(mask)[0]
     out = np.full(width, n, dtype=np.int32)
     out[: min(len(idx), width)] = idx[:width]

@@ -1,0 +1,260 @@
+"""ServerEngine: the DuDe server iteration on one flat buffer layout.
+
+Every server-side algorithm in this repo ultimately streams over Theta(n * p)
+buffer state.  ``DuDeEngine`` owns that state in ONE canonical layout —
+``g_bar`` as a padded flat ``[P]`` f32 vector, ``g_workers``/``inflight`` as
+``[n, P]`` slabs in the configured buffer dtype — and exposes the two paper
+entry points (``commit`` for the fully-async mode, ``round`` for the
+semi-async SPMD mode) over three interchangeable backends:
+
+* ``"reference"`` — masked jnp sweep over all n rows; the paper-faithful
+  oracle (identical math to the historical ``dude_round``), and the only
+  backend supporting the beyond-paper ``accumulate`` variant.
+* ``"indexed"``   — gather/scatter touching only the selected rows.  The
+  traffic saving (~4kP instead of ~4nP bytes per round) requires a static
+  bound k on the active set: set ``index_width`` (the schedule usually
+  knows max |C_t|), or use ``round_indexed`` with host-narrowed arrays.
+  With the default width n the mask path is correct but saves nothing.
+* ``"pallas"``    — the fused TPU kernel (``kernels/dude_update.py``): one
+  pass over all five streams, optionally folding the SGD parameter update
+  into the same pass.  Runs under ``interpret=True`` on CPU.
+
+Backends agree bit-for-bit on ``g_bar`` (all accumulate the commit delta in
+f32) and on the buffers up to the shared buffer-dtype rounding; the
+equivalence is enforced by ``tests/test_engine.py``.
+
+``core/dude.py`` re-exports the historical pytree API (``dude_commit`` /
+``dude_round`` / ``dude_round_indexed``) as thin ravel->engine->unravel
+wrappers, so callers keep pytree ergonomics while the hot loop runs on flat
+slabs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flatten import FlatSpec, make_flat_spec
+from ..kernels.dude_update import DEFAULT_TILE, dude_update_pallas
+
+Pytree = Any
+
+__all__ = ["BACKENDS", "EngineState", "DuDeEngine", "masks_to_indices_jnp"]
+
+BACKENDS = ("reference", "indexed", "pallas")
+
+
+class EngineState(NamedTuple):
+    """Flat DuDe server state.  Field names mirror ``DuDeState``."""
+
+    g_bar: jnp.ndarray      # [P] f32 running aggregated gradient (paper g~)
+    g_workers: jnp.ndarray  # [n, P] latest committed gradient per worker
+    inflight: jnp.ndarray   # [n, P] gradient latched at job start
+    acc_count: jnp.ndarray  # [n] i32 rounds accumulated (accumulate mode)
+    step: jnp.ndarray       # scalar i32 server iteration counter
+
+
+def masks_to_indices_jnp(mask: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Traced bool mask [n] -> fixed-width [n] index array padded with n.
+
+    Valid indices sort to the front; entries == n are dropped by the
+    scatter's ``mode="drop"``.  Shape-static, so usable under jit (unlike
+    host-side ``masks_to_indices``).
+    """
+    return jnp.sort(jnp.where(mask, jnp.arange(n, dtype=jnp.int32),
+                              jnp.int32(n)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DuDeEngine:
+    """One DuDe server, one flat state layout, pluggable update backends."""
+
+    spec: FlatSpec
+    n_workers: int
+    buffer_dtype: Any = jnp.float32
+    accumulate: bool = False
+    backend: str = "reference"
+    interpret: Optional[bool] = None  # pallas only; None = auto (off on TPU)
+    # indexed backend: static width of the in-graph index arrays built from
+    # masks.  Must bound the max number of simultaneously starting/committing
+    # workers — excess valid indices are silently dropped (valid indices sort
+    # first, so the bound is on |C_t|, not on n).  None = n (always correct,
+    # but the gather/scatter then touches all n rows and saves no traffic).
+    index_width: Optional[int] = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; options: {BACKENDS}")
+        if self.accumulate and self.backend != "reference":
+            raise ValueError(
+                "accumulate mode is only implemented by the reference "
+                f"backend, not {self.backend!r}")
+        if self.index_width is not None and not (
+                1 <= self.index_width <= self.n_workers):
+            raise ValueError(
+                f"index_width={self.index_width} outside [1, n_workers]")
+
+    @classmethod
+    def for_tree(cls, grad_like: Pytree, n_workers: int, **kw) -> "DuDeEngine":
+        """Engine whose flat layout matches ``grad_like``'s pytree layout."""
+        return cls(spec=make_flat_spec(grad_like), n_workers=n_workers, **kw)
+
+    # ---------------------------------------------------------- properties
+
+    @property
+    def P(self) -> int:
+        return self.spec.padded_size
+
+    @property
+    def tile(self) -> int:
+        # Interpret mode evaluates one Python kernel body per grid step, so
+        # collapse to a single [n, P] program; on hardware use the largest
+        # tile <= DEFAULT_TILE that divides P (P is a multiple of the pad
+        # lane count, so this is always >= PAD_MULTIPLE).
+        if self._interpret():
+            return self.P
+        return math.gcd(self.P, DEFAULT_TILE)
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    # --------------------------------------------------------------- init
+
+    def init(self) -> EngineState:
+        n, P = self.n_workers, self.P
+        return EngineState(
+            g_bar=jnp.zeros((P,), jnp.float32),
+            g_workers=jnp.zeros((n, P), self.buffer_dtype),
+            inflight=jnp.zeros((n, P), self.buffer_dtype),
+            acc_count=jnp.zeros((n,), jnp.int32),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------- commit
+
+    def commit(self, state: EngineState, worker: jnp.ndarray,
+               grad: jnp.ndarray) -> tuple[EngineState, jnp.ndarray]:
+        """Fully-async server iteration (Alg. 1 lines 4-6) on flat ``[P]``.
+
+        O(P) work regardless of backend — there is nothing to fuse or index,
+        so all three backends share this implementation.
+        """
+        g = grad.astype(jnp.float32)
+        old = jax.lax.dynamic_index_in_dim(state.g_workers, worker, axis=0,
+                                           keepdims=False)
+        g_bar = state.g_bar + (g - old.astype(jnp.float32)) / self.n_workers
+        g_workers = jax.lax.dynamic_update_index_in_dim(
+            state.g_workers, g.astype(state.g_workers.dtype), worker, axis=0)
+        st = state._replace(g_bar=g_bar, g_workers=g_workers,
+                            step=state.step + 1)
+        return st, g_bar
+
+    # -------------------------------------------------------------- round
+
+    def round(self, state: EngineState, fresh: jnp.ndarray,
+              start_mask: jnp.ndarray, commit_mask: jnp.ndarray,
+              params: Optional[jnp.ndarray] = None,
+              eta: Optional[float] = None):
+        """Semi-async SPMD round on flat slabs (paper §3 semantics).
+
+        ``fresh`` is the ``[n, P]`` live-model gradient.  Returns
+        ``(state, g_bar)``, or ``(state, g_bar, new_params)`` when a flat
+        ``params`` vector and ``eta`` are given — the pallas backend folds
+        that SGD apply into the same fused pass; the others apply it after.
+        """
+        if (params is None) != (eta is None):
+            raise ValueError("params and eta must be given together")
+        sm = start_mask.astype(bool)
+        cm = commit_mask.astype(bool)
+        new_params = None
+        if self.backend == "pallas":
+            g_bar, gw, infl, new_params = self._round_pallas(
+                state, fresh, sm, cm, params, eta)
+        elif self.backend == "indexed":
+            n = self.n_workers
+            w = self.index_width or n
+            g_bar, gw, infl = self._round_indexed(
+                state, fresh, masks_to_indices_jnp(sm, n)[:w],
+                masks_to_indices_jnp(cm, n)[:w])
+        else:
+            g_bar, gw, infl = self._round_reference(state, fresh, sm, cm)
+        if params is not None and new_params is None:
+            new_params = (params.astype(jnp.float32)
+                          - jnp.float32(eta) * g_bar).astype(params.dtype)
+        st = EngineState(
+            g_bar=g_bar, g_workers=gw, inflight=infl,
+            acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
+            step=state.step + 1,
+        )
+        if params is None:
+            return st, g_bar
+        return st, g_bar, new_params
+
+    def round_indexed(self, state: EngineState, fresh: jnp.ndarray,
+                      start_idx: jnp.ndarray, commit_idx: jnp.ndarray
+                      ) -> tuple[EngineState, jnp.ndarray]:
+        """Round with host-precomputed padded index arrays (legacy entry
+        point of the indexed backend; indices == n are dropped)."""
+        g_bar, gw, infl = self._round_indexed(state, fresh, start_idx,
+                                              commit_idx)
+        st = EngineState(
+            g_bar=g_bar, g_workers=gw, inflight=infl,
+            acc_count=state.acc_count, step=state.step + 1,
+        )
+        return st, g_bar
+
+    # ----------------------------------------------------------- backends
+
+    def _round_reference(self, state, fresh, sm, cm):
+        """Masked full sweep over all n rows (paper-faithful oracle)."""
+        g32 = fresh.astype(jnp.float32)
+        infl32 = state.inflight.astype(jnp.float32)
+        gw32 = state.g_workers.astype(jnp.float32)
+        delta = cm.astype(jnp.float32)[:, None] * (infl32 - gw32)
+        g_bar = state.g_bar + jnp.sum(delta, axis=0) / self.n_workers
+        bdt = state.g_workers.dtype
+        gw = jnp.where(cm[:, None], infl32.astype(bdt), state.g_workers)
+        if self.accumulate:
+            # running mean over the job's rounds (beyond-paper variant)
+            cnt = state.acc_count.astype(jnp.float32)
+            w_new = (1.0 / jnp.where(sm, 1.0, cnt + 1.0))[:, None]
+            infl = (infl32 * (1.0 - w_new) + g32 * w_new).astype(bdt)
+        else:
+            infl = jnp.where(sm[:, None], g32.astype(bdt), state.inflight)
+        return g_bar, gw, infl
+
+    def _round_indexed(self, state, fresh, start_idx, commit_idx):
+        """Gather/scatter on the k selected rows only (~4kP HBM bytes)."""
+        n = self.n_workers
+        bdt = state.g_workers.dtype
+        rows_in = jnp.take(state.inflight, commit_idx, axis=0, mode="fill",
+                           fill_value=0).astype(jnp.float32)
+        rows_gw = jnp.take(state.g_workers, commit_idx, axis=0, mode="fill",
+                           fill_value=0).astype(jnp.float32)
+        valid = (commit_idx < n).astype(jnp.float32)[:, None]
+        g_bar = state.g_bar + jnp.sum((rows_in - rows_gw) * valid, axis=0) / n
+        gw = state.g_workers.at[commit_idx].set(rows_in.astype(bdt),
+                                                mode="drop")
+        fresh_rows = jnp.take(fresh.astype(jnp.float32), start_idx, axis=0,
+                              mode="fill", fill_value=0)
+        infl = state.inflight.at[start_idx].set(fresh_rows.astype(bdt),
+                                                mode="drop")
+        return g_bar, gw, infl
+
+    def _round_pallas(self, state, fresh, sm, cm, params, eta):
+        """Fused single-pass kernel; optional in-pass SGD apply."""
+        w = params if params is not None else jnp.zeros_like(state.g_bar)
+        gw, infl, g_bar, w_new = dude_update_pallas(
+            cm, sm, fresh.astype(jnp.float32), state.g_workers,
+            state.inflight, state.g_bar, w,
+            eta=float(eta) if eta is not None else 0.0,
+            tile=self.tile, interpret=self._interpret(),
+        )
+        return g_bar, gw, infl, (w_new if params is not None else None)

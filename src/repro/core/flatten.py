@@ -1,0 +1,116 @@
+"""Pytree <-> flat-buffer ravel layer for the ServerEngine.
+
+The DuDe server iteration is elementwise over Theta(n * p) buffer state, so
+the engine stores all of it as padded flat slabs: ``g_bar`` as ``[P]`` and the
+per-worker buffers as ``[n, P]``, where ``P`` is the total parameter count
+rounded up to a lane multiple (so the fused Pallas kernel always sees
+tileable shapes).  This module owns the mapping between gradient pytrees and
+those slabs.
+
+A ``FlatSpec`` is built once per (treedef, leaf shapes/dtypes) and cached: it
+records the treedef plus a segment table (offset/size/shape/dtype per leaf)
+so ravel is a cast+reshape+concat and unravel is a slice+reshape+cast — both
+fuse into neighbouring ops under jit.  Padding is zero-filled and ignored on
+unravel; zeros are a fixed point of every engine update, so the pad lanes
+never contaminate real state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["FlatSpec", "make_flat_spec", "PAD_MULTIPLE"]
+
+# Lane width of the TPU vector unit: padding P to a multiple of this keeps
+# every backend (and the Pallas tile chooser) shape-happy.
+PAD_MULTIPLE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Segment table mapping one pytree layout to a padded flat vector."""
+
+    treedef: Any
+    shapes: tuple          # per-leaf shapes
+    dtypes: tuple          # per-leaf dtypes (restored on unravel)
+    sizes: tuple           # per-leaf element counts
+    offsets: tuple         # per-leaf start offset into the flat vector
+    size: int              # sum(sizes), before padding
+    padded_size: int       # P: size rounded up to PAD_MULTIPLE
+
+    # ------------------------------------------------------------- ravel
+
+    def ravel(self, tree: Pytree, dtype=jnp.float32) -> jnp.ndarray:
+        """Pytree with leaves of ``self.shapes`` -> flat ``[P]`` in ``dtype``."""
+        leaves = self.treedef.flatten_up_to(tree)
+        flat = [jnp.asarray(x).astype(dtype).reshape(-1) for x in leaves]
+        return self._pad(jnp.concatenate(flat) if flat else jnp.zeros((0,), dtype))
+
+    def ravel_stacked(self, tree: Pytree, dtype=jnp.float32) -> jnp.ndarray:
+        """Pytree with ``[n, *shape]`` leaves -> ``[n, P]`` in ``dtype``."""
+        leaves = self.treedef.flatten_up_to(tree)
+        n = jnp.shape(leaves[0])[0]
+        flat = [jnp.asarray(x).astype(dtype).reshape(n, -1) for x in leaves]
+        return self._pad(jnp.concatenate(flat, axis=-1), n)
+
+    def _pad(self, flat: jnp.ndarray, n: int | None = None) -> jnp.ndarray:
+        pad = self.padded_size - self.size
+        if pad == 0:
+            return flat
+        widths = ((0, 0), (0, pad)) if n is not None else ((0, pad),)
+        return jnp.pad(flat, widths)
+
+    # ----------------------------------------------------------- unravel
+
+    def unravel(self, flat: jnp.ndarray, cast: bool = True) -> Pytree:
+        """Flat ``[P]`` -> pytree with the spec's shapes (and dtypes if
+        ``cast``; otherwise leaves keep ``flat.dtype``)."""
+        leaves = []
+        for off, sz, shp, dt in zip(self.offsets, self.sizes, self.shapes,
+                                    self.dtypes):
+            x = flat[off:off + sz].reshape(shp)
+            leaves.append(x.astype(dt) if cast else x)
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def unravel_stacked(self, flat: jnp.ndarray, cast: bool = True) -> Pytree:
+        """``[n, P]`` -> pytree with ``[n, *shape]`` leaves."""
+        n = flat.shape[0]
+        leaves = []
+        for off, sz, shp, dt in zip(self.offsets, self.sizes, self.shapes,
+                                    self.dtypes):
+            x = flat[:, off:off + sz].reshape((n,) + shp)
+            leaves.append(x.astype(dt) if cast else x)
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def make_flat_spec(tree: Pytree, pad_multiple: int = PAD_MULTIPLE) -> FlatSpec:
+    """Build (or fetch from cache) the FlatSpec for ``tree``'s layout.
+
+    ``tree`` may hold arrays or ShapeDtypeStructs; only structure, shapes and
+    dtypes matter.  Safe to call at trace time — everything here is static.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(jnp.shape(x)) for x in leaves)
+    dtypes = tuple(jnp.result_type(x) for x in leaves)
+    key = (treedef, shapes, tuple(np.dtype(d).name for d in dtypes),
+           pad_multiple)
+    spec = _SPEC_CACHE.get(key)
+    if spec is not None:
+        return spec
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    size = int(sum(sizes))
+    padded = max(pad_multiple, -(-size // pad_multiple) * pad_multiple)
+    spec = FlatSpec(treedef, shapes, dtypes, sizes, offsets, size, padded)
+    _SPEC_CACHE[key] = spec
+    return spec

@@ -98,15 +98,10 @@ def simulate(
     if algo.scheduling == "rounds":
         # --- synchronous / round-based disciplines (sync SGD, MIFA) --------
         round_time = float(np.max(speeds.times))  # straggler-bound
-        participate_p = 1.0 if algo.name == "sync_sgd" else 0.8
         while it < total_iters and (max_time is None or t_now < max_time):
             key, *wkeys = jax.random.split(key, n + 1)
             grads, loss_acc = [], 0.0
-            mask = (
-                np.ones(n, bool)
-                if algo.name == "sync_sgd"
-                else rng.random(n) < participate_p
-            )
+            mask = rng.random(n) < algo.participate_p
             if not mask.any():
                 mask[rng.integers(n)] = True
             for i in range(n):
@@ -116,7 +111,7 @@ def simulate(
                 loss_acc += float(loss) * mask[i]
                 n_grads += int(mask[i])
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
-            state, params = on_round(
+            state, params, g_dir = on_round(
                 state, stacked, jnp.asarray(mask), params, lr
             )
             mean_loss = loss_acc / max(1, mask.sum())
@@ -125,7 +120,7 @@ def simulate(
             it += 1
             tau_max = max(tau_max, 1)
             if it % record_every == 0:
-                rec(jax.tree.map(jnp.zeros_like, params0))
+                rec(g_dir)
         return SimResult(
             algo.name, np.array(times), np.array(iters), np.array(losses),
             np.array(gnorms), params, tau_max, n_grads,

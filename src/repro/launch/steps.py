@@ -62,7 +62,14 @@ class TrainOptions:
                                   # gradient all-reduce payload)
     constrain_grads: bool = False  # pin stacked grads to the DuDe-buffer
                                    # sharding so GSPMD emits reduce-scatter
-                                   # instead of all-reduce + local slice
+                                   # instead of all-reduce + local slice.
+                                   # NOTE: constrains the backward output
+                                   # only — the flat ServerEngine slab inside
+                                   # dude_round is laid out by GSPMD
+                                   # (P-axis segment sharding is a ROADMAP
+                                   # open item)
+    backend: str = "reference"     # ServerEngine update path for the DuDe
+                                   # round: reference | indexed | pallas
 
 
 def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
@@ -94,7 +101,7 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
         if buf_sh is not None:
             grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, buf_sh)
         dude_state, g = dude_round(dude_state, grads, start_mask, commit_mask,
-                                   dude_cfg)
+                                   dude_cfg, backend=options.backend)
         params, opt_state = opt.apply(params, g, opt_state)
         return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
 

@@ -27,7 +27,7 @@ from repro.core import (
     truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
-from repro.launch.steps import make_train_step
+from repro.launch.steps import TrainOptions, make_train_step
 from repro.models import lm_init, param_count
 from repro.models.stubs import make_prefix_embeddings
 from repro.optim import adamw, momentum_sgd, sgd
@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--opt", default="sgd", choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--algo", default="dude", choices=["dude", "dude_accum"])
+    ap.add_argument("--server-backend", default="reference",
+                    choices=["reference", "indexed", "pallas"],
+                    help="ServerEngine update path for the DuDe round "
+                         "(pallas = fused kernel; interpret mode on CPU)")
     ap.add_argument("--speed-std", type=float, default=1.0,
                     help="worker speed heterogeneity (paper std)")
     ap.add_argument("--heterogeneity", type=float, default=1.0,
@@ -55,13 +59,18 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
+    if args.algo == "dude_accum" and args.server_backend != "reference":
+        ap.error("--algo dude_accum requires --server-backend reference "
+                 "(accumulate mode is reference-only)")
+
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     n = cfg.n_workers
     key = jax.random.PRNGKey(args.seed)
 
-    print(f"[train] arch={cfg.name} workers={n} devices={jax.device_count()}")
+    print(f"[train] arch={cfg.name} workers={n} devices={jax.device_count()} "
+          f"server-backend={args.server_backend}")
     params = lm_init(key, cfg)
     print(f"[train] params={param_count(params):,}")
 
@@ -74,7 +83,9 @@ def main():
         params = restore_checkpoint(args.ckpt_dir, None, params)
         print("[train] resumed from checkpoint")
 
-    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+    step = jax.jit(make_train_step(
+        cfg, None, opt, dude_cfg,
+        options=TrainOptions(backend=args.server_backend)))
 
     speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
     sch = make_round_schedule(speeds, args.rounds)

@@ -1,0 +1,212 @@
+"""ServerEngine invariants: flat layout round-trips and the three backends
+(reference / indexed / pallas-interpret) agree on random pytrees, masks, and
+buffer dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DuDeConfig, dude_commit, dude_init, dude_round
+from repro.core.dude import masks_to_indices
+from repro.core.engine import BACKENDS, DuDeEngine, masks_to_indices_jnp
+from repro.core.flatten import make_flat_spec
+
+TREES = {
+    "vector": lambda rng: {"w": jnp.asarray(rng.normal(size=7), jnp.float32)},
+    "mixed": lambda rng: {
+        "w": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(), jnp.float32),
+        "emb": jnp.asarray(rng.normal(size=(2, 2, 2)), jnp.float32),
+    },
+}
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------- flatten
+
+
+@pytest.mark.parametrize("tree_kind", list(TREES))
+def test_flatten_round_trip(tree_kind):
+    rng = np.random.default_rng(0)
+    tree = TREES[tree_kind](rng)
+    spec = make_flat_spec(tree)
+    assert spec.padded_size % 128 == 0
+    flat = spec.ravel(tree)
+    assert flat.shape == (spec.padded_size,)
+    # padding is zero-filled
+    np.testing.assert_array_equal(np.asarray(flat[spec.size:]), 0.0)
+    back = spec.unravel(flat)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
+                 tree, back)
+
+
+def test_flatten_round_trip_stacked():
+    rng = np.random.default_rng(1)
+    n = 4
+    stacked = _stack([TREES["mixed"](rng) for _ in range(n)])
+    spec = make_flat_spec(TREES["mixed"](rng))
+    flat = spec.ravel_stacked(stacked)
+    assert flat.shape == (n, spec.padded_size)
+    back = spec.unravel_stacked(flat)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
+                 stacked, back)
+
+
+def test_flatten_spec_cached():
+    rng = np.random.default_rng(2)
+    t1, t2 = TREES["mixed"](rng), TREES["mixed"](rng)
+    assert make_flat_spec(t1) is make_flat_spec(t2)
+
+
+def test_masks_to_indices_jnp_matches_host():
+    rng = np.random.default_rng(3)
+    for n in (1, 4, 9):
+        for _ in range(20):
+            mask = rng.random(n) < 0.5
+            host = masks_to_indices(mask, n, n)
+            traced = np.asarray(masks_to_indices_jnp(jnp.asarray(mask), n))
+            np.testing.assert_array_equal(np.sort(host), np.sort(traced))
+
+
+# --------------------------------------------------- backend equivalence
+
+
+@pytest.mark.parametrize("tree_kind", list(TREES))
+@pytest.mark.parametrize("buf_dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,seed", [(2, 0), (5, 1), (8, 2)])
+def test_backend_equivalence(tree_kind, buf_dtype, n, seed):
+    """reference == indexed == pallas(interpret=True) over many random rounds
+    with arbitrary mask patterns — the tentpole's contract."""
+    rng = np.random.default_rng(seed)
+    cfg = DuDeConfig(n_workers=n, buffer_dtype=buf_dtype)
+    mk = TREES[tree_kind]
+    states = {b: dude_init(mk(rng), cfg) for b in BACKENDS}
+    for t in range(12):
+        fresh = _stack([mk(rng) for _ in range(n)])
+        start = jnp.asarray(rng.random(n) < 0.5)
+        commit = jnp.asarray(rng.random(n) < 0.4)
+        outs = {}
+        for b in BACKENDS:
+            states[b], outs[b] = dude_round(
+                states[b], fresh, start, commit, cfg,
+                backend=b, interpret=True if b == "pallas" else None)
+        for b in ("indexed", "pallas"):
+            jax.tree.map(
+                lambda x, y: np.testing.assert_allclose(
+                    np.asarray(x, np.float32), np.asarray(y, np.float32),
+                    atol=1e-5),
+                outs[b], outs["reference"])
+            jax.tree.map(
+                lambda x, y: np.testing.assert_allclose(
+                    np.asarray(x, np.float32), np.asarray(y, np.float32),
+                    atol=1e-5),
+                states[b], states["reference"])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_commit_equals_one_worker_round(backend):
+    """dude_commit(j, g) == a one-worker dude_round pair: latch g at round r
+    (start = onehot(j)), commit it at round r+1 (commit = onehot(j)).
+    g_bar and g_workers must match exactly."""
+    rng = np.random.default_rng(7)
+    n = 4
+    cfg = DuDeConfig(n_workers=n)
+    mk = TREES["mixed"]
+    st_commit = dude_init(mk(rng), cfg)
+    st_round = dude_init(mk(rng), cfg)
+    zeros = jnp.zeros(n, bool)
+    for t in range(8):
+        j = int(rng.integers(n))
+        g = mk(rng)
+        onehot = jnp.asarray(np.arange(n) == j)
+        st_commit, gbar = dude_commit(st_commit, jnp.int32(j), g, cfg)
+        broadcast = _stack([g for _ in range(n)])
+        st_round, _ = dude_round(st_round, broadcast, onehot, zeros, cfg,
+                                 backend=backend, interpret=True)
+        st_round, gbar_r = dude_round(st_round, broadcast, zeros, onehot, cfg,
+                                      backend=backend, interpret=True)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                     gbar, gbar_r)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                     st_commit.g_workers, st_round.g_workers)
+
+
+# ----------------------------------------------------- engine-level API
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_apply_matches_separate_sgd(backend):
+    """round(params=w, eta) == round() followed by w - eta * g_bar for every
+    backend (the pallas backend folds the apply into the fused pass)."""
+    rng = np.random.default_rng(9)
+    n, eta = 3, 0.05
+    spec = make_flat_spec(jnp.zeros((200,)))
+    eng = DuDeEngine(spec=spec, n_workers=n, backend=backend, interpret=True)
+    P = spec.padded_size
+    state = eng.init()._replace(
+        g_workers=jnp.asarray(rng.normal(size=(n, P)), jnp.float32),
+        inflight=jnp.asarray(rng.normal(size=(n, P)), jnp.float32),
+    )
+    fresh = jnp.asarray(rng.normal(size=(n, P)), jnp.float32)
+    sm = jnp.asarray(rng.random(n) < 0.5)
+    cm = jnp.asarray(rng.random(n) < 0.5)
+    w = jnp.asarray(rng.normal(size=P), jnp.float32)
+    st1, gbar, w_new = eng.round(state, fresh, sm, cm, params=w, eta=eta)
+    st2, gbar2 = eng.round(state, fresh, sm, cm)
+    np.testing.assert_allclose(gbar, gbar2, atol=1e-6)
+    np.testing.assert_allclose(w_new, w - eta * gbar2, atol=1e-6)
+
+
+def test_indexed_width_bound_matches_reference():
+    """index_width = k (a static bound on the active set) must not change
+    results as long as no round exceeds k active workers."""
+    rng = np.random.default_rng(13)
+    n, k = 8, 3
+    spec = make_flat_spec(jnp.zeros((100,)))
+    P = spec.padded_size
+    eng_ref = DuDeEngine(spec=spec, n_workers=n)
+    eng_idx = DuDeEngine(spec=spec, n_workers=n, backend="indexed",
+                         index_width=k)
+    s_ref, s_idx = eng_ref.init(), eng_idx.init()
+    for t in range(10):
+        fresh = jnp.asarray(rng.normal(size=(n, P)), jnp.float32)
+        sm = np.zeros(n, bool)
+        cm = np.zeros(n, bool)
+        sm[rng.choice(n, size=rng.integers(0, k + 1), replace=False)] = True
+        cm[rng.choice(n, size=rng.integers(0, k + 1), replace=False)] = True
+        s_ref, g_ref = eng_ref.round(s_ref, fresh, jnp.asarray(sm),
+                                     jnp.asarray(cm))
+        s_idx, g_idx = eng_idx.round(s_idx, fresh, jnp.asarray(sm),
+                                     jnp.asarray(cm))
+        np.testing.assert_allclose(g_idx, g_ref, atol=1e-5)
+        np.testing.assert_allclose(s_idx.inflight, s_ref.inflight, atol=1e-5)
+    with pytest.raises(ValueError, match="index_width"):
+        DuDeEngine(spec=spec, n_workers=n, index_width=n + 1)
+
+
+def test_accumulate_requires_reference_backend():
+    spec = make_flat_spec(jnp.zeros((8,)))
+    with pytest.raises(ValueError, match="accumulate"):
+        DuDeEngine(spec=spec, n_workers=2, accumulate=True, backend="pallas")
+    with pytest.raises(ValueError, match="backend"):
+        DuDeEngine(spec=spec, n_workers=2, backend="nope")
+
+
+def test_engine_under_jit_and_grad_dtype():
+    """Engine round jits cleanly and accepts non-f32 fresh gradients."""
+    spec = make_flat_spec(jnp.zeros((150,)))
+    eng = DuDeEngine(spec=spec, n_workers=2, buffer_dtype=jnp.bfloat16)
+    P = spec.padded_size
+    state = eng.init()
+    fresh = jnp.ones((2, P), jnp.bfloat16)
+    ones = jnp.ones(2, bool)
+    step = jax.jit(eng.round)
+    state, _ = step(state, fresh, ones, ones)     # latch
+    state, gbar = step(state, fresh, ones, ones)  # commit
+    np.testing.assert_allclose(gbar, np.ones(P), atol=1e-2)
+    assert state.g_workers.dtype == jnp.bfloat16
+    assert int(state.step) == 2
