@@ -8,13 +8,22 @@ plus interpret-mode allclose max-error vs. the oracle as a correctness pulse.
 
 ``--backend {reference,indexed,pallas,all}`` additionally sweeps the
 ServerEngine round over the selected backends on IDENTICAL inputs at several
-(n, P) points, reporting per-backend round latency and the max |g_bar| error
-vs. the reference backend — so the fusion win is measured, not asserted.
+(n, P) points — unsharded, and (whenever more than one device is visible,
+e.g. under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) P-axis
+sharded over all devices — reporting per-backend round latency and the max
+|g_bar| error vs. the reference backend, so the fusion win is measured, not
+asserted.
+
+``--json-out`` (default ``benchmarks/BENCH_2.json``) writes every row as
+machine-readable JSON — backend x (n, P) x sharded/unsharded — so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -40,7 +49,7 @@ def _time(fn, *args, reps=3):
 
 
 def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
-                 commit_frac: float = 0.25) -> list[dict]:
+                 commit_frac: float = 0.25, sharded: bool = False) -> list[dict]:
     """Time one ServerEngine round per backend on identical random inputs.
 
     ``derived`` reports the ANALYTIC HBM-traffic ratio of each backend's
@@ -50,11 +59,22 @@ def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
     4.5x), and the indexed backend — given the static active-set bound
     ``index_width = k`` the benchmark wires in, matching the Bernoulli mask
     density — touches only ~(4k+2)P elements twice.
+
+    ``sharded=True`` runs the same rounds mesh-native: EngineState P-axis
+    sharded over ALL visible devices, shard_map round (requires >1 device).
     """
+    mesh = None
+    ndev = 1
+    if sharded:
+        ndev = jax.device_count()
+        if ndev < 2:
+            raise ValueError("sharded sweep needs >1 device "
+                             "(set --xla_force_host_platform_device_count)")
+        mesh = jax.make_mesh((ndev,), ("p",))
     rows = []
     key = jax.random.PRNGKey(42)
     for n, P in points:
-        spec = make_flat_spec(jnp.zeros((P,)))
+        spec = make_flat_spec(jnp.zeros((P,)), mesh_axis_size=ndev)
         ks = jax.random.split(jax.random.fold_in(key, n * P), 5)
         fresh = jax.random.normal(ks[0], (n, P))
         sm = jax.random.bernoulli(ks[1], commit_frac, (n,))
@@ -62,18 +82,18 @@ def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
         # static bound on |C_t| for the indexed backend (the schedule knows
         # this in real runs; here the masks are concrete)
         k = max(1, int(np.sum(np.asarray(sm))), int(np.sum(np.asarray(cm))))
-        init = None
         ref_gbar = None
         for backend in backends:
             eng = DuDeEngine(spec=spec, n_workers=n, backend=backend,
-                             index_width=k if backend == "indexed" else None)
-            if init is None:
-                init = eng.init()
+                             index_width=k if backend == "indexed" else None,
+                             mesh=mesh, axis_name="p" if mesh else None)
             # pre-populate buffers so the round moves real data
-            state = init._replace(
+            state = eng.init()._replace(
                 g_workers=jax.random.normal(ks[3], (n, P)),
                 inflight=jax.random.normal(ks[4], (n, P)),
             )
+            if mesh is not None:
+                state = jax.device_put(state, eng.shardings())
             step = jax.jit(lambda s, f, a, b, e=eng: e.round(s, f, a, b))
             t = _time(lambda s, f, a, b: step(s, f, a, b)[1],
                       state, fresh, sm, cm)
@@ -92,8 +112,11 @@ def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
                 "pallas": 2 * full,             # one read + one write each
                 "indexed": 2 * (4 * k + 2) * P * F32,  # k-row gather/scatter
             }[backend]
+            tag = "sharded" if sharded else "unsharded"
             rows.append({
-                "name": f"engine/round/{backend}/n{n}_P{P}",
+                "name": f"engine/round/{backend}/n{n}_P{P}/{tag}",
+                "backend": backend, "n": n, "P": spec.padded_size,
+                "sharded": sharded, "devices": ndev,
                 "us_per_call": 1e6 * t,
                 "derived": 9 * full / traffic,
                 "extra": extra,
@@ -104,6 +127,11 @@ def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
+    if jax.device_count() > 1:
+        rows += engine_sweep(backends, sharded=True)
+    else:
+        print("# sharded engine sweep skipped: 1 device "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     key = jax.random.PRNGKey(0)
 
     # --- dude_update: fused streaming op ---------------------------------
@@ -172,8 +200,22 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
+    ap.add_argument("--json-out", default="benchmarks/BENCH_2.json",
+                    help="write rows as machine-readable JSON here "
+                         "('' disables)")
     args = ap.parse_args()
-    for r in run(backend=args.backend):
+    rows = run(backend=args.backend)
+    for r in rows:
         extra = r.get("extra") or {}
         tail = "".join(f",{k}={v:.3g}" for k, v in extra.items())
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.3f}{tail}")
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump({
+                "pr": 2,
+                "device_count": jax.device_count(),
+                "platform": jax.default_backend(),
+                "rows": rows,
+            }, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json_out}")

@@ -11,10 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DuDeConfig, delay_stats, dude_init,
+from repro.core import (DuDeConfig, delay_stats,
                         make_round_schedule, truncated_normal_speeds)
 from repro.data import make_token_sampler
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_engine, make_train_step
 from repro.models import lm_init
 from repro.models.config import ModelConfig
 from repro.optim import sgd
@@ -29,8 +29,9 @@ params = lm_init(jax.random.PRNGKey(0), cfg)
 opt = sgd(0.05)
 opt_state = opt.init(params)
 dude_cfg = DuDeConfig(cfg.n_workers, jnp.float32)
-dude_state = dude_init(params, dude_cfg)
-step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+engine = make_engine(cfg, None, dude_cfg)   # flat [P]/[n, P] server state
+dude_state = engine.init()
+step = jax.jit(make_train_step(cfg, None, opt, dude_cfg, engine=engine))
 
 # heterogeneous speeds (paper §5: s_i ~ TN(1, std)) -> round schedule
 speeds = truncated_normal_speeds(cfg.n_workers, std=1.0, seed=1)

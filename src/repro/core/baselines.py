@@ -75,6 +75,12 @@ class ServerAlgo:
     route: Optional[str] = None  # "uniform" | "shuffled"
     # rounds discipline: per-round worker participation probability
     participate_p: float = 1.0
+    # Host-side mirror of on_gradient's ``applied`` flag: the model update
+    # fires on every ``apply_period``-th gradient arrival (1 = every arrival;
+    # FedBuff = buffer_size, semi-async DuDe = c).  Lets the simulator's
+    # event loop count server iterations WITHOUT a device round-trip per
+    # arrival (``bool(applied)`` would block on the async dispatch queue).
+    apply_period: int = 1
 
 
 # ---------------------------------------------------------------- sync / MIFA
@@ -143,7 +149,8 @@ def _make_fedbuff(n: int, buffer_size: int = 4) -> ServerAlgo:
 
         return jax.lax.cond(cnt >= buffer_size, flush, hold, None)
 
-    return ServerAlgo("fedbuff", "greedy", init_state, on_gradient)
+    return ServerAlgo("fedbuff", "greedy", init_state, on_gradient,
+                      apply_period=buffer_size)
 
 
 # ------------------------------------------------------- asynchronous family
@@ -213,7 +220,8 @@ def _make_dude_semi(n: int, c: int = 2, buffer_dtype=jnp.float32,
 
         return jax.lax.cond(pending >= c, flush, hold, None)
 
-    return ServerAlgo(f"dude_semi_c{c}", "greedy", init_state, on_gradient)
+    return ServerAlgo(f"dude_semi_c{c}", "greedy", init_state, on_gradient,
+                      apply_period=c)
 
 
 def make_algo(name: str, n: int, **kw) -> ServerAlgo:

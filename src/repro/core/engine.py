@@ -23,6 +23,18 @@ Backends agree bit-for-bit on ``g_bar`` (all accumulate the commit delta in
 f32) and on the buffers up to the shared buffer-dtype rounding; the
 equivalence is enforced by ``tests/test_engine.py``.
 
+Mesh-native mode: give the engine ``(mesh, axis_name)`` and every entry
+point runs under ``shard_map`` with the P axis split into the contiguous
+segment ranges of the spec's shard table (``FlatSpec.shard_ranges``) —
+``g_bar`` as ``P(axis)``, the ``[n, P]`` slabs as ``P(None, axis)``, masks
+and scalars replicated.  The round is elementwise on P (the worker-axis sum
+is local to each P-shard), so a sharded round moves ZERO bytes across
+devices; the fused Pallas backend runs per shard with
+``tile = gcd(P/k, DEFAULT_TILE)``.  The spec must be built shard-aligned:
+``make_flat_spec(tree, mesh_axis_size=k)`` with ``k`` the product of the
+chosen mesh axes.  Sharded and unsharded engines agree bit-for-bit on
+``g_bar`` (``tests/test_engine_sharded.py``).
+
 ``core/dude.py`` re-exports the historical pytree API (``dude_commit`` /
 ``dude_round`` / ``dude_round_indexed``) as thin ravel->engine->unravel
 wrappers, so callers keep pytree ergonomics while the hot loop runs on flat
@@ -37,6 +49,9 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from .flatten import FlatSpec, make_flat_spec
 from ..kernels.dude_update import DEFAULT_TILE, dude_update_pallas
@@ -46,6 +61,8 @@ Pytree = Any
 __all__ = ["BACKENDS", "EngineState", "DuDeEngine", "masks_to_indices_jnp"]
 
 BACKENDS = ("reference", "indexed", "pallas")
+
+INDEX_CHECKS = ("debug", "checkify", "off")
 
 
 class EngineState(NamedTuple):
@@ -81,10 +98,25 @@ class DuDeEngine:
     interpret: Optional[bool] = None  # pallas only; None = auto (off on TPU)
     # indexed backend: static width of the in-graph index arrays built from
     # masks.  Must bound the max number of simultaneously starting/committing
-    # workers — excess valid indices are silently dropped (valid indices sort
-    # first, so the bound is on |C_t|, not on n).  None = n (always correct,
-    # but the gather/scatter then touches all n rows and saves no traffic).
+    # workers — excess valid indices are dropped (valid indices sort first,
+    # so the bound is on |C_t|, not on n).  None = n (always correct, but the
+    # gather/scatter then touches all n rows and saves no traffic).  Overflow
+    # is detected per round according to ``index_check``.
     index_width: Optional[int] = None
+    # "debug"    — jax.debug.print a warning from inside the jitted round
+    #              whenever a mask round has more active workers than
+    #              index_width (commits silently dropped otherwise);
+    # "checkify" — checkify.check instead: wrap the round with
+    #              jax.experimental.checkify.checkify to surface the error
+    #              as a real exception;
+    # "off"      — no check (the seed's silent-drop behavior).
+    index_check: str = "debug"
+    # Mesh-native mode: run every entry point under shard_map with the P
+    # axis sharded over ``axis_name`` (a mesh axis name or tuple of names;
+    # None = all axes of ``mesh``).  Requires a shard-aligned spec:
+    # make_flat_spec(tree, mesh_axis_size=<product of those axes>).
+    mesh: Optional[Mesh] = None
+    axis_name: Any = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -98,11 +130,36 @@ class DuDeEngine:
                 1 <= self.index_width <= self.n_workers):
             raise ValueError(
                 f"index_width={self.index_width} outside [1, n_workers]")
+        if self.index_check not in INDEX_CHECKS:
+            raise ValueError(
+                f"unknown index_check {self.index_check!r}; "
+                f"options: {INDEX_CHECKS}")
+        if self.mesh is not None:
+            missing = [a for a in self.paxes if a not in self.mesh.shape]
+            if missing:
+                raise ValueError(
+                    f"axis_name {missing} not in mesh axes "
+                    f"{tuple(self.mesh.axis_names)}")
+            k = self.axis_size
+            if self.P % k != 0:
+                raise ValueError(
+                    f"P={self.P} not divisible by the {k}-way P-axis mesh; "
+                    f"build the spec with make_flat_spec(tree, "
+                    f"mesh_axis_size={k})")
 
     @classmethod
     def for_tree(cls, grad_like: Pytree, n_workers: int, **kw) -> "DuDeEngine":
         """Engine whose flat layout matches ``grad_like``'s pytree layout."""
-        return cls(spec=make_flat_spec(grad_like), n_workers=n_workers, **kw)
+        mesh = kw.get("mesh")
+        k = 1
+        if mesh is not None:
+            axes = kw.get("axis_name") or tuple(mesh.axis_names)
+            if isinstance(axes, str):
+                axes = (axes,)
+            for a in axes:
+                k *= mesh.shape[a]
+        return cls(spec=make_flat_spec(grad_like, mesh_axis_size=k),
+                   n_workers=n_workers, **kw)
 
     # ---------------------------------------------------------- properties
 
@@ -111,30 +168,89 @@ class DuDeEngine:
         return self.spec.padded_size
 
     @property
+    def paxes(self) -> tuple:
+        """Mesh axis names carrying the P shard (empty when unsharded)."""
+        if self.mesh is None:
+            return ()
+        if self.axis_name is None:
+            return tuple(self.mesh.axis_names)
+        if isinstance(self.axis_name, str):
+            return (self.axis_name,)
+        return tuple(self.axis_name)
+
+    @property
+    def axis_size(self) -> int:
+        """Number of P-axis shards (1 when unsharded)."""
+        k = 1
+        for a in self.paxes:
+            k *= self.mesh.shape[a]
+        return k
+
+    @property
+    def shard_P(self) -> int:
+        """Per-device slice of the P axis (== P when unsharded)."""
+        return self.P // self.axis_size
+
+    @property
     def tile(self) -> int:
         # Interpret mode evaluates one Python kernel body per grid step, so
-        # collapse to a single [n, P] program; on hardware use the largest
-        # tile <= DEFAULT_TILE that divides P (P is a multiple of the pad
-        # lane count, so this is always >= PAD_MULTIPLE).
+        # collapse to a single [n, P/k] program; on hardware use the largest
+        # tile <= DEFAULT_TILE that divides the local shard (P/k is a
+        # multiple of the pad lane count, so this is always >= PAD_MULTIPLE).
         if self._interpret():
-            return self.P
-        return math.gcd(self.P, DEFAULT_TILE)
+            return self.shard_P
+        return math.gcd(self.shard_P, DEFAULT_TILE)
 
     def _interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return jax.default_backend() != "tpu"
 
+    # ----------------------------------------------------------- sharding
+
+    def shardings(self) -> EngineState:
+        """NamedShardings for ``EngineState`` on this engine's mesh."""
+        if self.mesh is None:
+            raise ValueError("engine has no mesh")
+        from ..sharding.specs import engine_state_shardings
+        return engine_state_shardings(self.spec, self.mesh, self.paxes)
+
+    def _pspecs(self):
+        """(vec, row, repl, state) PartitionSpecs for shard_map plumbing."""
+        vec = PartitionSpec(self.paxes)
+        row = PartitionSpec(None, self.paxes)
+        repl = PartitionSpec()
+        return vec, row, repl, EngineState(vec, row, row, repl, repl)
+
+    def _shmap(self, body, in_specs, out_specs):
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
     # --------------------------------------------------------------- init
 
     def init(self) -> EngineState:
         n, P = self.n_workers, self.P
-        return EngineState(
+        state = EngineState(
             g_bar=jnp.zeros((P,), jnp.float32),
             g_workers=jnp.zeros((n, P), self.buffer_dtype),
             inflight=jnp.zeros((n, P), self.buffer_dtype),
             acc_count=jnp.zeros((n,), jnp.int32),
             step=jnp.zeros((), jnp.int32),
+        )
+        if self.mesh is not None:
+            state = jax.device_put(state, self.shardings())
+        return state
+
+    def state_shapes(self) -> EngineState:
+        """Abstract ``EngineState`` (ShapeDtypeStructs) for lowering."""
+        n, P = self.n_workers, self.P
+        sds = jax.ShapeDtypeStruct
+        return EngineState(
+            g_bar=sds((P,), jnp.float32),
+            g_workers=sds((n, P), self.buffer_dtype),
+            inflight=sds((n, P), self.buffer_dtype),
+            acc_count=sds((n,), jnp.int32),
+            step=sds((), jnp.int32),
         )
 
     # ------------------------------------------------------------- commit
@@ -144,14 +260,24 @@ class DuDeEngine:
         """Fully-async server iteration (Alg. 1 lines 4-6) on flat ``[P]``.
 
         O(P) work regardless of backend — there is nothing to fuse or index,
-        so all three backends share this implementation.
+        so all three backends share this implementation.  Elementwise on P,
+        so the sharded path is communication-free.
         """
-        g = grad.astype(jnp.float32)
-        old = jax.lax.dynamic_index_in_dim(state.g_workers, worker, axis=0,
-                                           keepdims=False)
-        g_bar = state.g_bar + (g - old.astype(jnp.float32)) / self.n_workers
-        g_workers = jax.lax.dynamic_update_index_in_dim(
-            state.g_workers, g.astype(state.g_workers.dtype), worker, axis=0)
+
+        def body(g_bar, g_workers, w, g):
+            g = g.astype(jnp.float32)
+            old = jax.lax.dynamic_index_in_dim(g_workers, w, axis=0,
+                                               keepdims=False)
+            g_bar = g_bar + (g - old.astype(jnp.float32)) / self.n_workers
+            g_workers = jax.lax.dynamic_update_index_in_dim(
+                g_workers, g.astype(g_workers.dtype), w, axis=0)
+            return g_bar, g_workers
+
+        if self.mesh is not None:
+            vec, row, repl, _ = self._pspecs()
+            body = self._shmap(body, in_specs=(vec, row, repl, vec),
+                               out_specs=(vec, row))
+        g_bar, g_workers = body(state.g_bar, state.g_workers, worker, grad)
         st = state._replace(g_bar=g_bar, g_workers=g_workers,
                             step=state.step + 1)
         return st, g_bar
@@ -173,21 +299,9 @@ class DuDeEngine:
             raise ValueError("params and eta must be given together")
         sm = start_mask.astype(bool)
         cm = commit_mask.astype(bool)
-        new_params = None
-        if self.backend == "pallas":
-            g_bar, gw, infl, new_params = self._round_pallas(
-                state, fresh, sm, cm, params, eta)
-        elif self.backend == "indexed":
-            n = self.n_workers
-            w = self.index_width or n
-            g_bar, gw, infl = self._round_indexed(
-                state, fresh, masks_to_indices_jnp(sm, n)[:w],
-                masks_to_indices_jnp(cm, n)[:w])
-        else:
-            g_bar, gw, infl = self._round_reference(state, fresh, sm, cm)
-        if params is not None and new_params is None:
-            new_params = (params.astype(jnp.float32)
-                          - jnp.float32(eta) * g_bar).astype(params.dtype)
+        self._index_overflow_check(sm, cm)
+        g_bar, gw, infl, new_params = self._run_backend(
+            state, fresh, sm, cm, params, eta)
         st = EngineState(
             g_bar=g_bar, g_workers=gw, inflight=infl,
             acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
@@ -202,13 +316,96 @@ class DuDeEngine:
                       ) -> tuple[EngineState, jnp.ndarray]:
         """Round with host-precomputed padded index arrays (legacy entry
         point of the indexed backend; indices == n are dropped)."""
-        g_bar, gw, infl = self._round_indexed(state, fresh, start_idx,
-                                              commit_idx)
+        if self.accumulate:
+            raise ValueError(
+                "round_indexed cannot express the accumulate running-mean "
+                "latch; use round() with the reference backend")
+
+        def body(st, f, si, ci):
+            return self._round_indexed(st, f, si, ci)
+
+        if self.mesh is not None:
+            vec, row, repl, sspec = self._pspecs()
+            body = self._shmap(body, in_specs=(sspec, row, repl, repl),
+                               out_specs=(vec, row, row))
+        g_bar, gw, infl = body(state, fresh, start_idx, commit_idx)
+        # acc_count follows the same rule as round(): a worker starting a job
+        # this round resets its counter, everyone else accumulates.
+        sm = jnp.zeros((self.n_workers,), bool).at[start_idx].set(
+            True, mode="drop")
         st = EngineState(
             g_bar=g_bar, g_workers=gw, inflight=infl,
-            acc_count=state.acc_count, step=state.step + 1,
+            acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
+            step=state.step + 1,
         )
         return st, g_bar
+
+    # ----------------------------------------------------- backend driver
+
+    def _run_backend(self, state, fresh, sm, cm, params, eta):
+        """Dispatch one round to the backend, under shard_map when meshed.
+
+        The body is elementwise on P (masks/indices are replicated and the
+        worker-axis reduction stays inside each P-shard), so the sharded
+        round needs no collective at all.
+        """
+        has_params = params is not None
+
+        def body(st, f, a, b, *wargs):
+            w = wargs[0] if wargs else None
+            if self.backend == "pallas":
+                g_bar, gw, infl, w_new = self._round_pallas(
+                    st, f, a, b, w, eta)
+            else:
+                if self.backend == "indexed":
+                    n = self.n_workers
+                    k = self.index_width or n
+                    g_bar, gw, infl = self._round_indexed(
+                        st, f, masks_to_indices_jnp(a, n)[:k],
+                        masks_to_indices_jnp(b, n)[:k])
+                else:
+                    g_bar, gw, infl = self._round_reference(st, f, a, b)
+                w_new = None
+                if w is not None:
+                    w_new = (w.astype(jnp.float32)
+                             - jnp.float32(eta) * g_bar).astype(w.dtype)
+            return (g_bar, gw, infl) + ((w_new,) if wargs else ())
+
+        wargs = (params,) if has_params else ()
+        if self.mesh is not None:
+            vec, row, repl, sspec = self._pspecs()
+            body = self._shmap(
+                body,
+                in_specs=(sspec, row, repl, repl) + (vec,) * len(wargs),
+                out_specs=(vec, row, row) + (vec,) * len(wargs))
+        out = body(state, fresh, sm, cm, *wargs)
+        return out[0], out[1], out[2], (out[3] if has_params else None)
+
+    def _index_overflow_check(self, sm, cm):
+        """Satellite of the indexed backend: |C_t| > index_width silently
+        drops real commits — surface it per ``index_check``."""
+        if self.backend != "indexed" or self.index_check == "off":
+            return
+        width = self.index_width or self.n_workers
+        if width >= self.n_workers:
+            return  # full width can never drop
+        n_active = jnp.maximum(jnp.sum(sm.astype(jnp.int32)),
+                               jnp.sum(cm.astype(jnp.int32)))
+        if self.index_check == "checkify":
+            checkify.check(
+                n_active <= width,
+                "DuDeEngine(indexed): {na} active workers exceed "
+                "index_width={w}; excess commits/latches are dropped",
+                na=n_active, w=jnp.int32(width))
+            return
+
+        def warn(na):
+            jax.debug.print(
+                "WARNING: DuDeEngine(indexed): {na} active workers exceed "
+                f"index_width={width}; excess commits/latches are DROPPED",
+                na=na)
+
+        jax.lax.cond(n_active > width, warn, lambda na: None, n_active)
 
     # ----------------------------------------------------------- backends
 
@@ -249,7 +446,9 @@ class DuDeEngine:
         return g_bar, gw, infl
 
     def _round_pallas(self, state, fresh, sm, cm, params, eta):
-        """Fused single-pass kernel; optional in-pass SGD apply."""
+        """Fused single-pass kernel; optional in-pass SGD apply.  Under
+        shard_map the kernel sees the local ``[n, P/k]`` slabs and tiles
+        them with ``gcd(P/k, DEFAULT_TILE)``."""
         w = params if params is not None else jnp.zeros_like(state.g_bar)
         gw, infl, g_bar, w_new = dude_update_pallas(
             cm, sm, fresh.astype(jnp.float32), state.g_workers,

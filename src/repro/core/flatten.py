@@ -13,6 +13,15 @@ so ravel is a cast+reshape+concat and unravel is a slice+reshape+cast — both
 fuse into neighbouring ops under jit.  Padding is zero-filled and ignored on
 unravel; zeros are a fixed point of every engine update, so the pad lanes
 never contaminate real state.
+
+Shard-aligned layout: ``make_flat_spec(tree, mesh_axis_size=k)`` pads ``P``
+up to a multiple of ``k * PAD_MULTIPLE`` so the flat vector splits into ``k``
+contiguous, equally sized, lane-aligned shards — one per device on a P-axis
+mesh.  The split is purely positional (segment ranges, not leaf boundaries):
+a shard may own the tail of one leaf and the head of the next, and all pad
+lanes land in the trailing shard, so no shard ever needs remote elements.
+``shard_ranges`` / ``shard_segments`` expose the resulting per-shard segment
+table for sharding rules, checkpoint layouts, and debugging.
 """
 
 from __future__ import annotations
@@ -43,7 +52,34 @@ class FlatSpec:
     sizes: tuple           # per-leaf element counts
     offsets: tuple         # per-leaf start offset into the flat vector
     size: int              # sum(sizes), before padding
-    padded_size: int       # P: size rounded up to PAD_MULTIPLE
+    padded_size: int       # P: size rounded up to mesh_axis_size*PAD_MULTIPLE
+    mesh_axis_size: int = 1  # k: number of contiguous P-axis shards
+
+    # ----------------------------------------------------------- sharding
+
+    @property
+    def shard_size(self) -> int:
+        """Elements per P-axis shard (``P / k``; a PAD_MULTIPLE multiple)."""
+        return self.padded_size // self.mesh_axis_size
+
+    def shard_ranges(self) -> tuple:
+        """Per-shard ``(start, stop)`` offsets into the flat vector.  Shard
+        ``s`` owns the contiguous slice ``[s*P/k, (s+1)*P/k)``; all pad lanes
+        (offsets >= ``size``) fall in the trailing shard(s)."""
+        w = self.shard_size
+        return tuple((s * w, (s + 1) * w) for s in range(self.mesh_axis_size))
+
+    def shard_segments(self, shard: int) -> tuple:
+        """Segment table of one shard: ``(leaf_index, leaf_start, leaf_stop)``
+        triples giving, in leaf-local element coordinates, the slice of each
+        leaf that shard ``shard`` owns.  Pad lanes are not listed."""
+        lo, hi = self.shard_ranges()[shard]
+        out = []
+        for i, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
+            a, b = max(lo, off), min(hi, off + sz)
+            if a < b:
+                out.append((i, a - off, b - off))
+        return tuple(out)
 
     # ------------------------------------------------------------- ravel
 
@@ -93,24 +129,33 @@ class FlatSpec:
 _SPEC_CACHE: dict = {}
 
 
-def make_flat_spec(tree: Pytree, pad_multiple: int = PAD_MULTIPLE) -> FlatSpec:
+def make_flat_spec(tree: Pytree, pad_multiple: int = PAD_MULTIPLE,
+                   mesh_axis_size: int = 1) -> FlatSpec:
     """Build (or fetch from cache) the FlatSpec for ``tree``'s layout.
 
     ``tree`` may hold arrays or ShapeDtypeStructs; only structure, shapes and
     dtypes matter.  Safe to call at trace time — everything here is static.
+
+    ``mesh_axis_size=k`` makes the layout shard-aligned: ``P`` is padded to a
+    multiple of ``k * pad_multiple`` so the vector splits into ``k`` equal
+    contiguous lane-aligned shards (see ``FlatSpec.shard_ranges``).
     """
+    if mesh_axis_size < 1:
+        raise ValueError(f"mesh_axis_size={mesh_axis_size} must be >= 1")
     leaves, treedef = jax.tree.flatten(tree)
     shapes = tuple(tuple(jnp.shape(x)) for x in leaves)
     dtypes = tuple(jnp.result_type(x) for x in leaves)
     key = (treedef, shapes, tuple(np.dtype(d).name for d in dtypes),
-           pad_multiple)
+           pad_multiple, mesh_axis_size)
     spec = _SPEC_CACHE.get(key)
     if spec is not None:
         return spec
     sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
     offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
     size = int(sum(sizes))
-    padded = max(pad_multiple, -(-size // pad_multiple) * pad_multiple)
-    spec = FlatSpec(treedef, shapes, dtypes, sizes, offsets, size, padded)
+    chunk = pad_multiple * mesh_axis_size
+    padded = max(chunk, -(-size // chunk) * chunk)
+    spec = FlatSpec(treedef, shapes, dtypes, sizes, offsets, size, padded,
+                    mesh_axis_size)
     _SPEC_CACHE[key] = spec
     return spec

@@ -146,6 +146,12 @@ def simulate(
             shuffle_order = list(rng.permutation(n))
         return int(shuffle_order.pop())
 
+    # ``applied`` is mirrored host-side from the algo's static apply_period
+    # (FedBuff flushes every buffer_size-th arrival, etc.) so the event loop
+    # never blocks on a device round-trip per gradient arrival — the jitted
+    # server updates stay queued on the async dispatch stream and only
+    # synchronize at record points.
+    pending = 0
     while it < total_iters and (max_time is None or t_now < max_time):
         t_now, i = heapq.heappop(heap)
         key, k1 = jax.random.split(key)
@@ -153,10 +159,14 @@ def simulate(
         loss, g = grad_fn(worker_params[i], batch, k1)
         n_grads += 1
         tau_max = max(tau_max, it + 1 - version_iter[i])
-        state, params, applied = on_gradient(state, jnp.int32(i), g, params, lr)
-        it += 1 if bool(applied) else 0
-        lossf = float(loss)
-        running = lossf if running is None else ema * running + (1 - ema) * lossf
+        state, params, _applied = on_gradient(state, jnp.int32(i), g, params, lr)
+        pending += 1
+        applied = pending >= algo.apply_period
+        if applied:
+            pending = 0
+            it += 1
+        # device-side EMA: no host sync per arrival, float()-ed only at record
+        running = loss if running is None else ema * running + (1 - ema) * loss
 
         if algo.scheduling == "greedy":
             worker_params[i] = params

@@ -22,7 +22,9 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import ARCH_IDS, get_config           # noqa: E402
 from repro.core.dude import DuDeConfig                   # noqa: E402
 from repro.launch.costs import model_flops_6nd, param_counts, roofline  # noqa: E402
-from repro.launch.hlo_analysis import analyze_collectives, memory_stats  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    analyze_collectives, cost_analysis_dict, memory_stats,
+)
 from repro.launch.mesh import HW, make_production_mesh, mesh_num_devices  # noqa: E402
 from repro.launch.steps import (                          # noqa: E402
     INPUT_SHAPES,
@@ -58,13 +60,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
         with mesh:
             if kind == "train":
                 dude_cfg = DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
-                (st_shapes, st_sh) = abstract_train_state(cfg, mesh, dude_cfg=dude_cfg)
-                (b_shapes, mask_sds), (b_sh, mask_sh) = train_batch_specs(
-                    cfg, mesh, shape_name
-                )
                 options = (
                     TrainOptions(grad_dtype=jnp.bfloat16, constrain_grads=True)
                     if optimized else TrainOptions()
+                )
+                (st_shapes, st_sh) = abstract_train_state(
+                    cfg, mesh, dude_cfg=dude_cfg, options=options)
+                (b_shapes, mask_sds), (b_sh, mask_sh) = train_batch_specs(
+                    cfg, mesh, shape_name
                 )
                 step = make_train_step(cfg, mesh, dude_cfg=dude_cfg,
                                        options=options)
@@ -104,7 +107,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
         rec["t_lower_s"] = round(t_lower, 1)
         rec["t_compile_s"] = round(t_compile, 1)
         rec["memory"] = memory_stats(compiled)
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec["xla_cost"] = {
             "flops": float(ca.get("flops", -1)),
             "bytes": float(ca.get("bytes accessed", -1)),

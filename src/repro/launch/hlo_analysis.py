@@ -163,6 +163,15 @@ def analyze_collectives(hlo: str, default_trip: int = 1) -> dict:
     }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one flat dict (newer jax
+    returns a list with one dict per device)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def memory_stats(compiled) -> dict:
     ma = compiled.memory_analysis()
     return {

@@ -4,22 +4,35 @@ serving path, plus ShapeDtypeStruct ``input_specs`` for the dry-run.
 train_step semantics (semi-async DuDe round):
   1. every worker group computes the gradient of the live model on its own
      heterogeneous shard — one vmapped backward, worker axis leading;
-  2. ``dude_round`` latches starting workers' gradients and commits finishing
-     workers' deltas (host-precomputed masks from the speed model);
+  2. the ServerEngine round latches starting workers' gradients and commits
+     finishing workers' deltas (host-precomputed masks from the speed model);
   3. the optimizer applies the dual-delayed aggregated direction g^t.
+
+Since the mesh-native ServerEngine refactor the train loop's DuDe state IS
+the engine's flat ``EngineState`` (padded ``[P]``/``[n, P]`` slabs), sharded
+on the P axis by the segment ranges of the ``FlatSpec`` shard table.  The
+stacked gradients are raveled to the same ``[n, P]`` layout right after the
+vmapped backward; with ``constrain_grads`` the ravel happens INSIDE a
+``with_sharding_constraint`` pinned to the slab sharding, so GSPMD emits a
+reduce-scatter straight into the shard each device owns instead of
+all-reduce + local slice.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.dude import DuDeConfig, DuDeState, dude_init, dude_round
+from ..core.dude import DuDeConfig
+from ..core.engine import DuDeEngine, EngineState
+from ..core.flatten import make_flat_spec
 from ..models import decode_step as model_decode_step
 from ..models import forward, init_decode_caches, lm_init, loss_fn, prefill
 from ..models.config import ModelConfig
@@ -29,6 +42,7 @@ from ..sharding import (
     batch_sharding,
     cache_shardings,
     dude_state_shardings,
+    engine_state_shardings,
     make_shard_hook,
     param_shardings,
 )
@@ -58,54 +72,146 @@ def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
 @dataclasses.dataclass(frozen=True)
 class TrainOptions:
     """Beyond-paper §Perf knobs (defaults == paper-faithful baseline)."""
-    grad_dtype: Any = None        # cast per-worker grads (bf16 halves the
-                                  # gradient all-reduce payload)
-    constrain_grads: bool = False  # pin stacked grads to the DuDe-buffer
-                                   # sharding so GSPMD emits reduce-scatter
-                                   # instead of all-reduce + local slice.
-                                   # NOTE: constrains the backward output
-                                   # only — the flat ServerEngine slab inside
-                                   # dude_round is laid out by GSPMD
-                                   # (P-axis segment sharding is a ROADMAP
-                                   # open item)
+    grad_dtype: Any = None        # ravel the stacked grads in this dtype
+                                  # (bf16 halves the gradient-reduction
+                                  # payload feeding the DuDe buffers)
+    constrain_grads: bool = False  # wrap the grad ravel in a
+                                   # with_sharding_constraint pinned to the
+                                   # engine's [n, P] slab sharding so GSPMD
+                                   # emits reduce-scatter into the owned
+                                   # shard instead of all-reduce + slice
     backend: str = "reference"     # ServerEngine update path for the DuDe
                                    # round: reference | indexed | pallas
+    shard_engine: bool = True      # P-axis shard the EngineState over the
+                                   # mesh and run the round under shard_map
+                                   # (mesh-native engine); False keeps the
+                                   # engine layout up to GSPMD
+
+
+def make_engine(cfg: ModelConfig, mesh=None,
+                dude_cfg: Optional[DuDeConfig] = None,
+                options: TrainOptions = TrainOptions()) -> DuDeEngine:
+    """The ServerEngine the train step runs — mesh-native when a mesh is
+    given and ``options.shard_engine``: the flat spec is built shard-aligned
+    (``mesh_axis_size`` = total device count) and every round runs under
+    shard_map with the P axis split by segment ranges across ALL mesh axes
+    (the DuDe slabs are pure elementwise state, so the full mesh shards
+    them regardless of the params' TP/FSDP layout)."""
+    dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+    engine_mesh = mesh if (mesh is not None and options.shard_engine) else None
+    paxes = None
+    if engine_mesh is not None:
+        # 'data' leads the P-axis hierarchy so the explicit gradient
+        # reduce-scatter (constrain_grads) lands chunks in engine order
+        paxes = tuple(sorted(engine_mesh.axis_names,
+                             key=lambda a: (a != "data",)))
+    return DuDeEngine.for_tree(
+        abstract_params(cfg), dude_cfg.n_workers,
+        buffer_dtype=dude_cfg.buffer_dtype or jnp.float32,
+        accumulate=dude_cfg.accumulate, backend=options.backend,
+        mesh=engine_mesh, axis_name=paxes,
+    )
 
 
 def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                     dude_cfg: Optional[DuDeConfig] = None,
-                    options: TrainOptions = TrainOptions()) -> Callable:
+                    options: TrainOptions = TrainOptions(),
+                    engine: Optional[DuDeEngine] = None) -> Callable:
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+    engine = engine or make_engine(cfg, mesh, dude_cfg, options)
     shard = make_shard_hook(mesh)
 
-    buf_sh = None
+    gdt = options.grad_dtype or jnp.float32
+    flat_sh = None      # [n, P] slab sharding for the raveled grads
+    leaf_sh = None      # legacy per-leaf constraint (unsharded engine)
+    rs_fn = None        # explicit reduce-scatter into the owned P-shard
     if options.constrain_grads and mesh is not None:
-        params_abs = abstract_params(cfg)
-        buf_sh = dude_state_shardings(params_abs, mesh,
-                                      dude_cfg.n_workers)["g_workers"]
+        if engine.mesh is not None:
+            flat_sh = engine.shardings().g_workers
+            if "data" in engine.paxes and mesh.shape["data"] > 1:
+                rs_fn = _grad_reduce_scatter(mesh, engine.paxes)
+        else:
+            leaf_sh = dude_state_shardings(abstract_params(cfg), mesh,
+                                           dude_cfg.n_workers)["g_workers"]
+    D = mesh.shape["data"] if rs_fn is not None else 1
 
     def per_worker_grad(params, wbatch):
         (total, metrics), grads = jax.value_and_grad(
             lambda p: loss_fn(p, wbatch, cfg, shard=shard), has_aux=True
         )(params)
-        if options.grad_dtype is not None:
-            grads = jax.tree.map(
-                lambda g: g.astype(options.grad_dtype), grads
-            )
         return grads, metrics["loss"]
 
-    def train_step(params, opt_state, dude_state: DuDeState, batch,
+    def train_step(params, opt_state, dude_state: EngineState, batch,
                    start_mask, commit_mask):
-        grads, losses = jax.vmap(per_worker_grad, in_axes=(None, 0))(params, batch)
-        if buf_sh is not None:
-            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, buf_sh)
-        dude_state, g = dude_round(dude_state, grads, start_mask, commit_mask,
-                                   dude_cfg, backend=options.backend)
+        # GSPMD's partitioner lowers "all-reduce then consume a shard" as
+        # all-reduce + dynamic-slice; to get a true reduce-scatter into the
+        # engine's P-shards, the data-axis reduction of the gradient is made
+        # EXPLICIT: split every worker's batch into its 'data'-axis slices
+        # at the vmap level (the backward then produces per-slice partial
+        # gradients that stay resident on their shard) and psum-scatter the
+        # raveled slab straight into the shard each device owns.
+        split = (D > 1 and all(x.ndim >= 2 and x.shape[1] % D == 0
+                               for x in jax.tree.leaves(batch)))
+        vbatch = batch
+        if split:
+            vbatch = jax.tree.map(
+                lambda x: jnp.swapaxes(
+                    x.reshape((x.shape[0], D, x.shape[1] // D)
+                              + x.shape[2:]), 0, 1
+                ).reshape((D * x.shape[0], x.shape[1] // D) + x.shape[2:]),
+                batch)
+        grads, losses = jax.vmap(per_worker_grad, in_axes=(None, 0))(params, vbatch)
+        if leaf_sh is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, leaf_sh)
+        # ravel INSIDE the constraint: the stacked backward output lands
+        # directly in the engine's slab layout instead of whatever per-leaf
+        # layout GSPMD would pick for the pytree.
+        fresh = engine.spec.ravel_stacked(grads, gdt)
+        if split:
+            # [D*n, P] partial grads, rows resident per data-shard
+            fresh = jax.lax.with_sharding_constraint(
+                fresh, NamedSharding(mesh, P("data", None)))
+            fresh = rs_fn(fresh)  # -> [n, P] in the engine slab sharding
+        elif flat_sh is not None:
+            fresh = jax.lax.with_sharding_constraint(fresh, flat_sh)
+        dude_state, g_flat = engine.round(dude_state, fresh,
+                                          start_mask, commit_mask)
+        g = engine.spec.unravel(g_flat)
         params, opt_state = opt.apply(params, g, opt_state)
         return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
 
     return train_step
+
+
+def _grad_reduce_scatter(mesh, paxes: tuple) -> Callable:
+    """shard_map reducing ``[D*n, P]`` per-slice partial gradients to the
+    ``[n, P]`` round input, P-axis sharded exactly like the engine slabs.
+
+    Rows arrive grouped slice-major (``row = d*n + i``), so each data-shard
+    holds one ``[n, P]`` partial sum; ``psum_scatter`` over 'data' emits the
+    reduce-scatter HLO (2(D-1)/D · nP bytes — half an all-reduce) and lands
+    each device's P-chunk directly; the remaining P axes of ``paxes`` are
+    carved out by a local slice (their copies are identical, no traffic).
+    """
+    assert paxes[0] == "data"
+    D = mesh.shape["data"]
+    rest = paxes[1:]
+
+    def body(gv):  # [n, P] local partial sums (this shard's batch slice)
+        g = jax.lax.psum_scatter(gv, "data", scatter_dimension=1,
+                                 tiled=True) / D
+        if rest:
+            m = math.prod(mesh.shape[a] for a in rest)
+            idx = jnp.int32(0)
+            for a in rest:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            w = g.shape[1] // m
+            g = jax.lax.dynamic_slice_in_dim(g, idx * w, w, axis=1)
+        return g
+
+    return shard_map(body, mesh=mesh, in_specs=P("data", None),
+                     out_specs=P(None, paxes), check_rep=False)
 
 
 def make_prefill_step(cfg: ModelConfig, mesh=None) -> Callable:
@@ -143,21 +249,24 @@ def abstract_params(cfg: ModelConfig):
 
 
 def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
-                         dude_cfg: Optional[DuDeConfig] = None):
-    """Returns (arg_shapes, arg_shardings) for params/opt/dude state."""
+                         dude_cfg: Optional[DuDeConfig] = None,
+                         options: TrainOptions = TrainOptions(),
+                         engine: Optional[DuDeEngine] = None):
+    """Returns (arg_shapes, arg_shardings) for params/opt/engine state.
+
+    The DuDe entry is the flat ``EngineState`` of ``make_engine`` — P-axis
+    sharded via ``engine_state_shardings`` when the engine is mesh-native,
+    replicated otherwise.
+    """
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
+    engine = engine or make_engine(cfg, mesh, dude_cfg, options)
     params = abstract_params(cfg)
     opt_state = jax.eval_shape(opt.init, params)
-    dude_state = jax.eval_shape(partial(dude_init, cfg=dude_cfg), params)
+    dude_state = engine.state_shapes()
 
     p_sh = param_shardings(params, mesh)
-    d_sh_dict = dude_state_shardings(params, mesh, dude_cfg.n_workers)
-    dude_sh = DuDeState(
-        g_bar=d_sh_dict["g_bar"], g_workers=d_sh_dict["g_workers"],
-        inflight=d_sh_dict["inflight"], acc_count=d_sh_dict["acc_count"],
-        step=d_sh_dict["step"],
-    )
+    dude_sh = engine_state_shardings(engine.spec, mesh, engine.paxes or ())
     repl = NamedSharding(mesh, P())
     o_sh = jax.tree.map(lambda _: repl, opt_state)
     # momentum/adam slots shard like params

@@ -23,11 +23,10 @@ import numpy as np
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.core import (
-    DuDeConfig, delay_stats, dude_init, make_round_schedule,
-    truncated_normal_speeds,
+    DuDeConfig, delay_stats, make_round_schedule, truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
-from repro.launch.steps import TrainOptions, make_train_step
+from repro.launch.steps import TrainOptions, make_engine, make_train_step
 from repro.models import lm_init, param_count
 from repro.models.stubs import make_prefix_embeddings
 from repro.optim import adamw, momentum_sgd, sgd
@@ -78,14 +77,17 @@ def main():
     opt_state = opt.init(params)
     dude_cfg = DuDeConfig(n, cfg.dude_buffer_dtype if not args.smoke else jnp.float32,
                           accumulate=args.algo == "dude_accum")
-    dude_state = dude_init(params, dude_cfg)
+    options = TrainOptions(backend=args.server_backend)
+    # flat ServerEngine state: [P] g_bar + [n, P] slabs (P-axis sharded when
+    # a mesh is given — single-device here, so unsharded)
+    engine = make_engine(cfg, None, dude_cfg, options)
+    dude_state = engine.init()
     if args.resume and args.ckpt_dir:
         params = restore_checkpoint(args.ckpt_dir, None, params)
         print("[train] resumed from checkpoint")
 
-    step = jax.jit(make_train_step(
-        cfg, None, opt, dude_cfg,
-        options=TrainOptions(backend=args.server_backend)))
+    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg,
+                                   options=options, engine=engine))
 
     speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
     sch = make_round_schedule(speeds, args.rounds)

@@ -3,12 +3,14 @@ from .specs import (
     cache_shardings,
     dp_axes,
     dude_state_shardings,
+    engine_state_shardings,
     make_shard_hook,
     param_shardings,
     param_spec,
 )
 
 __all__ = [
-    "param_spec", "param_shardings", "dude_state_shardings", "batch_sharding",
-    "cache_shardings", "make_shard_hook", "dp_axes",
+    "param_spec", "param_shardings", "dude_state_shardings",
+    "engine_state_shardings", "batch_sharding", "cache_shardings",
+    "make_shard_hook", "dp_axes",
 ]

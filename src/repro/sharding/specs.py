@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core.engine import EngineState
+from ..core.flatten import FlatSpec
+
 Pytree = Any
 
 # param names whose rank-2 kernel is "down-like": (model, data) instead of
@@ -147,6 +150,39 @@ def dude_state_shardings(params: Pytree, mesh: Mesh, n_workers: int) -> dict:
         "g_bar": gbar, "g_workers": buf, "inflight": buf,
         "acc_count": vec, "step": scalar,
     }
+
+
+def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
+                           axes: Any = None) -> EngineState:
+    """NamedShardings for the flat ``EngineState`` of a ServerEngine.
+
+    The P axis is split into the contiguous segment ranges of the spec's
+    shard table (``FlatSpec.shard_ranges``): ``g_bar`` is ``P(axes)``, the
+    ``[n, P]`` slabs are ``P(None, axes)`` (worker axis replicated — workers
+    are rows, P-shards are columns), ``acc_count``/``step`` replicated.
+
+    ``axes`` — mesh axis name(s) carrying the P shard; None = all mesh axes.
+    Following the module's convention, an axis product that does not divide
+    ``spec.padded_size`` drops to replication (build the spec with
+    ``make_flat_spec(tree, mesh_axis_size=k)`` to guarantee divisibility).
+    """
+    if axes is None:
+        axes = tuple(mesh.axis_names)
+    elif isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    k = _axsize(mesh, axes)
+    if not axes or k <= 1 or spec.padded_size % k != 0:
+        vec, row = P(), P()
+    else:
+        vec, row = P(axes), P(None, axes)
+    return EngineState(
+        g_bar=NamedSharding(mesh, vec),
+        g_workers=NamedSharding(mesh, row),
+        inflight=NamedSharding(mesh, row),
+        acc_count=NamedSharding(mesh, P()),
+        step=NamedSharding(mesh, P()),
+    )
 
 
 def dp_axes(mesh: Mesh):

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.dude import DuDeConfig
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_engine, make_train_step
 from repro.models import forward, lm_init, loss_fn, param_count
 from repro.models.stubs import make_prefix_embeddings, token_shape
 from repro.optim import sgd
@@ -60,9 +60,9 @@ def test_smoke_train_step(arch):
     dude_cfg = DuDeConfig(n, jnp.float32)
     opt = sgd(0.01)
     opt_state = opt.init(params)
-    from repro.core.dude import dude_init
-    dude_state = dude_init(params, dude_cfg)
-    step = make_train_step(cfg, None, opt, dude_cfg)
+    engine = make_engine(cfg, None, dude_cfg)
+    dude_state = engine.init()
+    step = make_train_step(cfg, None, opt, dude_cfg, engine=engine)
     batch, _ = _smoke_batch(cfg, key, B=1, S=16, worker_dim=n)
     ones = jnp.ones(n, bool)
     p0 = jax.tree.leaves(params)[0]

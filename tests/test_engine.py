@@ -188,6 +188,102 @@ def test_indexed_width_bound_matches_reference():
         DuDeEngine(spec=spec, n_workers=n, index_width=n + 1)
 
 
+def test_indexed_overflow_warns_and_drops(capfd):
+    """index_width overflow: valid indices sort first, so the LOWEST worker
+    indices win and the excess commits are dropped — behavior pinned here —
+    and the in-graph jax.debug guard must announce the drop."""
+    rng = np.random.default_rng(21)
+    n, k = 8, 2
+    spec = make_flat_spec(jnp.zeros((64,)))
+    P = spec.padded_size
+    eng = DuDeEngine(spec=spec, n_workers=n, backend="indexed", index_width=k)
+    ref_eng = DuDeEngine(spec=spec, n_workers=n)
+    state = eng.init()._replace(
+        g_workers=jnp.asarray(rng.normal(size=(n, P)), jnp.float32),
+        inflight=jnp.asarray(rng.normal(size=(n, P)), jnp.float32))
+    fresh = jnp.asarray(rng.normal(size=(n, P)), jnp.float32)
+    none = jnp.zeros(n, bool)
+    over = jnp.asarray(np.isin(np.arange(n), [1, 4, 6]))  # 3 commits > k=2
+    _, gbar = jax.jit(eng.round)(state, fresh, none, over)
+    jax.effects_barrier()
+    warned = capfd.readouterr()
+    assert "DROPPED" in warned.out + warned.err, (warned.out, warned.err)
+    # pinned semantics: only the k lowest active indices commit
+    kept = jnp.asarray(np.isin(np.arange(n), [1, 4]))
+    _, gbar_ref = ref_eng.round(state, fresh, none, kept)
+    np.testing.assert_allclose(gbar, gbar_ref, atol=1e-6)
+    # no overflow -> no warning
+    ok = jnp.asarray(np.isin(np.arange(n), [3]))
+    capfd.readouterr()
+    jax.jit(eng.round)(state, fresh, none, ok)
+    jax.effects_barrier()
+    quiet = capfd.readouterr()
+    assert "DROPPED" not in quiet.out + quiet.err
+
+
+def test_indexed_overflow_warning_text(capfd):
+    rng = np.random.default_rng(22)
+    n, k = 6, 2
+    spec = make_flat_spec(jnp.zeros((32,)))
+    eng = DuDeEngine(spec=spec, n_workers=n, backend="indexed", index_width=k)
+    fresh = jnp.asarray(rng.normal(size=(n, spec.padded_size)), jnp.float32)
+    over = jnp.asarray(np.arange(n) < 3)
+    jax.jit(eng.round)(eng.init(), fresh, over, over)
+    jax.effects_barrier()
+    cap = capfd.readouterr()
+    assert "DROPPED" in cap.out + cap.err, (cap.out, cap.err)
+
+
+def test_indexed_overflow_checkify_raises():
+    from jax.experimental import checkify
+    rng = np.random.default_rng(23)
+    n, k = 6, 2
+    spec = make_flat_spec(jnp.zeros((32,)))
+    eng = DuDeEngine(spec=spec, n_workers=n, backend="indexed",
+                     index_width=k, index_check="checkify")
+    fresh = jnp.asarray(rng.normal(size=(n, spec.padded_size)), jnp.float32)
+    none = jnp.zeros(n, bool)
+    checked = checkify.checkify(lambda s, f, a, b: eng.round(s, f, a, b))
+    err, _ = checked(eng.init(), fresh, none, jnp.asarray(np.arange(n) < 3))
+    with pytest.raises(Exception, match="index_width"):
+        err.throw()
+    err, _ = checked(eng.init(), fresh, none, jnp.asarray(np.arange(n) < 2))
+    err.throw()  # within the bound: no error
+
+
+def test_round_indexed_acc_count_matches_round():
+    """round() and round_indexed() must agree on the FULL state — including
+    acc_count, which the seed's round_indexed left untouched."""
+    rng = np.random.default_rng(24)
+    n = 6
+    spec = make_flat_spec(jnp.zeros((100,)))
+    P = spec.padded_size
+    eng = DuDeEngine(spec=spec, n_workers=n, backend="indexed")
+    s_mask, s_idx = eng.init(), eng.init()
+    for t in range(8):
+        fresh = jnp.asarray(rng.normal(size=(n, P)), jnp.float32)
+        sm = rng.random(n) < 0.5
+        cm = rng.random(n) < 0.4
+        s_mask, g1 = eng.round(s_mask, fresh, jnp.asarray(sm), jnp.asarray(cm))
+        s_idx, g2 = eng.round_indexed(
+            s_idx, fresh,
+            jnp.asarray(masks_to_indices(sm, n, n)),
+            jnp.asarray(masks_to_indices(cm, n, n)))
+        np.testing.assert_allclose(g1, g2, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(s_mask.acc_count),
+                                      np.asarray(s_idx.acc_count))
+        assert int(s_mask.step) == int(s_idx.step)
+
+
+def test_round_indexed_accumulate_raises():
+    spec = make_flat_spec(jnp.zeros((8,)))
+    eng = DuDeEngine(spec=spec, n_workers=2, accumulate=True)
+    st = eng.init()
+    with pytest.raises(ValueError, match="accumulate"):
+        eng.round_indexed(st, jnp.zeros((2, spec.padded_size)),
+                          jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32))
+
+
 def test_accumulate_requires_reference_backend():
     spec = make_flat_spec(jnp.zeros((8,)))
     with pytest.raises(ValueError, match="accumulate"):

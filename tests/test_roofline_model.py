@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.launch.costs import forward_flops, model_flops_6nd, param_counts
+from repro.launch.hlo_analysis import cost_analysis_dict as _cost_analysis
 from repro.models import forward, lm_init
 from repro.models.config import ModelConfig
 
@@ -27,8 +28,9 @@ def test_scan_bodies_counted_once():
         return x
 
     xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-    fl_scan = jax.jit(f_scan).lower(xs, xs).compile().cost_analysis()["flops"]
-    fl_unr = jax.jit(f_unrolled).lower(xs, xs).compile().cost_analysis()["flops"]
+    fl_scan = _cost_analysis(jax.jit(f_scan).lower(xs, xs).compile())["flops"]
+    fl_unr = _cost_analysis(
+        jax.jit(f_unrolled).lower(xs, xs).compile())["flops"]
     assert fl_unr > 8 * fl_scan
 
 
@@ -57,7 +59,7 @@ def test_forward_flops_matches_xla(cfgkw):
         jax.jit(lambda p, b: forward(p, b, cfg)[0])
         .lower(params, batch).compile()
     )
-    xla_flops = compiled.cost_analysis()["flops"]
+    xla_flops = _cost_analysis(compiled)["flops"]
 
     # analytic model at the same shape
     import repro.launch.costs as costs

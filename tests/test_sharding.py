@@ -46,8 +46,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, json
 from repro.configs import get_config
-from repro.core.dude import DuDeConfig, dude_init
-from repro.launch.steps import make_train_step, train_batch_specs, abstract_train_state
+from repro.core.dude import DuDeConfig
+from repro.launch.steps import make_engine, make_train_step, train_batch_specs, abstract_train_state
 from repro.models import lm_init
 from repro.optim import sgd
 import numpy as np
@@ -58,12 +58,13 @@ n = cfg.n_workers
 dude_cfg = DuDeConfig(n, jnp.float32)
 with mesh:
     st_shapes, st_sh = abstract_train_state(cfg, mesh, dude_cfg=dude_cfg)
-    step = make_train_step(cfg, mesh, dude_cfg=dude_cfg)
-    # real (non-abstract) state, sharded
+    engine = make_engine(cfg, mesh, dude_cfg)
+    step = make_train_step(cfg, mesh, dude_cfg=dude_cfg, engine=engine)
+    # real (non-abstract) state, sharded (engine.init() lands P-axis sharded)
     params = jax.device_put(lm_init(jax.random.PRNGKey(0), cfg), st_sh[0])
     opt = sgd(0.01)
     opt_state = opt.init(params)
-    dude_state = jax.device_put(dude_init(params, dude_cfg), st_sh[2])
+    dude_state = engine.init()
     key = jax.random.PRNGKey(1)
     S = 64
     batch = {

@@ -12,11 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    DuDeConfig, dude_init, make_algo, make_round_schedule, simulate,
+    DuDeConfig, make_algo, make_round_schedule, simulate,
     truncated_normal_speeds,
 )
 from repro.data import class_gaussian_images, dirichlet_partition, make_sample_fn
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_engine, make_train_step
 from repro.models import lm_init
 from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
 from repro.models.config import ModelConfig
@@ -54,6 +54,29 @@ def test_cnn_dude_beats_vanilla_under_heterogeneity():
     assert accs["dude_asgd"] >= accs["vanilla_asgd"] - 0.02, accs
 
 
+def test_apply_period_mirrors_device_flag():
+    """The simulator counts server iterations from the host-side
+    ``apply_period`` mirror instead of bool(applied)-syncing per arrival —
+    the mirror must agree with the device flag for every algorithm."""
+    from repro.core import make_algo
+    like = {"w": jnp.zeros(8)}
+    for name, kw in (("fedbuff", {}), ("dude_semi", {"c": 2}),
+                     ("dude_asgd", {}), ("vanilla_asgd", {})):
+        algo = make_algo(name, 4, **kw)
+        state = algo.init_state(like)
+        params = like
+        pending = 0
+        for t in range(9):
+            g = {"w": jnp.full(8, float(t))}
+            state, params, applied = algo.on_gradient(
+                state, jnp.int32(t % 4), g, params, 0.1)
+            pending += 1
+            host = pending >= algo.apply_period
+            if host:
+                pending = 0
+            assert bool(applied) == host, (name, t)
+
+
 def test_spmd_train_loop_loss_decreases():
     cfg = ModelConfig(
         name="tiny", arch_type="dense", num_layers=2, d_model=64, num_heads=4,
@@ -66,8 +89,9 @@ def test_spmd_train_loop_loss_decreases():
     opt = sgd(0.05)
     opt_state = opt.init(params)
     dude_cfg = DuDeConfig(n, jnp.float32)
-    dude_state = dude_init(params, dude_cfg)
-    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg))
+    engine = make_engine(cfg, None, dude_cfg)
+    dude_state = engine.init()
+    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg, engine=engine))
 
     speeds = truncated_normal_speeds(n, std=1.0, seed=2)
     sch = make_round_schedule(speeds, rounds=30)
