@@ -14,9 +14,14 @@ sharded over all devices — reporting per-backend round latency and the max
 |g_bar| error vs. the reference backend, so the fusion win is measured, not
 asserted.
 
-``--json-out`` (default ``benchmarks/BENCH_2.json``) writes every row as
-machine-readable JSON — backend x (n, P) x sharded/unsharded — so the perf
-trajectory is tracked across PRs.
+The fused round+apply path (flat-state training) is swept separately:
+backend x optimizer (sgd/momentum/adamw) on identical inputs, unsharded and
+— with >1 device — P-axis sharded, with max |params| error vs. the
+reference-backend flat apply as the correctness pulse.
+
+``--json-out`` (default ``benchmarks/BENCH_3.json``) writes every row as
+machine-readable JSON — backend x (n, P) x sharded/unsharded plus the
+round+apply grid — so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -34,10 +39,18 @@ from repro.core.engine import BACKENDS, DuDeEngine
 from repro.core.flatten import make_flat_spec
 from repro.kernels import ref
 from repro.kernels.ops import dude_update, flash_attention, flash_decode
+from repro.optim import flat_adamw, flat_momentum_sgd, flat_sgd
+from repro.sharding import flat_train_state_shardings
 
 F32 = 4
 
 ENGINE_POINTS = ((8, 1 << 12), (16, 1 << 14), (64, 1 << 16))
+
+FLAT_OPTS = {
+    "sgd": flat_sgd(0.05),
+    "momentum": flat_momentum_sgd(0.05),
+    "adamw": flat_adamw(0.01, weight_decay=0.01),
+}
 
 
 def _time(fn, *args, reps=3):
@@ -124,11 +137,93 @@ def engine_sweep(backends=BACKENDS, points=ENGINE_POINTS,
     return rows
 
 
+def round_apply_sweep(backends=BACKENDS, opts=tuple(FLAT_OPTS),
+                      point=(16, 1 << 14), commit_frac: float = 0.25,
+                      sharded: bool = False) -> list[dict]:
+    """Time the FUSED round+apply (flat-state training hot path) per
+    backend x optimizer on identical inputs.
+
+    The round streams the [n, P] slabs; the apply adds the [P] master
+    params plus 0/1/2 slot slabs, all in one pass (one shard_map; the
+    pallas backend folds the slot math into the kernel).  ``derived`` is
+    the analytic traffic ratio of the UNFUSED baseline (round + separate
+    optimizer apply re-reading g_bar/params/slots) over the fused pass.
+    Correctness pulse: max |params| error vs. the reference backend.
+    """
+    mesh = None
+    ndev = 1
+    if sharded:
+        ndev = jax.device_count()
+        if ndev < 2:
+            raise ValueError("sharded sweep needs >1 device")
+        mesh = jax.make_mesh((ndev,), ("p",))
+    n, P = point
+    rows = []
+    key = jax.random.PRNGKey(7)
+    spec = make_flat_spec(jnp.zeros((P,)), mesh_axis_size=ndev)
+    ks = jax.random.split(key, 6)
+    fresh = jax.random.normal(ks[0], (n, P))
+    sm = jax.random.bernoulli(ks[1], commit_frac, (n,))
+    cm = jax.random.bernoulli(ks[2], commit_frac, (n,))
+    w0 = jax.random.normal(ks[5], (spec.padded_size,))
+    # static active-set bound for the indexed backend, as in engine_sweep
+    k = max(1, int(np.sum(np.asarray(sm))), int(np.sum(np.asarray(cm))))
+    for opt_name in opts:
+        fopt = FLAT_OPTS[opt_name]
+        n_slots = len(jax.tree.leaves(fopt.init_slots(w0)))
+        ref_w = None
+        for backend in backends:
+            eng = DuDeEngine(spec=spec, n_workers=n, backend=backend,
+                             index_width=k if backend == "indexed" else None,
+                             mesh=mesh, axis_name="p" if mesh else None)
+            state = eng.init()._replace(
+                g_workers=jax.random.normal(ks[3], (n, spec.padded_size)),
+                inflight=jax.random.normal(ks[4], (n, spec.padded_size)),
+            )
+            w, ost = w0, fopt.init(w0)
+            if mesh is not None:
+                state = jax.device_put(state, eng.shardings())
+                sh = flat_train_state_shardings(spec, mesh, ("p",), ost)
+                w = jax.device_put(w, sh.params)
+                ost = jax.device_put(ost, sh.opt)
+            step = jax.jit(lambda s, f, a, b, w, o, e=eng, fo=fopt:
+                           e.round_apply(s, f, a, b, w, o, fo))
+            t = _time(lambda s, f, a, b, w, o: step(s, f, a, b, w, o)[2],
+                      state, fresh, sm, cm, w, ost)
+            _, _, w_new, _ = step(state, fresh, sm, cm, w, ost)
+            extra = {}
+            if backend == "reference":
+                ref_w = w_new
+                extra["w_err_vs_reference"] = 0.0
+            elif ref_w is not None:
+                extra["w_err_vs_reference"] = float(
+                    jnp.max(jnp.abs(w_new - ref_w)))
+            Pp = spec.padded_size
+            # fused: one read + one write of every stream; unfused: the
+            # ~9-pass round plus an apply re-reading g_bar/w/slots
+            fused = 2 * ((3 * n + 2) * Pp + (1 + n_slots) * Pp) * F32
+            unfused = (9 * (3 * n + 2) * Pp
+                       + 2 * (2 + 2 * n_slots) * Pp) * F32
+            tag = "sharded" if sharded else "unsharded"
+            rows.append({
+                "name": f"engine/round_apply/{backend}/{opt_name}/"
+                        f"n{n}_P{Pp}/{tag}",
+                "backend": backend, "optimizer": opt_name,
+                "n": n, "P": Pp, "sharded": sharded, "devices": ndev,
+                "us_per_call": 1e6 * t,
+                "derived": unfused / fused,
+                "extra": extra,
+            })
+    return rows
+
+
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
+    rows += round_apply_sweep(backends)
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
+        rows += round_apply_sweep(backends, sharded=True)
     else:
         print("# sharded engine sweep skipped: 1 device "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
@@ -200,7 +295,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_2.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_3.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -213,7 +308,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 2,
+                "pr": 3,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

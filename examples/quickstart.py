@@ -5,6 +5,13 @@ protocol (mode B): 4 workers with heterogeneous speeds, per-worker data
 skew, incremental server aggregation.
 
   PYTHONPATH=src python examples/quickstart.py
+
+The production driver additionally offers flat-state training, which keeps
+master params + optimizer slots in the engine's flat [P] layout and fuses
+the round with the optimizer apply (zero-collective on a mesh):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --rounds 50 --seq-len 64 --per-worker-batch 2 --flat-optimizer
 """
 
 import jax

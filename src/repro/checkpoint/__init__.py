@@ -1,3 +1,15 @@
-from .ckpt import latest_step, restore_checkpoint, save_checkpoint
+from .ckpt import (
+    checkpoint_format,
+    latest_step,
+    restore_checkpoint,
+    restore_flat_from_pytree,
+    restore_params_from_flat,
+    save_checkpoint,
+    spec_manifest,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "checkpoint_format", "restore_params_from_flat",
+    "restore_flat_from_pytree", "spec_manifest",
+]

@@ -1,11 +1,28 @@
 """Checkpointing: pytree -> npz payload + msgpack manifest.
 
 Layout:  <dir>/step_<N>/arrays.npz  (leaf i -> "a<i>")
-         <dir>/step_<N>/manifest.msgpack  (treedef repr, paths, shapes, dtypes)
+         <dir>/step_<N>/manifest.msgpack  (treedef repr, paths, shapes,
+         dtypes, format, optional flat-spec segment table)
 
 Arrays are gathered to host (fine for CPU and for per-host sharded saves —
 a real multi-host deployment would write per-process shards; the manifest
 format already records logical paths so that extension is local to save/load).
+
+Logical dtypes: numpy's npz cannot serialize ``ml_dtypes`` (bfloat16), so
+bf16 leaves are stored as ``uint16`` views.  The manifest's ``dtypes`` entry
+always records the LOGICAL per-leaf dtype; the uint16 round-trip lives in
+exactly one encode/decode pair (``_encode_array`` / ``_decode_array``).
+
+Flat-state checkpoints: ``save_checkpoint(..., flat_spec=spec)`` marks the
+checkpoint ``format: "flat"`` and embeds the spec's segment table
+(``spec_manifest``) so a restore can (a) validate the layout, (b) refit the
+padded ``[P]`` slabs when the restoring mesh has a different
+``mesh_axis_size`` (the real ``size`` prefix is invariant; only the pad tail
+changes), and (c) convert between flat and legacy pytree checkpoints:
+``restore_params_from_flat`` unravels a flat checkpoint's master params into
+a param pytree, ``restore_flat_from_pytree`` ravels a legacy params
+checkpoint into a ``FlatTrainState`` — so existing checkpoints keep loading
+in either direction.
 """
 
 from __future__ import annotations
@@ -21,6 +38,64 @@ import numpy as np
 
 Pytree = Any
 
+PARAMS_PATH = ".params"  # FlatTrainState master-params leaf in a flat ckpt
+
+
+# ------------------------------------------------- logical-dtype encoding
+
+def _encode_array(a: np.ndarray) -> tuple[np.ndarray, str]:
+    """Host array -> (npz-serializable array, logical dtype string)."""
+    dt = str(a.dtype)
+    if dt == "bfloat16":  # numpy can't serialize ml_dtypes
+        return a.view(np.uint16), dt
+    return a, dt
+
+
+def _decode_array(a: np.ndarray, logical_dtype: str) -> np.ndarray:
+    """Inverse of ``_encode_array``: restore the logical dtype view."""
+    if logical_dtype == "bfloat16":
+        import ml_dtypes
+        return a.view(ml_dtypes.bfloat16)
+    return a
+
+
+# --------------------------------------------------------- spec manifest
+
+def spec_manifest(spec) -> dict:
+    """Serializable segment table of a ``core.flatten.FlatSpec``."""
+    return {
+        "sizes": list(spec.sizes),
+        "offsets": list(spec.offsets),
+        "shapes": [list(s) for s in spec.shapes],
+        "dtypes": [str(np.dtype(d)) for d in spec.dtypes],
+        "size": spec.size,
+        "padded_size": spec.padded_size,
+        "mesh_axis_size": spec.mesh_axis_size,
+    }
+
+
+def _check_spec_compatible(stored: dict, spec) -> None:
+    """The stored layout must describe the same leaves in the same order;
+    only the pad tail (``padded_size`` / ``mesh_axis_size``) may differ."""
+    want = spec_manifest(spec)
+    for k in ("sizes", "offsets", "shapes", "dtypes", "size"):
+        if stored.get(k) != want[k]:
+            raise ValueError(
+                f"flat checkpoint segment table mismatch at {k!r}: "
+                f"stored {stored.get(k)!r} != expected {want[k]!r}")
+
+
+def _refit_flat(arr: np.ndarray, old_p: int, new_p: int, real: int) -> np.ndarray:
+    """Resize the trailing padded-P dim ``old_p -> new_p`` keeping the real
+    ``[:real]`` prefix (pad lanes are zeros by construction)."""
+    if old_p == new_p:
+        return arr
+    out = np.zeros(arr.shape[:-1] + (new_p,), arr.dtype)
+    out[..., :real] = arr[..., :real]
+    return out
+
+
+# ------------------------------------------------------------ save / load
 
 def _paths_and_leaves(tree: Pytree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -33,17 +108,16 @@ def _paths_and_leaves(tree: Pytree):
     return paths, [l for _, l in flat]
 
 
-def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
+def save_checkpoint(directory: str, step: int, tree: Pytree,
+                    flat_spec=None) -> str:
     d = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     paths, leaves = _paths_and_leaves(tree)
     arrays = {}
     dtypes = []
     for i, l in enumerate(leaves):
-        a = np.asarray(jax.device_get(l))
-        dtypes.append(str(a.dtype))
-        if str(a.dtype) == "bfloat16":  # numpy can't serialize ml_dtypes
-            a = a.view(np.uint16)
+        a, dt = _encode_array(np.asarray(jax.device_get(l)))
+        dtypes.append(dt)
         arrays[f"a{i}"] = a
     np.savez(os.path.join(d, "arrays.npz"), **arrays)
     manifest = {
@@ -51,36 +125,111 @@ def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
         "paths": paths,
         "shapes": [list(a.shape) for a in arrays.values()],
         "dtypes": dtypes,
+        "format": "flat" if flat_spec is not None else "pytree",
     }
+    if flat_spec is not None:
+        manifest["flat_spec"] = spec_manifest(flat_spec)
     with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
     return d
 
 
-def restore_checkpoint(directory: str, step: Optional[int], like: Pytree) -> Pytree:
-    """Restore into the structure of ``like`` (validates paths/shapes)."""
+def _step_dir(directory: str, step: Optional[int]) -> str:
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
-    d = os.path.join(directory, f"step_{step:08d}")
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _load(directory: str, step: Optional[int]):
+    d = _step_dir(directory, step)
     with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     data = np.load(os.path.join(d, "arrays.npz"))
+    return manifest, data
+
+
+def checkpoint_format(directory: str, step: Optional[int] = None) -> str:
+    """``"flat"`` | ``"pytree"`` (checkpoints predating the field are
+    pytree)."""
+    manifest, _ = _load(directory, step)
+    return manifest.get("format", "pytree")
+
+
+def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
+                       flat_spec=None) -> Pytree:
+    """Restore into the structure of ``like`` (validates paths/shapes).
+
+    With ``flat_spec`` given and a flat checkpoint whose segment table
+    matches, padded ``[..., P]`` slabs saved under a different
+    ``mesh_axis_size`` are refitted to the current padded size.
+    """
+    manifest, data = _load(directory, step)
     paths, leaves = _paths_and_leaves(like)
     if paths != manifest["paths"]:
         raise ValueError("checkpoint structure mismatch")
+    stored_spec = manifest.get("flat_spec")
+    refit = None
+    if flat_spec is not None and stored_spec is not None:
+        _check_spec_compatible(stored_spec, flat_spec)
+        refit = (stored_spec["padded_size"], flat_spec.padded_size,
+                 stored_spec["size"])
     flat, treedef = jax.tree_util.tree_flatten(like)
     out = []
     for i, ref in enumerate(flat):
-        arr = data[f"a{i}"]
-        if manifest["dtypes"][i] == "bfloat16":
-            import ml_dtypes
-            arr = arr.view(ml_dtypes.bfloat16)
+        arr = _decode_array(data[f"a{i}"], manifest["dtypes"][i])
+        if (refit is not None and arr.ndim >= 1
+                and arr.shape[-1] == refit[0]
+                and tuple(ref.shape[:-1]) == arr.shape[:-1]
+                and ref.shape[-1] == refit[1]):
+            arr = _refit_flat(arr, *refit)
         if list(arr.shape) != list(ref.shape):
             raise ValueError(f"shape mismatch at {paths[i]}: {arr.shape} vs {ref.shape}")
         out.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------- flat <-> pytree conversion
+
+def restore_params_from_flat(directory: str, step: Optional[int],
+                             params_like: Pytree) -> Pytree:
+    """Master params of a FLAT checkpoint, unraveled into the pytree layout
+    of ``params_like`` — a pytree-mode run resuming from a flat-mode run."""
+    from ..core.flatten import make_flat_spec
+    manifest, data = _load(directory, step)
+    stored_spec = manifest.get("flat_spec")
+    if manifest.get("format") != "flat" or stored_spec is None:
+        raise ValueError("not a flat checkpoint; use restore_checkpoint")
+    spec = make_flat_spec(params_like)
+    _check_spec_compatible(stored_spec, spec)
+    try:
+        i = manifest["paths"].index(PARAMS_PATH)
+    except ValueError:
+        raise ValueError(
+            f"flat checkpoint has no {PARAMS_PATH!r} leaf "
+            f"(paths: {manifest['paths'][:4]}...)") from None
+    flat = _decode_array(data[f"a{i}"], manifest["dtypes"][i])
+    # unravel reads only offsets below spec.size (validated equal above), so
+    # the stored pad tail needs no refit regardless of mesh_axis_size
+    return spec.unravel(jnp.asarray(flat))
+
+
+def restore_flat_from_pytree(directory: str, step: Optional[int],
+                             like, spec):
+    """A LEGACY params-pytree checkpoint, raveled into the flat layout —
+    a flat-mode run resuming from a pytree-mode run.
+
+    ``like`` is the freshly initialized ``FlatTrainState``; only its master
+    params are overwritten (the legacy checkpoint carries no flat optimizer
+    slots or engine slabs).
+    """
+    sds = jax.ShapeDtypeStruct
+    params_like = jax.tree_util.tree_unflatten(
+        spec.treedef, [sds(s, d) for s, d in zip(spec.shapes, spec.dtypes)])
+    params = restore_checkpoint(directory, step, params_like)
+    pf = spec.ravel(params, jnp.float32)
+    return like._replace(params=jax.device_put(pf, like.params.sharding))
 
 
 def latest_step(directory: str) -> Optional[int]:

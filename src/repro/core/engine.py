@@ -5,7 +5,9 @@ buffer state.  ``DuDeEngine`` owns that state in ONE canonical layout —
 ``g_bar`` as a padded flat ``[P]`` f32 vector, ``g_workers``/``inflight`` as
 ``[n, P]`` slabs in the configured buffer dtype — and exposes the two paper
 entry points (``commit`` for the fully-async mode, ``round`` for the
-semi-async SPMD mode) over three interchangeable backends:
+semi-async SPMD mode), plus ``round_apply`` — the round fused with a flat
+optimizer apply on ``[P]`` master params and slot slabs (the flat-state
+training path) — over three interchangeable backends:
 
 * ``"reference"`` — masked jnp sweep over all n rows; the paper-faithful
   oracle (identical math to the historical ``dude_round``), and the only
@@ -54,7 +56,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
 from .flatten import FlatSpec, make_flat_spec
-from ..kernels.dude_update import DEFAULT_TILE, dude_update_pallas
+from ..kernels.dude_update import (
+    DEFAULT_TILE, SLOT_STREAMS, dude_round_apply_pallas, dude_update_pallas,
+)
+from ..optim.transforms import FlatOptState, FlatOptimizer
 
 Pytree = Any
 
@@ -340,7 +345,83 @@ class DuDeEngine:
         )
         return st, g_bar
 
+    # -------------------------------------------------- fused round+apply
+
+    def round_apply(self, state: EngineState, fresh: jnp.ndarray,
+                    start_mask: jnp.ndarray, commit_mask: jnp.ndarray,
+                    params: jnp.ndarray, opt_state: FlatOptState,
+                    opt: FlatOptimizer):
+        """DuDe round fused with the flat optimizer apply, under ONE
+        shard_map.
+
+        ``params`` is the flat ``[P]`` f32 master-parameter vector and
+        ``opt_state`` the flat slot slabs (``optim.transforms``), both
+        sharded exactly like ``g_bar``.  The optimizer step is elementwise
+        on P (its only scalar input, the replicated step counter, rides
+        along), so the whole server iteration — commit, latch, slot update,
+        parameter step — moves ZERO bytes between devices.  The pallas
+        backend streams the slots through the fused kernel
+        (``dude_round_apply_pallas``); the other backends run the round and
+        then ``opt.update`` inside the same shard_map body.
+
+        Returns ``(state', g_bar, params', opt_state')``.
+        """
+        sm = start_mask.astype(bool)
+        cm = commit_mask.astype(bool)
+        self._index_overflow_check(sm, cm)
+        t_new = opt_state.step + 1
+        slots = opt_state.slots
+        fused = self.backend == "pallas" and opt.name in SLOT_STREAMS
+
+        def body(st, f, a, b, w, t, sl):
+            if fused:
+                bc = None
+                if opt.name == "adamw":
+                    hp = opt.hp
+                    t32 = t.astype(jnp.float32)
+                    bc = jnp.stack([1 - hp["b1"] ** t32, 1 - hp["b2"] ** t32])
+                leaves, sdef = jax.tree_util.tree_flatten(sl)
+                gw, infl, g_bar, w_new, new_leaves = dude_round_apply_pallas(
+                    b, a, f.astype(jnp.float32), st.g_workers, st.inflight,
+                    st.g_bar, w, tuple(leaves), bc, kind=opt.name,
+                    hp=opt.hparams, tile=self.tile,
+                    interpret=self._interpret())
+                sl_new = jax.tree_util.tree_unflatten(sdef, list(new_leaves))
+            else:
+                g_bar, gw, infl = self._round_plain(st, f, a, b)
+                w_new, sl_new = opt.update(w, g_bar, sl, t)
+            return g_bar, gw, infl, w_new, sl_new
+
+        if self.mesh is not None:
+            vec, row, repl, sspec = self._pspecs()
+            slot_specs = jax.tree.map(lambda _: vec, slots)
+            body = self._shmap(
+                body,
+                in_specs=(sspec, row, repl, repl, vec, repl, slot_specs),
+                out_specs=(vec, row, row, vec, slot_specs))
+        g_bar, gw, infl, w_new, sl_new = body(
+            state, fresh, sm, cm, params, t_new, slots)
+        st = EngineState(
+            g_bar=g_bar, g_workers=gw, inflight=infl,
+            acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
+            step=state.step + 1,
+        )
+        return st, g_bar, w_new, FlatOptState(t_new, sl_new)
+
     # ----------------------------------------------------- backend driver
+
+    def _round_plain(self, st, f, a, b):
+        """One round on the configured backend (no fused apply), from bool
+        masks; returns ``(g_bar, g_workers, inflight)``."""
+        if self.backend == "pallas":
+            g_bar, gw, infl, _ = self._round_pallas(st, f, a, b, None, None)
+            return g_bar, gw, infl
+        if self.backend == "indexed":
+            n = self.n_workers
+            k = self.index_width or n
+            return self._round_indexed(st, f, masks_to_indices_jnp(a, n)[:k],
+                                       masks_to_indices_jnp(b, n)[:k])
+        return self._round_reference(st, f, a, b)
 
     def _run_backend(self, state, fresh, sm, cm, params, eta):
         """Dispatch one round to the backend, under shard_map when meshed.
@@ -357,14 +438,7 @@ class DuDeEngine:
                 g_bar, gw, infl, w_new = self._round_pallas(
                     st, f, a, b, w, eta)
             else:
-                if self.backend == "indexed":
-                    n = self.n_workers
-                    k = self.index_width or n
-                    g_bar, gw, infl = self._round_indexed(
-                        st, f, masks_to_indices_jnp(a, n)[:k],
-                        masks_to_indices_jnp(b, n)[:k])
-                else:
-                    g_bar, gw, infl = self._round_reference(st, f, a, b)
+                g_bar, gw, infl = self._round_plain(st, f, a, b)
                 w_new = None
                 if w is not None:
                     w_new = (w.astype(jnp.float32)

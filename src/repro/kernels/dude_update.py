@@ -4,15 +4,24 @@ The server hot loop (paper Alg. 1 lines 4-6 + the semi-async variant) is a
 pure streaming op over Theta(n * p) buffer state: per round it must
   commit:  g_bar += sum_i cm_i * (inflight_i - G~_i) / n ;  G~_i <- inflight_i
   latch:   inflight_i <- fresh_i  (where start_i)
-  apply:   w <- w - eta * g_bar
+  apply:   w <- w - eta * g^t      (plus optimizer slot streams, see below)
 Arithmetic intensity is O(1) flops/byte => HBM-bandwidth-bound, so the win is
-FUSION: one pass over the five streams instead of the ~9 separate elementwise
+FUSION: one pass over the streams instead of the ~9 separate elementwise
 HLO ops XLA emits, plus no intermediate materialization.
+
+The apply is not limited to plain SGD: ``dude_round_apply_pallas`` streams
+the optimizer slot slabs (momentum ``m``, AdamW ``{m, v}`` — flat ``[P]``
+vectors in the same segment-range layout as ``g_bar``) through the same
+single pass, computing the slot update and the parameter step tile-by-tile.
+The optimizer math mirrors ``optim.transforms.FlatOptimizer.update``
+op-for-op, so the fused path is bit-exact against the unfused flat apply.
+AdamW's bias corrections depend only on the (replicated) step counter, so
+the caller computes them once and passes two scalars in.
 
 Grid: 1-D over tiles of the flattened parameter vector.  Each program
 instance owns a [n_workers, TILE] slab of the stacked buffers and a [TILE]
-slice of g_bar/params in VMEM.  TILE defaults to 2048 lanes x 8 sublanes
-f32 = 64 KiB per stream — five streams resident fit easily in 128 MiB VMEM
+slice of g_bar/params/slots in VMEM.  TILE defaults to 2048 lanes x 8
+sublanes f32 = 64 KiB per stream — all streams resident fit easily in VMEM
 while keeping the DMA pipeline deep.
 """
 
@@ -26,10 +35,23 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TILE = 16384  # f32 elements per program instance per stream row
 
+# slot streams per optimizer kind: () | ("m",) | ("m", "v")
+SLOT_STREAMS = {"sgd": 0, "momentum": 1, "adamw": 2}
 
-def _dude_kernel(cm_ref, sm_ref, fresh_ref, gw_ref, infl_ref, gbar_ref,
-                 w_ref, gw_out, infl_out, gbar_out, w_out, *, n_workers: int,
-                 eta: float):
+
+def _round_apply_kernel(*refs, n_workers: int, kind: str, hp: tuple):
+    """One [*, TILE] tile: DuDe round + fused optimizer apply.
+
+    refs layout (in): cm[n], sm[n], fresh[n,T], gw[n,T], infl[n,T], gbar[T],
+    w[T], slots*[T], (bc[2] for adamw); (out): gw, infl, gbar, w, slots*.
+    """
+    hp = dict(hp)
+    n_slots = SLOT_STREAMS[kind]
+    n_in = 7 + n_slots + (1 if kind == "adamw" else 0)
+    (cm_ref, sm_ref, fresh_ref, gw_ref, infl_ref, gbar_ref, w_ref,
+     *rest_in) = refs[:n_in]
+    gw_out, infl_out, gbar_out, w_out, *slot_outs = refs[n_in:]
+
     cm = cm_ref[...].astype(jnp.float32)  # [n]
     sm = sm_ref[...]                       # [n] bool
     fresh = fresh_ref[...].astype(jnp.float32)   # [n, T]
@@ -38,14 +60,98 @@ def _dude_kernel(cm_ref, sm_ref, fresh_ref, gw_ref, infl_ref, gbar_ref,
     gbar = gbar_ref[...]                          # [T] f32
 
     delta = cm[:, None] * (infl - gw)
-    gbar_new = gbar + jnp.sum(delta, axis=0) / n_workers
+    g = gbar + jnp.sum(delta, axis=0) / n_workers
     gw_new = jnp.where(cm[:, None] > 0, infl, gw)
     infl_new = jnp.where(sm[:, None], fresh, infl)
 
     gw_out[...] = gw_new.astype(gw_out.dtype)
     infl_out[...] = infl_new.astype(infl_out.dtype)
-    gbar_out[...] = gbar_new
-    w_out[...] = w_ref[...] - jnp.float32(eta) * gbar_new
+    gbar_out[...] = g
+
+    # ------- fused optimizer apply (mirrors FlatOptimizer.update) -------
+    w = w_ref[...]
+    if kind == "sgd":
+        w_out[...] = w - hp["lr"] * g
+    elif kind == "momentum":
+        (m_ref,) = rest_in
+        m = hp["beta"] * m_ref[...] + g
+        d = hp["beta"] * m + g if hp["nesterov"] else m
+        w_out[...] = w - hp["lr"] * d
+        slot_outs[0][...] = m
+    elif kind == "adamw":
+        m_ref, v_ref, bc_ref = rest_in
+        b1, b2 = hp["b1"], hp["b2"]
+        m = b1 * m_ref[...] + (1 - b1) * g
+        v = b2 * v_ref[...] + (1 - b2) * jnp.square(g)
+        bc = bc_ref[...]
+        bc1, bc2 = bc[0], bc[1]
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + hp["eps"]) \
+            + hp["weight_decay"] * w
+        w_out[...] = w - hp["lr"] * step
+        slot_outs[0][...] = m
+        slot_outs[1][...] = v
+    else:
+        raise ValueError(f"unknown optimizer kind {kind!r}")
+
+
+def dude_round_apply_pallas(
+    commit_mask: jnp.ndarray,   # [n] bool
+    start_mask: jnp.ndarray,    # [n] bool
+    fresh: jnp.ndarray,         # [n, P] fresh gradients (live model)
+    g_workers: jnp.ndarray,     # [n, P] buffer dtype
+    inflight: jnp.ndarray,      # [n, P] buffer dtype
+    g_bar: jnp.ndarray,         # [P] f32
+    w: jnp.ndarray,             # [P] f32 flat master params
+    slots: tuple = (),          # optimizer slot slabs, each [P] f32
+    bias_corr: jnp.ndarray | None = None,  # [2] f32 (adamw only)
+    *,
+    kind: str = "sgd",
+    hp: tuple = (("lr", 0.0),),
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+):
+    """Fused round + optimizer apply.  Returns
+    ``(g_workers', inflight', g_bar', w', slots')``."""
+    n, P = fresh.shape
+    assert g_workers.shape == (n, P) and inflight.shape == (n, P)
+    assert g_bar.shape == (P,) and w.shape == (P,)
+    n_slots = SLOT_STREAMS[kind]
+    assert len(slots) == n_slots, (kind, len(slots))
+    assert all(s.shape == (P,) for s in slots)
+    assert (bias_corr is not None) == (kind == "adamw")
+    tile = min(tile, P)
+    assert P % tile == 0, f"P={P} % tile={tile}"
+    grid = (P // tile,)
+
+    row = pl.BlockSpec((n, tile), lambda i: (0, i))
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    mask = pl.BlockSpec((n,), lambda i: (0,))
+    sc2 = pl.BlockSpec((2,), lambda i: (0,))
+
+    in_specs = [mask, mask, row, row, row, vec, vec] + [vec] * n_slots
+    args = [commit_mask.astype(jnp.float32), start_mask, fresh, g_workers,
+            inflight, g_bar, w] + list(slots)
+    if kind == "adamw":
+        in_specs.append(sc2)
+        args.append(bias_corr.astype(jnp.float32))
+
+    kernel = functools.partial(_round_apply_kernel, n_workers=n, kind=kind,
+                               hp=tuple(hp))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[row, row, vec, vec] + [vec] * n_slots,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, P), g_workers.dtype),
+            jax.ShapeDtypeStruct((n, P), inflight.dtype),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), w.dtype),
+        ] + [jax.ShapeDtypeStruct((P,), jnp.float32)] * n_slots,
+        interpret=interpret,
+    )(*args)
+    gw_new, infl_new, gbar_new, w_new = out[:4]
+    return gw_new, infl_new, gbar_new, w_new, tuple(out[4:])
 
 
 def dude_update_pallas(
@@ -61,30 +167,10 @@ def dude_update_pallas(
     tile: int = DEFAULT_TILE,
     interpret: bool = False,
 ):
-    """Returns (g_workers', inflight', g_bar', w')."""
-    n, P = fresh.shape
-    assert g_workers.shape == (n, P) and inflight.shape == (n, P)
-    assert g_bar.shape == (P,) and w.shape == (P,)
-    tile = min(tile, P)
-    assert P % tile == 0, f"P={P} % tile={tile}"
-    grid = (P // tile,)
-
-    row = pl.BlockSpec((n, tile), lambda i: (0, i))
-    vec = pl.BlockSpec((tile,), lambda i: (i,))
-    mask = pl.BlockSpec((n,), lambda i: (0,))
-
-    kernel = functools.partial(_dude_kernel, n_workers=n, eta=eta)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[mask, mask, row, row, row, vec, vec],
-        out_specs=[row, row, vec, vec],
-        out_shape=[
-            jax.ShapeDtypeStruct((n, P), g_workers.dtype),
-            jax.ShapeDtypeStruct((n, P), inflight.dtype),
-            jax.ShapeDtypeStruct((P,), jnp.float32),
-            jax.ShapeDtypeStruct((P,), w.dtype),
-        ],
-        interpret=interpret,
-    )(commit_mask.astype(jnp.float32), start_mask, fresh, g_workers,
-      inflight, g_bar, w)
+    """Historical fold-in-SGD entry point; the ``kind="sgd"`` case of
+    ``dude_round_apply_pallas``.  Returns (g_workers', inflight', g_bar', w')."""
+    gw, infl, gbar, w_new, _ = dude_round_apply_pallas(
+        commit_mask, start_mask, fresh, g_workers, inflight, g_bar, w,
+        kind="sgd", hp=(("lr", eta),), tile=tile, interpret=interpret,
+    )
+    return gw, infl, gbar, w_new

@@ -37,14 +37,16 @@ from ..models import decode_step as model_decode_step
 from ..models import forward, init_decode_caches, lm_init, loss_fn, prefill
 from ..models.config import ModelConfig
 from ..models.stubs import token_shape
-from ..optim import sgd
+from ..optim import FlatTrainState, flat_twin, sgd
 from ..sharding import (
     batch_sharding,
     cache_shardings,
     dude_state_shardings,
     engine_state_shardings,
+    flat_train_state_shardings,
     make_shard_hook,
     param_shardings,
+    slot_shardings,
 )
 
 Pytree = Any
@@ -86,6 +88,12 @@ class TrainOptions:
                                    # mesh and run the round under shard_map
                                    # (mesh-native engine); False keeps the
                                    # engine layout up to GSPMD
+    flat_optimizer: bool = False   # flat-state training: master params +
+                                   # optimizer slots live as [P] slabs in the
+                                   # engine's segment-range layout, the round
+                                   # and the apply fuse into one shard_map
+                                   # (engine.round_apply), and the params are
+                                   # unraveled ONCE per step for the forward
 
 
 def make_engine(cfg: ModelConfig, mesh=None,
@@ -116,10 +124,26 @@ def make_engine(cfg: ModelConfig, mesh=None,
 def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                     dude_cfg: Optional[DuDeConfig] = None,
                     options: TrainOptions = TrainOptions(),
-                    engine: Optional[DuDeEngine] = None) -> Callable:
+                    engine: Optional[DuDeEngine] = None,
+                    flat_optimizer: Optional[bool] = None) -> Callable:
+    """The jitted round step.
+
+    Pytree mode (default): ``(params, opt_state, dude_state, batch, sm, cm)
+    -> (params, opt_state, dude_state, metrics)`` — the engine round runs on
+    flat slabs, but g_bar is unraveled (regathered on a mesh) every step to
+    feed the per-leaf optimizer apply.
+
+    Flat mode (``flat_optimizer=True`` or ``options.flat_optimizer``):
+    ``(state: FlatTrainState, batch, sm, cm) -> (state, metrics)`` — master
+    params and optimizer slots stay in the engine's segment-range ``[P]``
+    layout, the round and the apply fuse into one shard_map
+    (``engine.round_apply``, zero-collective), and the only gather left is
+    the single params all-gather feeding ``spec.unravel`` for the forward.
+    """
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
+    flat = options.flat_optimizer if flat_optimizer is None else flat_optimizer
     shard = make_shard_hook(mesh)
 
     gdt = options.grad_dtype or jnp.float32
@@ -142,15 +166,17 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
         )(params)
         return grads, metrics["loss"]
 
-    def train_step(params, opt_state, dude_state: EngineState, batch,
-                   start_mask, commit_mask):
-        # GSPMD's partitioner lowers "all-reduce then consume a shard" as
-        # all-reduce + dynamic-slice; to get a true reduce-scatter into the
-        # engine's P-shards, the data-axis reduction of the gradient is made
-        # EXPLICIT: split every worker's batch into its 'data'-axis slices
-        # at the vmap level (the backward then produces per-slice partial
-        # gradients that stay resident on their shard) and psum-scatter the
-        # raveled slab straight into the shard each device owns.
+    def fresh_grads(params, batch):
+        """Stacked backward -> [n, P] slab in the engine's grad layout.
+
+        GSPMD's partitioner lowers "all-reduce then consume a shard" as
+        all-reduce + dynamic-slice; to get a true reduce-scatter into the
+        engine's P-shards, the data-axis reduction of the gradient is made
+        EXPLICIT: split every worker's batch into its 'data'-axis slices
+        at the vmap level (the backward then produces per-slice partial
+        gradients that stay resident on their shard) and psum-scatter the
+        raveled slab straight into the shard each device owns.
+        """
         split = (D > 1 and all(x.ndim >= 2 and x.shape[1] % D == 0
                                for x in jax.tree.leaves(batch)))
         vbatch = batch
@@ -175,6 +201,39 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
             fresh = rs_fn(fresh)  # -> [n, P] in the engine slab sharding
         elif flat_sh is not None:
             fresh = jax.lax.with_sharding_constraint(fresh, flat_sh)
+        return fresh, losses
+
+    if flat:
+        fopt = flat_twin(opt)
+        repl_sh = None
+        if mesh is not None:
+            repl_sh = NamedSharding(mesh, P())
+
+        def flat_train_step(state: FlatTrainState, batch,
+                            start_mask, commit_mask):
+            pf = state.params
+            if repl_sh is not None:
+                # THE one all-gather per step: materialize the full [P]
+                # vector once; every leaf slice below is then local, and the
+                # forward consumes the leaves without further param
+                # collectives (re-sharding them per-leaf here would turn
+                # into FSDP-style per-layer re-gathers).
+                pf = jax.lax.with_sharding_constraint(pf, repl_sh)
+            # slice+reshape+cast to the per-leaf target dtypes recorded in
+            # the FlatSpec (f32 masters feed a bf16 forward at large scale)
+            params = engine.spec.unravel(pf)
+            fresh, losses = fresh_grads(params, batch)
+            eng_state, _, pf_new, opt_new = engine.round_apply(
+                state.engine, fresh, start_mask, commit_mask,
+                state.params, state.opt, fopt)
+            return (FlatTrainState(pf_new, opt_new, eng_state),
+                    {"loss": jnp.mean(losses)})
+
+        return flat_train_step
+
+    def train_step(params, opt_state, dude_state: EngineState, batch,
+                   start_mask, commit_mask):
+        fresh, losses = fresh_grads(params, batch)
         dude_state, g_flat = engine.round(dude_state, fresh,
                                           start_mask, commit_mask)
         g = engine.spec.unravel(g_flat)
@@ -251,17 +310,35 @@ def abstract_params(cfg: ModelConfig):
 def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
                          dude_cfg: Optional[DuDeConfig] = None,
                          options: TrainOptions = TrainOptions(),
-                         engine: Optional[DuDeEngine] = None):
-    """Returns (arg_shapes, arg_shardings) for params/opt/engine state.
+                         engine: Optional[DuDeEngine] = None,
+                         flat_optimizer: Optional[bool] = None):
+    """Returns (arg_shapes, arg_shardings) for the train step's state.
 
-    The DuDe entry is the flat ``EngineState`` of ``make_engine`` — P-axis
-    sharded via ``engine_state_shardings`` when the engine is mesh-native,
-    replicated otherwise.
+    Pytree mode: a ``(params, opt_state, dude_state)`` tuple (and the same
+    tuple of shardings).  The DuDe entry is the flat ``EngineState`` of
+    ``make_engine`` — P-axis sharded via ``engine_state_shardings`` when the
+    engine is mesh-native, replicated otherwise.
+
+    Flat mode (``flat_optimizer`` / ``options.flat_optimizer``): one
+    ``FlatTrainState`` of ShapeDtypeStructs and its
+    ``flat_train_state_shardings`` — every slab rides the engine's
+    segment-range P-axis split.
     """
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
+    flat = options.flat_optimizer if flat_optimizer is None else flat_optimizer
     params = abstract_params(cfg)
+
+    if flat:
+        fopt = flat_twin(opt)
+        pf = _sds((engine.P,), jnp.float32)
+        fo_state = jax.eval_shape(fopt.init, pf)
+        st_shapes = FlatTrainState(pf, fo_state, engine.state_shapes())
+        st_sh = flat_train_state_shardings(engine.spec, mesh,
+                                           engine.paxes or (), fo_state)
+        return st_shapes, st_sh
+
     opt_state = jax.eval_shape(opt.init, params)
     dude_state = engine.state_shapes()
 
@@ -269,10 +346,30 @@ def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
     dude_sh = engine_state_shardings(engine.spec, mesh, engine.paxes or ())
     repl = NamedSharding(mesh, P())
     o_sh = jax.tree.map(lambda _: repl, opt_state)
-    # momentum/adam slots shard like params
+    # momentum/adam slots shard like the params they mirror (slot_shardings
+    # reuses the param shardings structurally, so AdamW's {"m", "v"} path
+    # prefixes cannot skew the name-pattern rules)
     if hasattr(opt_state, "slots") and opt_state.slots:
-        o_sh = type(opt_state)(step=repl, slots=param_shardings(opt_state.slots, mesh))
+        o_sh = type(opt_state)(step=repl,
+                               slots=slot_shardings(params, opt_state.slots,
+                                                    mesh))
     return (params, opt_state, dude_state), (p_sh, o_sh, dude_sh)
+
+
+def init_flat_train_state(engine: DuDeEngine, opt, params: Pytree
+                          ) -> FlatTrainState:
+    """Concrete ``FlatTrainState`` from pytree params: ravel the master
+    params to the f32 ``[P]`` slab, zero-init the flat optimizer slots and
+    the engine state, and land everything on the engine's P-axis shardings
+    when it is mesh-native."""
+    fopt = flat_twin(opt)
+    pf = engine.spec.ravel(params, jnp.float32)
+    state = FlatTrainState(pf, fopt.init(pf), engine.init())
+    if engine.mesh is not None:
+        sh = flat_train_state_shardings(engine.spec, engine.mesh,
+                                        engine.paxes, state.opt)
+        state = jax.device_put(state, sh)
+    return state
 
 
 def train_batch_specs(cfg: ModelConfig, mesh, shape_name: str,

@@ -20,13 +20,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    checkpoint_format, restore_checkpoint, restore_flat_from_pytree,
+    restore_params_from_flat, save_checkpoint,
+)
 from repro.configs import get_config
 from repro.core import (
     DuDeConfig, delay_stats, make_round_schedule, truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
-from repro.launch.steps import TrainOptions, make_engine, make_train_step
+from repro.launch.steps import (
+    TrainOptions, init_flat_train_state, make_engine, make_train_step,
+)
 from repro.models import lm_init, param_count
 from repro.models.stubs import make_prefix_embeddings
 from repro.optim import adamw, momentum_sgd, sgd
@@ -47,6 +52,12 @@ def main():
                     choices=["reference", "indexed", "pallas"],
                     help="ServerEngine update path for the DuDe round "
                          "(pallas = fused kernel; interpret mode on CPU)")
+    ap.add_argument("--flat-optimizer", action="store_true",
+                    help="flat-state training: master params + optimizer "
+                         "slots as [P] slabs in the engine layout, round "
+                         "and apply fused into one zero-collective pass "
+                         "(engine.round_apply); params are unraveled once "
+                         "per step for the forward")
     ap.add_argument("--speed-std", type=float, default=1.0,
                     help="worker speed heterogeneity (paper std)")
     ap.add_argument("--heterogeneity", type=float, default=1.0,
@@ -74,17 +85,34 @@ def main():
     print(f"[train] params={param_count(params):,}")
 
     opt = {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[args.opt](args.lr)
-    opt_state = opt.init(params)
     dude_cfg = DuDeConfig(n, cfg.dude_buffer_dtype if not args.smoke else jnp.float32,
                           accumulate=args.algo == "dude_accum")
-    options = TrainOptions(backend=args.server_backend)
+    options = TrainOptions(backend=args.server_backend,
+                           flat_optimizer=args.flat_optimizer)
     # flat ServerEngine state: [P] g_bar + [n, P] slabs (P-axis sharded when
     # a mesh is given — single-device here, so unsharded)
     engine = make_engine(cfg, None, dude_cfg, options)
-    dude_state = engine.init()
+    flat_state = opt_state = dude_state = None
+    if args.flat_optimizer:
+        # whole train state in the flat segment-range layout
+        flat_state = init_flat_train_state(engine, opt, params)
+    else:
+        opt_state = opt.init(params)
+        dude_state = engine.init()
     if args.resume and args.ckpt_dir:
-        params = restore_checkpoint(args.ckpt_dir, None, params)
-        print("[train] resumed from checkpoint")
+        fmt = checkpoint_format(args.ckpt_dir)
+        if args.flat_optimizer:
+            flat_state = (
+                restore_checkpoint(args.ckpt_dir, None, flat_state,
+                                   flat_spec=engine.spec)
+                if fmt == "flat" else
+                restore_flat_from_pytree(args.ckpt_dir, None, flat_state,
+                                         engine.spec))
+        else:
+            params = (restore_params_from_flat(args.ckpt_dir, None, params)
+                      if fmt == "flat" else
+                      restore_checkpoint(args.ckpt_dir, None, params))
+        print(f"[train] resumed from {fmt} checkpoint")
 
     step = jax.jit(make_train_step(cfg, None, opt, dude_cfg,
                                    options=options, engine=engine))
@@ -120,17 +148,24 @@ def main():
     t0 = time.time()
     history = []
     for r in range(sch.rounds):
-        params, opt_state, dude_state, metrics = step(
-            params, opt_state, dude_state, round_batch(),
-            jnp.asarray(sch.start[r]), jnp.asarray(sch.commit[r]),
-        )
+        sm = jnp.asarray(sch.start[r])
+        cm = jnp.asarray(sch.commit[r])
+        if args.flat_optimizer:
+            flat_state, metrics = step(flat_state, round_batch(), sm, cm)
+        else:
+            params, opt_state, dude_state, metrics = step(
+                params, opt_state, dude_state, round_batch(), sm, cm)
         loss = float(metrics["loss"])
         history.append(loss)
         if r % args.log_every == 0:
             print(f"[round {r:4d}] loss={loss:.4f} "
                   f"({(time.time() - t0) / (r + 1):.2f}s/round)")
         if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, r + 1, params)
+            if args.flat_optimizer:
+                save_checkpoint(args.ckpt_dir, r + 1, flat_state,
+                                flat_spec=engine.spec)
+            else:
+                save_checkpoint(args.ckpt_dir, r + 1, params)
 
     print(json.dumps({
         "arch": cfg.name, "rounds": sch.rounds,

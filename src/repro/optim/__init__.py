@@ -1,3 +1,21 @@
-from .transforms import OptState, adamw, momentum_sgd, sgd
+from .transforms import (
+    FLAT_OPTIMIZERS,
+    FlatOptimizer,
+    FlatOptState,
+    FlatTrainState,
+    OptState,
+    adamw,
+    flat_adamw,
+    flat_momentum_sgd,
+    flat_sgd,
+    flat_twin,
+    momentum_sgd,
+    sgd,
+)
 
-__all__ = ["OptState", "sgd", "momentum_sgd", "adamw"]
+__all__ = [
+    "OptState", "sgd", "momentum_sgd", "adamw",
+    "FlatOptState", "FlatOptimizer", "FlatTrainState",
+    "flat_sgd", "flat_momentum_sgd", "flat_adamw",
+    "FLAT_OPTIMIZERS", "flat_twin",
+]

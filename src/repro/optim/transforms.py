@@ -7,6 +7,24 @@ The *direction* is whatever the server algorithm produces — for DuDe-ASGD it
 is the dual-delayed aggregated gradient g^t, so optimizers compose with the
 paper's protocol unchanged (the paper uses plain SGD; momentum/AdamW are
 framework extensions applied on top of g^t).
+
+Flat twins
+----------
+Every pytree optimizer here has a **flat twin** operating on the engine's
+padded ``[P]`` slab layout (``core/flatten.py``): master params are one f32
+``[P]`` vector, slots are ``[P]`` slabs (momentum ``m``, AdamW ``{m, v}``),
+and the update is purely elementwise on P — so it runs zero-collective under
+the engine's P-axis ``shard_map`` and fuses into the DuDe round
+(``DuDeEngine.round_apply``).  The twin's math mirrors the pytree apply
+op-for-op: on f32 params the two paths agree bit-for-bit after
+ravel/unravel (``tests/test_flat_state.py``).  Zero is a fixed point of all
+three update rules, so the pad lanes of the slab never drift.
+
+``FLAT_OPTIMIZERS`` maps each pytree optimizer name to its flat factory;
+``flat_twin(opt)`` rebuilds the twin from the recorded hyperparameters.
+``FlatTrainState`` bundles the flat master params, the flat optimizer state,
+and the engine's ``EngineState`` — the whole training state in one
+P-axis-sharded layout.
 """
 
 from __future__ import annotations
@@ -19,6 +37,13 @@ import jax.numpy as jnp
 
 Pytree = Any
 
+__all__ = [
+    "OptState", "Optimizer", "sgd", "momentum_sgd", "adamw",
+    "FlatOptState", "FlatOptimizer", "FlatTrainState",
+    "flat_sgd", "flat_momentum_sgd", "flat_adamw",
+    "FLAT_OPTIMIZERS", "flat_twin",
+]
+
 
 class OptState(NamedTuple):
     step: jnp.ndarray
@@ -30,6 +55,9 @@ class Optimizer:
     init: Callable[[Pytree], OptState]
     apply: Callable[[Pytree, Pytree, OptState], tuple[Pytree, OptState]]
     name: str = "opt"
+    # hyperparameters as a static (key, value) tuple so the flat twin can be
+    # rebuilt from the pytree optimizer alone (``flat_twin``)
+    hparams: tuple = ()
 
 
 def sgd(lr: float) -> Optimizer:
@@ -40,7 +68,7 @@ def sgd(lr: float) -> Optimizer:
         new = jax.tree.map(lambda p, d: p - lr * d.astype(p.dtype), params, g)
         return new, OptState(state.step + 1, ())
 
-    return Optimizer(init, apply, "sgd")
+    return Optimizer(init, apply, "sgd", (("lr", lr),))
 
 
 def momentum_sgd(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
@@ -59,7 +87,8 @@ def momentum_sgd(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimi
         new = jax.tree.map(lambda p, di: p - lr * di.astype(p.dtype), params, d)
         return new, OptState(state.step + 1, m)
 
-    return Optimizer(init, apply, "momentum")
+    return Optimizer(init, apply, "momentum",
+                     (("lr", lr), ("beta", beta), ("nesterov", nesterov)))
 
 
 def adamw(
@@ -95,4 +124,133 @@ def adamw(
         new = jax.tree.map(upd, params, m, v)
         return new, OptState(t, {"m": m, "v": v})
 
-    return Optimizer(init, apply, "adamw")
+    return Optimizer(init, apply, "adamw",
+                     (("lr", lr), ("b1", b1), ("b2", b2), ("eps", eps),
+                      ("weight_decay", weight_decay)))
+
+
+# ---------------------------------------------------------------- flat twins
+
+
+class FlatOptState(NamedTuple):
+    """Optimizer state on the flat slab layout: ``slots`` holds only padded
+    ``[P]`` f32 vectors (``()`` for sgd, ``m`` for momentum, ``{m, v}`` for
+    AdamW), so it shards with the same segment-range P-axis rule as the
+    engine slabs."""
+
+    step: jnp.ndarray   # scalar i32, replicated
+    slots: Pytree       # pytree of [P] f32 slabs
+
+
+class FlatTrainState(NamedTuple):
+    """The whole training state as P-axis-shardable flat slabs: f32 master
+    params ``[P]``, flat optimizer slots, and the DuDe ``EngineState``.
+    Built by ``launch.steps.init_flat_train_state``; sharded by
+    ``sharding.specs.flat_train_state_shardings``."""
+
+    params: jnp.ndarray  # [P] f32 flat master params
+    opt: FlatOptState
+    engine: Any          # core.engine.EngineState
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatOptimizer:
+    """Flat-slab optimizer: ``init``/``apply`` on ``[P]`` f32 vectors.
+
+    ``update(params, g, slots, t)`` is the elementwise core (t = the step
+    AFTER increment): it is what ``DuDeEngine.round_apply`` calls inside its
+    ``shard_map`` body, and what the fused Pallas kernel mirrors stream-for-
+    stream.  ``apply`` wraps it with the step-counter bump for standalone
+    use.  Hyperparameters are a static (key, value) tuple so engines can
+    read them at trace time (e.g. to parametrize the kernel).
+    """
+
+    name: str
+    hparams: tuple = ()
+
+    @property
+    def hp(self) -> dict:
+        return dict(self.hparams)
+
+    def init_slots(self, params_flat: jnp.ndarray) -> Pytree:
+        z = lambda: jnp.zeros_like(params_flat, jnp.float32)
+        if self.name == "sgd":
+            return ()
+        if self.name == "momentum":
+            return z()
+        if self.name == "adamw":
+            return {"m": z(), "v": z()}
+        raise ValueError(f"unknown flat optimizer {self.name!r}")
+
+    def init(self, params_flat: jnp.ndarray) -> FlatOptState:
+        return FlatOptState(jnp.zeros((), jnp.int32),
+                            self.init_slots(params_flat))
+
+    def update(self, params: jnp.ndarray, g: jnp.ndarray, slots: Pytree,
+               t: jnp.ndarray) -> tuple[jnp.ndarray, Pytree]:
+        """One elementwise step on [P] slabs; mirrors the pytree apply
+        op-for-op (bit-for-bit on f32 params)."""
+        hp = self.hp
+        g = g.astype(jnp.float32)
+        if self.name == "sgd":
+            return params - hp["lr"] * g, slots
+        if self.name == "momentum":
+            beta = hp["beta"]
+            m = beta * slots + g
+            d = beta * m + g if hp["nesterov"] else m
+            return params - hp["lr"] * d, m
+        if self.name == "adamw":
+            b1, b2 = hp["b1"], hp["b2"]
+            m = b1 * slots["m"] + (1 - b1) * g
+            v = b2 * slots["v"] + (1 - b2) * jnp.square(g)
+            bc1 = 1 - b1 ** t.astype(jnp.float32)
+            bc2 = 1 - b2 ** t.astype(jnp.float32)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + hp["eps"]) \
+                + hp["weight_decay"] * params
+            return params - hp["lr"] * step, {"m": m, "v": v}
+        raise ValueError(f"unknown flat optimizer {self.name!r}")
+
+    def apply(self, params: jnp.ndarray, g: jnp.ndarray,
+              state: FlatOptState) -> tuple[jnp.ndarray, FlatOptState]:
+        t = state.step + 1
+        params, slots = self.update(params, g, state.slots, t)
+        return params, FlatOptState(t, slots)
+
+
+def flat_sgd(lr: float) -> FlatOptimizer:
+    return FlatOptimizer("sgd", (("lr", lr),))
+
+
+def flat_momentum_sgd(lr: float, beta: float = 0.9,
+                      nesterov: bool = False) -> FlatOptimizer:
+    return FlatOptimizer("momentum",
+                         (("lr", lr), ("beta", beta), ("nesterov", nesterov)))
+
+
+def flat_adamw(lr: float, b1: float = 0.9, b2: float = 0.999,
+               eps: float = 1e-8, weight_decay: float = 0.0) -> FlatOptimizer:
+    return FlatOptimizer("adamw",
+                         (("lr", lr), ("b1", b1), ("b2", b2), ("eps", eps),
+                          ("weight_decay", weight_decay)))
+
+
+# registry: pytree optimizer name -> flat factory
+FLAT_OPTIMIZERS = {
+    "sgd": flat_sgd,
+    "momentum": flat_momentum_sgd,
+    "adamw": flat_adamw,
+}
+
+
+def flat_twin(opt) -> FlatOptimizer:
+    """The flat-slab twin of a pytree ``Optimizer`` (or a ``FlatOptimizer``
+    passed through unchanged), rebuilt from its recorded hyperparameters."""
+    if isinstance(opt, FlatOptimizer):
+        return opt
+    try:
+        factory = FLAT_OPTIMIZERS[opt.name]
+    except KeyError:
+        raise ValueError(
+            f"optimizer {opt.name!r} has no flat twin; registered: "
+            f"{tuple(FLAT_OPTIMIZERS)}") from None
+    return factory(**dict(opt.hparams))

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.engine import EngineState
 from ..core.flatten import FlatSpec
+from ..optim.transforms import FlatOptState, FlatTrainState
 
 Pytree = Any
 
@@ -111,16 +112,46 @@ def param_spec(pathstr: str, shape, mesh: Mesh, *, stacked: bool = False,
     return P(*([None] * rank))
 
 
+def _is_stacked(pathstr: str) -> bool:
+    """Leaf lives under a stacked layer-group (leading n_layers dim).  The
+    model's param tree has ``groups`` at the ROOT ("groups/0/attn/..."), so
+    a bare substring test for "/groups/" misses it — and a prefixed tree
+    (e.g. AdamW slots under "m/...") would disagree with the params."""
+    return pathstr.startswith("groups/") or "/groups/" in pathstr
+
+
 def param_shardings(params: Pytree, mesh: Mesh, *, pod_fsdp: bool = False) -> Pytree:
     fsdp = ("pod", "data") if (pod_fsdp and "pod" in mesh.shape) else "data"
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         ps = _path_str(path)
-        stacked = "/groups/" in ps
         out.append(NamedSharding(
-            mesh, param_spec(ps, leaf.shape, mesh, stacked=stacked, fsdp=fsdp)))
+            mesh, param_spec(ps, leaf.shape, mesh, stacked=_is_stacked(ps),
+                             fsdp=fsdp)))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def slot_shardings(params: Pytree, slots: Pytree, mesh: Mesh) -> Pytree:
+    """Shardings for pytree optimizer slots: every slot leaf shards exactly
+    like its parameter.
+
+    Slot trees are params-shaped (momentum ``m``) or a dict of params-shaped
+    trees (AdamW ``{"m": ..., "v": ...}``).  Running ``param_shardings``
+    directly on the latter would prefix every path with ``m/``/``v/`` and
+    leave the name-pattern rules one component off, so slot subtrees that
+    structurally match ``params`` reuse the param shardings verbatim —
+    mismatch is impossible by construction (asserted per optimizer in
+    ``tests/test_flat_state.py``)."""
+    p_struct = jax.tree_util.tree_structure(params)
+    p_sh = param_shardings(params, mesh)
+    if jax.tree_util.tree_structure(slots) == p_struct:
+        return p_sh
+    if isinstance(slots, dict) and slots and all(
+            jax.tree_util.tree_structure(v) == p_struct
+            for v in slots.values()):
+        return {k: p_sh for k in slots}
+    return param_shardings(slots, mesh)
 
 
 def dude_state_shardings(params: Pytree, mesh: Mesh, n_workers: int) -> dict:
@@ -131,8 +162,7 @@ def dude_state_shardings(params: Pytree, mesh: Mesh, n_workers: int) -> dict:
 
     def one(path, leaf, extra_axis):
         ps = _path_str(path)
-        stacked = "/groups/" in ps
-        inner = param_spec(ps, leaf.shape, mesh, stacked=stacked)
+        inner = param_spec(ps, leaf.shape, mesh, stacked=_is_stacked(ps))
         if extra_axis is False:
             return NamedSharding(mesh, inner)
         return NamedSharding(mesh, P(worker_ax, *inner))
@@ -182,6 +212,27 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
         inflight=NamedSharding(mesh, row),
         acc_count=NamedSharding(mesh, P()),
         step=NamedSharding(mesh, P()),
+    )
+
+
+def flat_train_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
+                               opt_state_like: Any = None) -> FlatTrainState:
+    """NamedShardings for a ``FlatTrainState`` on ``mesh``.
+
+    Everything rides the engine's segment-range P-axis split: the ``[P]``
+    master params and every ``[P]`` optimizer slot slab shard like ``g_bar``
+    (``P(axes)``), the step counter is replicated, and the engine state uses
+    ``engine_state_shardings``.  ``opt_state_like`` supplies the slot tree
+    structure (arrays or ShapeDtypeStructs; ``None`` means no slots)."""
+    eng_sh = engine_state_shardings(spec, mesh, axes)
+    vec = eng_sh.g_bar
+    repl = NamedSharding(mesh, P())
+    slots = opt_state_like.slots if opt_state_like is not None else ()
+    return FlatTrainState(
+        params=vec,
+        opt=FlatOptState(step=repl,
+                         slots=jax.tree.map(lambda _: vec, slots)),
+        engine=eng_sh,
     )
 
 

@@ -15,7 +15,6 @@ CI additionally runs this file in-process under the 8-device override.
 """
 
 import os
-import re
 import subprocess
 import sys
 from pathlib import Path
@@ -25,14 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import NDEV, collective_counts, multidevice, p_mesh
 from repro.core.engine import BACKENDS, DuDeEngine
 from repro.core.flatten import make_flat_spec
-
-NDEV = 8
-multidevice = pytest.mark.skipif(
-    jax.device_count() < NDEV,
-    reason=f"needs {NDEV} devices (run under "
-           f"XLA_FLAGS=--xla_force_host_platform_device_count={NDEV})")
 
 def _tree(rng):
     return {
@@ -42,10 +36,6 @@ def _tree(rng):
     }
 
 
-def _mesh():
-    return jax.make_mesh((NDEV,), ("p",))
-
-
 def _engines(backend, buf_dtype, n, mesh):
     spec = make_flat_spec(_tree(np.random.default_rng(0)),
                           mesh_axis_size=NDEV)
@@ -53,12 +43,6 @@ def _engines(backend, buf_dtype, n, mesh):
               backend=backend, interpret=True)
     return (DuDeEngine(**kw),
             DuDeEngine(**kw, mesh=mesh, axis_name="p"))
-
-
-def _collective_counts(hlo: str) -> dict:
-    ops = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-           "collective-permute")
-    return {op: len(re.findall(op + r"\(", hlo)) for op in ops}
 
 
 # ------------------------------------------------- sharded == unsharded
@@ -73,7 +57,7 @@ def test_round_sharded_matches_unsharded(backend, buf_dtype):
     round is elementwise on P, so sharding cannot reorder anything)."""
     rng = np.random.default_rng(3)
     n = 5
-    mesh = _mesh()
+    mesh = p_mesh()
     eng_u, eng_s = _engines(backend, buf_dtype, n, mesh)
     P = eng_u.P
     assert eng_s.shard_P == P // NDEV
@@ -102,7 +86,7 @@ def test_round_sharded_matches_unsharded(backend, buf_dtype):
 def test_commit_sharded_matches_unsharded(backend):
     rng = np.random.default_rng(5)
     n = 4
-    mesh = _mesh()
+    mesh = p_mesh()
     eng_u, eng_s = _engines(backend, jnp.float32, n, mesh)
     P = eng_u.P
     su = eng_u.init()._replace(
@@ -124,7 +108,7 @@ def test_sharded_round_moves_no_bytes(backend):
     """The round is elementwise on P (worker-sum local to each P-shard):
     the compiled sharded round must contain ZERO collective ops."""
     n = 4
-    mesh = _mesh()
+    mesh = p_mesh()
     _, eng_s = _engines(backend, jnp.float32, n, mesh)
     state = eng_s.init()
     fresh = jax.device_put(jnp.ones((n, eng_s.P), jnp.float32),
@@ -132,7 +116,7 @@ def test_sharded_round_moves_no_bytes(backend):
     ones = jnp.ones(n, bool)
     hlo = jax.jit(eng_s.round).lower(state, fresh, ones, ones
                                      ).compile().as_text()
-    counts = {k: v for k, v in _collective_counts(hlo).items() if v}
+    counts = {k: v for k, v in collective_counts(hlo).items() if v}
     assert not counts, counts
 
 
@@ -179,7 +163,7 @@ def test_constrain_grads_emits_reduce_scatter():
                 lambda x: jax.device_put(x, b_sh), batch)
             hlo = step.lower(params, opt_state, dude_state, sharded_batch,
                              ones, ones).compile().as_text()
-            counts[constrain] = _collective_counts(hlo)
+            counts[constrain] = collective_counts(hlo)
             for _ in range(2):
                 params, opt_state, dude_state, metrics = step(
                     params, opt_state, dude_state, sharded_batch, ones, ones)

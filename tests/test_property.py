@@ -127,6 +127,66 @@ def test_error_feedback_telescopes(seed, steps):
 
 @SET
 @given(
+    n_leaves=st.integers(1, 5),
+    mesh_axis_size=st.sampled_from([1, 2, 4, 8]),
+    stacked_n=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_flat_spec_roundtrip_mixed_dtypes(n_leaves, mesh_axis_size,
+                                          stacked_n, seed):
+    """FlatSpec ravel/unravel is an exact round-trip for ANY mixed-dtype
+    tree and shard-aligned padding: per-leaf target dtypes are restored
+    (the cast path the flat forward relies on), values survive the f32
+    staging exactly (bf16 and small ints embed losslessly in f32), pad
+    lanes are zero, and P splits into mesh_axis_size equal lane-aligned
+    shards whose segment tables tile every leaf exactly once."""
+    from repro.core.flatten import make_flat_spec
+    rng = np.random.default_rng(seed)
+    dtypes = [jnp.float32, jnp.bfloat16, jnp.int32]
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(int(d) for d in rng.integers(1, 6, size=rng.integers(1, 4)))
+        dt = dtypes[int(rng.integers(len(dtypes)))]
+        if dt == jnp.int32:
+            leaf = jnp.asarray(rng.integers(-1000, 1000, size=shape), dt)
+        else:
+            # bf16 values are exactly f32-representable by construction
+            leaf = jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dt)
+        tree[f"leaf{i}"] = leaf
+    spec = make_flat_spec(tree, mesh_axis_size=mesh_axis_size)
+    flat = spec.ravel(tree)
+    assert flat.shape == (spec.padded_size,) and flat.dtype == jnp.float32
+    assert spec.padded_size % (mesh_axis_size * 128) == 0
+    assert not np.any(np.asarray(flat[spec.size:]))  # pads are zero
+    back = spec.unravel(flat)
+    raw = spec.unravel(flat, cast=False)
+    for k, leaf in tree.items():
+        assert back[k].dtype == leaf.dtype
+        assert raw[k].dtype == jnp.float32   # cast=False keeps slab dtype
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(leaf, np.float32))
+    # stacked variant round-trips too
+    stree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (stacked_n,) + x.shape), tree)
+    sback = spec.unravel_stacked(spec.ravel_stacked(stree))
+    for k in tree:
+        assert sback[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(sback[k], np.float32),
+                                      np.asarray(stree[k], np.float32))
+    # the shard segment tables tile every leaf exactly once
+    covered = {i: 0 for i in range(len(spec.sizes))}
+    for s in range(mesh_axis_size):
+        lo, hi = spec.shard_ranges()[s]
+        assert lo % 128 == 0 and (hi - lo) == spec.shard_size
+        for leaf_i, a, b in spec.shard_segments(s):
+            assert 0 <= a < b <= spec.sizes[leaf_i]
+            covered[leaf_i] += b - a
+    leaf_order = sorted(covered)
+    assert [covered[i] for i in leaf_order] == list(spec.sizes)
+
+
+@SET
+@given(
     n=st.integers(2, 5),
     seed=st.integers(0, 500),
 )
