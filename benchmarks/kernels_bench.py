@@ -19,9 +19,15 @@ backend x optimizer (sgd/momentum/adamw) on identical inputs, unsharded and
 — with >1 device — P-axis sharded, with max |params| error vs. the
 reference-backend flat apply as the correctness pulse.
 
-``--json-out`` (default ``benchmarks/BENCH_3.json``) writes every row as
-machine-readable JSON — backend x (n, P) x sharded/unsharded plus the
-round+apply grid — so the perf trajectory is tracked across PRs.
+The session-dispatch sweep times ``api.Trainer.step`` (the one-object
+session facade) against the raw prejitted flat step on the identical state
+and batch: ``derived`` is facade time / raw time, proving the facade adds
+no per-step overhead beyond Python dispatch noise.
+
+``--json-out`` (default ``benchmarks/BENCH_4.json``) writes every row as
+machine-readable JSON — backend x (n, P) x sharded/unsharded, the
+round+apply grid, and the session-dispatch rows — so the perf trajectory
+is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -217,10 +223,63 @@ def round_apply_sweep(backends=BACKENDS, opts=tuple(FLAT_OPTS),
     return rows
 
 
+def session_dispatch_rows(algos=("dude", "fedbuff"), rounds: int = 30
+                          ) -> list[dict]:
+    """Time ``Trainer.step`` vs the raw prejitted flat step (same state,
+    same batch): the session facade must be pure dispatch (ratio ~1)."""
+    import jax.numpy as jnp  # noqa: F811 (explicit for the tiny config)
+    from repro.api import Trainer, TrainerConfig
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="bench-lm", arch_type="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        dtype=jnp.float32, remat=False, attn_chunk=16, n_workers=4,
+    )
+    n = cfg.n_workers
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (n, 2, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (n, 2, 32), 0, cfg.vocab_size),
+    }
+    sm = cm = jnp.ones(n, bool)
+    rows = []
+    for algo in algos:
+        # facade path: the session object owns state + jit cache
+        t = Trainer.create(TrainerConfig(arch=cfg, algo=algo, lr=0.01))
+        t.step(batch, sm, cm)  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            t.step(batch, sm, cm)
+        jax.block_until_ready(t.state)
+        facade = (time.perf_counter() - t0) / rounds
+
+        # raw path: identical jitted step, state threaded by hand
+        t2 = Trainer.create(TrainerConfig(arch=cfg, algo=algo, lr=0.01))
+        raw = jax.jit(t2.step_fn, donate_argnums=(0,))
+        state = t2.state
+        state, _ = raw(state, batch, sm, cm)  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            state, _ = raw(state, batch, sm, cm)
+        jax.block_until_ready(state)
+        rawt = (time.perf_counter() - t0) / rounds
+
+        rows.append({
+            "name": f"session/trainer_step_dispatch/{algo}",
+            "algo": algo, "rounds": rounds,
+            "us_per_call": 1e6 * facade,
+            "derived": facade / rawt,      # facade overhead ratio (~1.0)
+            "extra": {"raw_us_per_call": 1e6 * rawt},
+        })
+    return rows
+
+
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
     rows += round_apply_sweep(backends)
+    rows += session_dispatch_rows()
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
@@ -295,7 +354,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_3.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_4.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -308,7 +367,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 3,
+                "pr": 4,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

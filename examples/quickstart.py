@@ -1,30 +1,24 @@
-"""Quickstart: DuDe-ASGD in ~40 lines.
+"""Quickstart: DuDe-ASGD through the one-object session API, in ~30 lines.
 
 Trains a tiny transformer LM with the paper's dual-delayed semi-asynchronous
 protocol (mode B): 4 workers with heterogeneous speeds, per-worker data
-skew, incremental server aggregation.
+skew, incremental server aggregation.  ``Trainer`` owns the single flat
+train state (master params + optimizer slots + server slabs in one
+segment-range ``[P]`` layout) and the one step signature; swap
+``algo="dude"`` for any registry rule (``sync_sgd`` / ``mifa`` /
+``fedbuff``) to run a Table-1 baseline through the same engine path.
 
   PYTHONPATH=src python examples/quickstart.py
-
-The production driver additionally offers flat-state training, which keeps
-master params + optimizer slots in the engine's flat [P] layout and fuses
-the round with the optimizer apply (zero-collective on a mesh):
-
-  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
-      --rounds 50 --seq-len 64 --per-worker-batch 2 --flat-optimizer
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DuDeConfig, delay_stats,
-                        make_round_schedule, truncated_normal_speeds)
+from repro.api import Trainer, TrainerConfig
+from repro.core import delay_stats, make_round_schedule, truncated_normal_speeds
 from repro.data import make_token_sampler
-from repro.launch.steps import make_engine, make_train_step
-from repro.models import lm_init
 from repro.models.config import ModelConfig
-from repro.optim import sgd
 
 cfg = ModelConfig(
     name="quickstart-lm", arch_type="dense", num_layers=2, d_model=128,
@@ -32,13 +26,8 @@ cfg = ModelConfig(
     dtype=jnp.float32, remat=False, attn_chunk=32, n_workers=4,
 )
 
-params = lm_init(jax.random.PRNGKey(0), cfg)
-opt = sgd(0.05)
-opt_state = opt.init(params)
-dude_cfg = DuDeConfig(cfg.n_workers, jnp.float32)
-engine = make_engine(cfg, None, dude_cfg)   # flat [P]/[n, P] server state
-dude_state = engine.init()
-step = jax.jit(make_train_step(cfg, None, opt, dude_cfg, engine=engine))
+trainer = Trainer.create(TrainerConfig(arch=cfg, algo="dude",
+                                       optimizer="sgd", lr=0.05))
 
 # heterogeneous speeds (paper §5: s_i ~ TN(1, std)) -> round schedule
 speeds = truncated_normal_speeds(cfg.n_workers, std=1.0, seed=1)
@@ -53,9 +42,10 @@ rng = np.random.default_rng(0)
 for r in range(schedule.rounds):
     per = [sampler(i, rng) for i in range(cfg.n_workers)]
     batch = {k: jnp.asarray(np.stack([p[k] for p in per])) for k in per[0]}
-    params, opt_state, dude_state, m = step(
-        params, opt_state, dude_state, batch,
-        jnp.asarray(schedule.start[r]), jnp.asarray(schedule.commit[r]))
+    m = trainer.step(batch, schedule.start[r], schedule.commit[r])
     if r % 10 == 0:
         print(f"round {r:3d}  loss {float(m['loss']):.4f}")
-print("done — dual-delayed aggregated gradient, zero straggler stalls.")
+
+params = trainer.params()  # unraveled pytree view, e.g. for eval/serving
+print("trained params:", trainer.param_count(), "scalars in",
+      len(jax.tree.leaves(params)), "leaves")

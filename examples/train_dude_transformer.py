@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--big", action="store_true",
                     help="~100M params (slow on CPU)")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--algo", default="dude",
+                    help="any core.algos registry rule (dude, dude_accum, "
+                         "sync_sgd, mifa, fedbuff) — all run the same "
+                         "session step")
     args, _ = ap.parse_known_args()
 
     if args.big:
@@ -47,7 +51,7 @@ def main():
             "--heterogeneity", "2.0",
         ]
 
-    sys.argv = [sys.argv[0]] + argv
+    sys.argv = [sys.argv[0]] + argv + ["--algo", args.algo]
     train_mod.main()
 
 

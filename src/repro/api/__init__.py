@@ -1,0 +1,22 @@
+"""Session-layer API: one front door for training and serving.
+
+* ``TrainerConfig`` — every knob of a training session, validated in one
+  place (typed ``ConfigError``).
+* ``Trainer`` — ``create``/``restore``/``abstract`` a session over the ONE
+  canonical train state (``FlatTrainState``); single step signature
+  ``trainer.step(batch, start_mask, commit_mask) -> metrics`` for every
+  server algorithm in the ``core.algos`` registry; auto-format
+  checkpointing (``save``/``restore`` dispatch on the stored format).
+* ``ServeSession`` / ``ServeConfig`` — the serving twin: prefill/decode/
+  generate over one params+caches state, loadable straight from a Trainer
+  checkpoint.
+"""
+
+from .config import CheckpointPolicy, ConfigError, OPTIMIZERS, TrainerConfig
+from .serve import ServeConfig, ServeSession
+from .trainer import Trainer
+
+__all__ = [
+    "CheckpointPolicy", "ConfigError", "OPTIMIZERS", "TrainerConfig",
+    "Trainer", "ServeConfig", "ServeSession",
+]

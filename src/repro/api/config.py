@@ -1,0 +1,168 @@
+"""Session configuration: everything a training session needs, validated in
+ONE place.
+
+``TrainerConfig`` is the single front door the driver, the examples, the
+benchmarks and the dry-run all build from.  It owns every knob that used to
+be scattered across argparse checks and step-builder keywords — model
+architecture, server algorithm, optimizer, engine backend, mesh, gradient
+dtype, checkpoint policy — and validates their interactions in
+``__post_init__`` (e.g. the ``dude_accum`` x backend rule that previously
+lived in ``launch/train.py``'s argparse), raising a typed ``ConfigError``
+(a ``ValueError``) so callers can catch misconfiguration distinctly from
+runtime failures.
+
+The config is declarative: resolving it into live objects (ModelConfig,
+DuDeConfig, TrainOptions, Optimizer, engine, RoundAlgo) is done by the
+``model_config`` / ``dude_config`` / ``train_options`` /
+``make_optimizer`` helpers that ``api.Trainer`` composes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+
+from ..core.algos import ROUND_ALGOS
+from ..core.dude import DuDeConfig
+from ..core.engine import BACKENDS
+from ..models.config import ModelConfig
+from ..optim import Optimizer, adamw, momentum_sgd, sgd
+
+__all__ = ["ConfigError", "CheckpointPolicy", "TrainerConfig", "OPTIMIZERS"]
+
+# name -> factory(lr) for the string form of ``TrainerConfig.optimizer``
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}
+
+
+class ConfigError(ValueError):
+    """A ``TrainerConfig`` / ``ServeConfig`` field combination is invalid.
+
+    Raised at config construction time — before any device work — so the
+    driver can surface it as a usage error rather than a mid-run crash."""
+
+
+def _check_arch(arch) -> None:
+    """A string ``arch`` must resolve through the registry — including the
+    dashed aliases ``get_config`` accepts (e.g. ``"qwen2-0.5b"``)."""
+    if isinstance(arch, ModelConfig):
+        return
+    from ..configs import get_config
+    try:
+        get_config(arch)
+    except ValueError as e:
+        raise ConfigError(str(e)) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """When and where a session checkpoints.
+
+    ``directory`` None disables checkpointing entirely; ``every`` 0 disables
+    the periodic save (explicit ``Trainer.save`` calls still work).  Saves
+    are always written in the flat format with the spec's segment table;
+    restores auto-dispatch on the stored format (``checkpoint_format``), so
+    legacy pytree directories keep loading."""
+
+    directory: Optional[str] = None
+    every: int = 0
+
+    def __post_init__(self):
+        if self.every < 0:
+            raise ConfigError(f"CheckpointPolicy.every={self.every} < 0")
+        if self.every > 0 and self.directory is None:
+            raise ConfigError(
+                "CheckpointPolicy.every set without a directory")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    """One training session, fully specified.
+
+    ``arch`` is a config-registry name (``repro.configs``) or a concrete
+    ``ModelConfig``; ``smoke`` applies the registry's reduced CPU-scale
+    variant.  ``algo`` picks the server rule from the ``core.algos``
+    registry — the DuDe family and the round-based Table-1 baselines all
+    run through the same mesh-native flat train step.  ``optimizer`` is a
+    name from ``OPTIMIZERS`` (built with ``lr``) or a prebuilt
+    ``Optimizer``.  ``mesh`` None means single-logical-device execution.
+    """
+
+    arch: Union[str, ModelConfig]
+    smoke: bool = False
+    algo: str = "dude"
+    optimizer: Union[str, Optimizer] = "sgd"
+    lr: float = 0.01
+    server_backend: str = "reference"
+    mesh: Any = None                    # jax.sharding.Mesh or None
+    grad_dtype: Any = None              # ravel the stacked grads in this dtype
+    constrain_grads: bool = False       # explicit reduce-scatter into P-shards
+    shard_engine: bool = True           # mesh-native engine (P-axis shard_map)
+    buffer_dtype: Any = None            # engine slabs; None = arch default
+                                        # (f32 under smoke)
+    fedbuff_buffer_size: int = 4        # fedbuff only: gradients per flush
+    seed: int = 0
+    checkpoint: CheckpointPolicy = CheckpointPolicy()
+
+    def __post_init__(self):
+        if self.algo not in ROUND_ALGOS:
+            raise ConfigError(
+                f"unknown algo {self.algo!r}; options: {ROUND_ALGOS}")
+        if self.server_backend not in BACKENDS:
+            raise ConfigError(
+                f"unknown server_backend {self.server_backend!r}; "
+                f"options: {BACKENDS}")
+        # the rule that used to live in launch/train.py's argparse: the
+        # beyond-paper accumulate latch exists only in the reference sweep
+        if self.algo == "dude_accum" and self.server_backend != "reference":
+            raise ConfigError(
+                "algo 'dude_accum' requires server_backend 'reference' "
+                "(the accumulate running-mean latch is reference-only); "
+                f"got server_backend={self.server_backend!r}")
+        if isinstance(self.optimizer, str) \
+                and self.optimizer not in OPTIMIZERS:
+            raise ConfigError(
+                f"unknown optimizer {self.optimizer!r}; "
+                f"options: {tuple(OPTIMIZERS)} (or pass an Optimizer)")
+        if isinstance(self.optimizer, str) and not self.lr > 0:
+            raise ConfigError(f"lr={self.lr} must be > 0")
+        if self.fedbuff_buffer_size < 1:
+            raise ConfigError(
+                f"fedbuff_buffer_size={self.fedbuff_buffer_size} < 1")
+        _check_arch(self.arch)
+
+    # ------------------------------------------------------- resolution
+
+    @property
+    def model_config(self) -> ModelConfig:
+        if isinstance(self.arch, ModelConfig):
+            return self.arch
+        from ..configs import get_config
+        cfg = get_config(self.arch)
+        return cfg.smoke() if self.smoke else cfg
+
+    @property
+    def dude_config(self) -> DuDeConfig:
+        cfg = self.model_config
+        bdt = self.buffer_dtype
+        if bdt is None:
+            bdt = jnp.float32 if self.smoke else cfg.dude_buffer_dtype
+        return DuDeConfig(cfg.n_workers, bdt,
+                          accumulate=self.algo == "dude_accum")
+
+    @property
+    def train_options(self):
+        from ..launch.steps import TrainOptions
+        return TrainOptions(
+            grad_dtype=self.grad_dtype,
+            constrain_grads=self.constrain_grads,
+            backend=self.server_backend,
+            shard_engine=self.shard_engine,
+            flat_optimizer=True,   # the session API has ONE train state
+        )
+
+    def make_optimizer(self) -> Optimizer:
+        if isinstance(self.optimizer, Optimizer):
+            return self.optimizer
+        return OPTIMIZERS[self.optimizer](self.lr)

@@ -1,0 +1,173 @@
+"""``ServeSession``: the serving-side twin of ``Trainer``.
+
+One object owns the serving state (params + KV caches) and the two jitted
+entry points of the production serve path — ``prefill`` and ``decode`` —
+plus a ``generate`` convenience loop (sample-and-feed-back) that
+``launch/serve.py`` and the examples drive.  Params come from an explicit
+pytree, from a checkpoint directory (flat OR legacy pytree format,
+auto-dispatched through ``checkpoint.restore_params``), or from a fresh
+``lm_init`` — so a model trained through ``Trainer`` serves from its
+checkpoint with no format plumbing in between.
+
+``input_specs(shape_name)`` mirrors ``Trainer.input_specs`` for the serve
+shapes (``prefill_32k`` / ``decode_32k`` / ``long_500k``), feeding
+``launch/dryrun.py`` / ``hlo_analysis`` unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.steps import make_decode_step, make_prefill_step, serve_specs
+from ..models import init_decode_caches, lm_init
+from ..models.config import ModelConfig
+from .config import ConfigError, _check_arch
+
+Pytree = Any
+
+__all__ = ["ServeConfig", "ServeSession"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One serving session: architecture, batch geometry, cache policy."""
+
+    arch: Union[str, ModelConfig]
+    smoke: bool = False
+    batch: int = 4
+    max_len: int = 1024                # KV-cache capacity (incl. prefix)
+    cache_dtype: Any = None            # None = f32 under smoke, bf16 else
+    mesh: Any = None
+    use_window: bool = False           # sliding-window decode kernel
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.batch < 1:
+            raise ConfigError(f"batch={self.batch} < 1")
+        if self.max_len < 1:
+            raise ConfigError(f"max_len={self.max_len} < 1")
+        _check_arch(self.arch)
+
+    @property
+    def model_config(self) -> ModelConfig:
+        if isinstance(self.arch, ModelConfig):
+            return self.arch
+        from ..configs import get_config
+        cfg = get_config(self.arch)
+        return cfg.smoke() if self.smoke else cfg
+
+    @property
+    def resolved_cache_dtype(self):
+        if self.cache_dtype is not None:
+            return self.cache_dtype
+        return jnp.float32 if self.smoke else jnp.bfloat16
+
+
+class ServeSession:
+    """Prefill/decode over one set of params and caches."""
+
+    def __init__(self, config: ServeConfig):
+        self.config = config
+        self.cfg = config.model_config
+        self.mesh = config.mesh
+        self.params: Optional[Pytree] = None
+        self.caches: Optional[Pytree] = None
+        self.position = 0               # next decode position
+        # unjitted steps exposed for custom lowering (dryrun/hlo_analysis)
+        self.prefill_fn = make_prefill_step(self.cfg, self.mesh)
+        self.decode_fn = make_decode_step(self.cfg, self.mesh,
+                                          use_window=config.use_window)
+        self._prefill = jax.jit(self.prefill_fn)
+        self._decode = jax.jit(self.decode_fn)
+
+    # ------------------------------------------------------- constructors
+
+    @classmethod
+    def create(cls, config: ServeConfig, params: Optional[Pytree] = None,
+               ckpt_dir: Optional[str] = None,
+               ckpt_step: Optional[int] = None) -> "ServeSession":
+        """Live session.  Params resolution order: explicit pytree >
+        checkpoint directory (flat or legacy format) > fresh ``lm_init``."""
+        s = cls(config)
+        if params is None and ckpt_dir is not None:
+            from ..checkpoint import restore_params
+            like = jax.eval_shape(
+                lambda: lm_init(jax.random.PRNGKey(0), s.cfg))
+            params = restore_params(ckpt_dir, ckpt_step, like)
+        if params is None:
+            params = lm_init(jax.random.PRNGKey(config.seed), s.cfg)
+        s.params = params
+        s.reset()
+        return s
+
+    @classmethod
+    def abstract(cls, config: ServeConfig) -> "ServeSession":
+        """Shapes-only session for lowering (``input_specs``)."""
+        return cls(config)
+
+    def reset(self):
+        """Fresh KV caches (a new batch of sequences); position rewinds."""
+        self.caches = init_decode_caches(
+            self.cfg, self.config.batch, self.config.max_len,
+            dtype=self.config.resolved_cache_dtype)
+        self.position = 0
+
+    # ------------------------------------------------------- entry points
+
+    def prefill(self, batch: Pytree):
+        """Run the prompt through the model, filling the caches.  Returns
+        the logits at every prompt position."""
+        if self.params is None:
+            raise ConfigError(
+                "abstract session has no params; use ServeSession.create")
+        logits, self.caches = self._prefill(self.params, batch, self.caches)
+        self.position = self.cfg.num_prefix_tokens \
+            + int(batch["tokens"].shape[1])
+        return logits
+
+    def decode(self, tokens):
+        """One decode step at the session's current position; advances it."""
+        logits, self.caches = self._decode(self.params, tokens, self.caches,
+                                           jnp.int32(self.position))
+        self.position += 1
+        return logits
+
+    def generate(self, prompts: Pytree, gen_len: int,
+                 temperature: float = 1.0,
+                 key: Optional[jax.Array] = None,
+                 prompt_logits=None) -> np.ndarray:
+        """Prefill then sample ``gen_len`` tokens autoregressively.
+        ``prompts`` is the prefill batch dict (``tokens`` [B, S] plus any
+        frontend inputs).  Returns the sampled tokens ``[B, gen_len, ...]``.
+        ``prompt_logits`` skips the prefill (the caller already ran it on
+        this session's caches) and samples the first token from them.
+        """
+        key = jax.random.PRNGKey(self.config.seed) if key is None else key
+        B = prompts["tokens"].shape[0]
+        logits = (self.prefill(prompts) if prompt_logits is None
+                  else prompt_logits)
+
+        def sample(k, lg):
+            return jax.random.categorical(k, lg / temperature, axis=-1)
+
+        tok = sample(key, logits[:, 0])
+        out = [np.asarray(tok)]
+        for _ in range(gen_len - 1):
+            key, sk = jax.random.split(key)
+            step_tok = tok.reshape((B, 1) + tok.shape[1:])
+            logits = self.decode(step_tok)
+            tok = sample(sk, logits[:, 0])
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)
+
+    # ------------------------------------------------- lowering plumbing
+
+    def input_specs(self, shape_name: str):
+        """(shapes, shardings) of the prefill/decode step signature at the
+        named serve shape — feeds dryrun/hlo_analysis unchanged."""
+        return serve_specs(self.cfg, self.mesh, shape_name)

@@ -1,0 +1,221 @@
+"""The ``Trainer`` session: one object, one train state, one step signature.
+
+``Trainer.create(config)`` resolves a ``TrainerConfig`` into a live session:
+model config, mesh-native ``DuDeEngine``, the ``RoundAlgo`` server rule, the
+flat optimizer twin, and ONE canonical train state — a ``FlatTrainState``
+whose master params, optimizer slots and server slabs all live in the
+engine's segment-range ``[P]`` layout (P-axis sharded when a mesh is given).
+Every algorithm in the registry — ``dude``, ``dude_accum``, and the
+round-based Table-1 baselines ``sync_sgd`` / ``mifa`` / ``fedbuff`` — runs
+through the same jitted step:
+
+    metrics = trainer.step(batch, start_mask, commit_mask)
+
+There is no flat/pytree fork, no per-algo state tuple, and no caller-side
+restore dispatch: ``trainer.save(dir)`` always writes the flat format with
+the spec segment table, and ``Trainer.restore(ckpt_dir, config)`` reads
+EITHER a flat or a legacy pytree directory (``checkpoint_format`` decides),
+so old checkpoints keep loading through the one entry point.
+
+For lowering-only work (dry-run, HLO analysis) ``Trainer.abstract(config)``
+builds the same session without materializing any state;
+``trainer.input_specs(shape_name)`` returns the (shapes, shardings) of the
+full step signature, and ``trainer.step_fn`` is the unjitted step for
+custom ``jax.jit`` wrapping (shardings, donation).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import restore_train_state, save_checkpoint
+from ..core.algos import RoundAlgo, make_round_algo
+from ..launch.steps import (
+    abstract_train_state, init_flat_train_state, make_engine, make_train_step,
+    train_batch_specs,
+)
+from ..models import lm_init
+from ..optim import FlatTrainState, flat_twin
+from .config import ConfigError, TrainerConfig
+
+Pytree = Any
+
+__all__ = ["Trainer"]
+
+
+class Trainer:
+    """A live training session over the single flat train state.
+
+    Build with ``Trainer.create`` / ``Trainer.restore`` /
+    ``Trainer.abstract`` — the bare constructor wires the session objects
+    but does not initialize state.
+    """
+
+    def __init__(self, config: TrainerConfig):
+        self.config = config
+        self.cfg = config.model_config          # resolved ModelConfig
+        self.opt = config.make_optimizer()
+        self.fopt = flat_twin(self.opt)
+        self.dude_cfg = config.dude_config
+        self.options = config.train_options
+        self.mesh = config.mesh
+        self.engine = make_engine(self.cfg, self.mesh, self.dude_cfg,
+                                  self.options)
+        self.algo: RoundAlgo = make_round_algo(
+            config.algo, self.engine,
+            buffer_size=config.fedbuff_buffer_size)
+        self.state: Optional[FlatTrainState] = None
+        self.rounds = 0                         # steps taken this session
+        self._step_fn = None
+        self._jitted = None
+
+    # ------------------------------------------------------- constructors
+
+    @classmethod
+    def create(cls, config: TrainerConfig,
+               params: Optional[Pytree] = None) -> "Trainer":
+        """Fresh session: init params from ``config.seed`` (or adopt the
+        given pytree) and build the flat train state on the engine's
+        shardings."""
+        t = cls(config)
+        if params is None:
+            params = lm_init(jax.random.PRNGKey(config.seed), t.cfg)
+        t.state = init_flat_train_state(t.engine, t.opt, params, algo=t.algo)
+        return t
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, config: TrainerConfig,
+                step: Optional[int] = None) -> "Trainer":
+        """Resume a session from ``ckpt_dir`` — flat or legacy-pytree format,
+        auto-dispatched; ``step`` None loads the latest.  The session's
+        round counter resumes from the checkpoint step, so periodic saves
+        continue the step sequence instead of rewinding it."""
+        from ..checkpoint import latest_step
+        t = cls(config)
+        # restore into a zero-valued state (cheap: no lm_init of params that
+        # the checkpoint immediately overwrites; slots/server slabs are
+        # zero-init anyway, which is exactly what a legacy params-only
+        # checkpoint should leave in place)
+        t.state = t._shard(restore_train_state(ckpt_dir, step,
+                                               t._zero_state(),
+                                               t.engine.spec))
+        t.rounds = step if step is not None else (latest_step(ckpt_dir) or 0)
+        return t
+
+    def _shard(self, state: FlatTrainState) -> FlatTrainState:
+        """Land ``state`` on the session's P-axis shardings (checkpoint
+        restores rebuild leaves host-side, dropping any mesh placement)."""
+        if self.engine.mesh is None:
+            return state
+        from ..sharding import flat_train_state_shardings
+        sh = flat_train_state_shardings(self.engine.spec, self.engine.mesh,
+                                        self.engine.paxes, state.opt,
+                                        server_like=state.engine)
+        return jax.device_put(state, sh)
+
+    def _zero_state(self) -> FlatTrainState:
+        """A zero-valued ``FlatTrainState`` on the session's shardings."""
+        pf = jnp.zeros((self.engine.P,), jnp.float32)
+        return self._shard(FlatTrainState(pf, self.fopt.init(pf),
+                                          self.algo.init()))
+
+    @classmethod
+    def abstract(cls, config: TrainerConfig) -> "Trainer":
+        """Shapes-only session (state stays None): for lowering, dry-runs
+        and HLO analysis via ``input_specs`` / ``step_fn``."""
+        return cls(config)
+
+    # -------------------------------------------------------------- step
+
+    @property
+    def step_fn(self):
+        """The unjitted canonical step, built once per session:
+        ``(state, batch, start_mask, commit_mask) -> (state, metrics)``.
+        A stable function object, so repeated ``jax.jit(trainer.step_fn)``
+        calls hit one jit cache entry."""
+        if self._step_fn is None:
+            self._step_fn = make_train_step(
+                self.cfg, self.mesh, self.opt, self.dude_cfg,
+                options=self.options, engine=self.engine, algo=self.algo)
+        return self._step_fn
+
+    def _jit(self):
+        if self._jitted is None:
+            self._jitted = jax.jit(self.step_fn, donate_argnums=(0,))
+        return self._jitted
+
+    def step(self, batch: Pytree, start_mask, commit_mask) -> dict:
+        """Advance one semi-async round; updates ``self.state`` in place and
+        returns the metrics dict (``loss``, ``applied``)."""
+        if self.state is None:
+            raise ConfigError(
+                "abstract session has no state; use Trainer.create/restore")
+        self.state, metrics = self._jit()(
+            self.state, batch, jnp.asarray(start_mask),
+            jnp.asarray(commit_mask))
+        self.rounds += 1
+        return metrics
+
+    # ------------------------------------------------------------- views
+
+    def params(self) -> Pytree:
+        """The master params, unraveled to the model's pytree layout (per-
+        leaf target dtypes from the spec's segment table)."""
+        return self.engine.spec.unravel(self.state.params)
+
+    def param_count(self) -> int:
+        return self.engine.spec.size
+
+    # ------------------------------------------------------- checkpoints
+
+    def save(self, directory: Optional[str] = None,
+             step: Optional[int] = None) -> str:
+        """Write a flat-format checkpoint (spec segment table embedded);
+        defaults: the config's checkpoint directory, the session round."""
+        directory = directory or self.config.checkpoint.directory
+        if directory is None:
+            raise ConfigError("no checkpoint directory configured or given")
+        return save_checkpoint(directory, self.rounds if step is None
+                               else step, self.state,
+                               flat_spec=self.engine.spec)
+
+    def maybe_save(self) -> Optional[str]:
+        """Periodic save per the config's ``CheckpointPolicy`` (no-op unless
+        ``every`` divides the current round)."""
+        pol = self.config.checkpoint
+        if pol.directory and pol.every and self.rounds % pol.every == 0:
+            return self.save()
+        return None
+
+    # ------------------------------------------------- lowering plumbing
+
+    def state_specs(self):
+        """(ShapeDtypeStructs, shardings) of the ``FlatTrainState``."""
+        return abstract_train_state(self.cfg, self.mesh, self.opt,
+                                    self.dude_cfg, options=self.options,
+                                    engine=self.engine, algo=self.algo)
+
+    def input_specs(self, shape_name: str = "train_4k"):
+        """Shapes and shardings of the FULL step signature
+        ``(state, batch, start_mask, commit_mask)`` — feeds
+        ``launch/dryrun.py`` / ``launch/hlo_analysis.py`` unchanged."""
+        st_shapes, st_sh = self.state_specs()
+        (b_shapes, mask_sds), (b_sh, mask_sh) = train_batch_specs(
+            self.cfg, self.mesh, shape_name)
+        return ((st_shapes, b_shapes, mask_sds, mask_sds),
+                (st_sh, b_sh, mask_sh, mask_sh))
+
+    def lower(self, shape_name: str = "train_4k", donate: bool = True):
+        """Lower the jitted step at the named input shape with the session's
+        shardings (the dry-run's compile-and-fit proof)."""
+        shapes, shardings = self.input_specs(shape_name)
+        jitted = jax.jit(
+            self.step_fn,
+            in_shardings=shardings,
+            out_shardings=(shardings[0], None),
+            donate_argnums=(0,) if donate else (),
+        )
+        return jitted.lower(*shapes)

@@ -3,13 +3,15 @@ from .ckpt import (
     latest_step,
     restore_checkpoint,
     restore_flat_from_pytree,
+    restore_params,
     restore_params_from_flat,
+    restore_train_state,
     save_checkpoint,
     spec_manifest,
 )
 
 __all__ = [
     "save_checkpoint", "restore_checkpoint", "latest_step",
-    "checkpoint_format", "restore_params_from_flat",
-    "restore_flat_from_pytree", "spec_manifest",
+    "checkpoint_format", "restore_params", "restore_train_state",
+    "restore_params_from_flat", "restore_flat_from_pytree", "spec_manifest",
 ]

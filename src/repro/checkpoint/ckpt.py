@@ -190,6 +190,37 @@ def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# ------------------------------------------------- auto-format dispatch
+#
+# The one-call restore surface the session API (``api.Trainer`` /
+# ``api.ServeSession``) uses: read the manifest's ``format`` field and pick
+# the right of the four low-level entry points, so callers never fork on
+# flat vs. legacy-pytree directories.
+
+def restore_train_state(directory: str, step: Optional[int], like, spec):
+    """Restore a ``FlatTrainState`` from EITHER checkpoint format.
+
+    * ``"flat"`` — the full state (master params, optimizer slots, server
+      slabs) restores bit-for-bit, with pad-tail refit across
+      ``mesh_axis_size`` changes;
+    * ``"pytree"`` — a legacy params-only checkpoint: the master-params slab
+      is raveled in, slots/server state keep ``like``'s (fresh) values.
+    """
+    if checkpoint_format(directory, step) == "flat":
+        return restore_checkpoint(directory, step, like, flat_spec=spec)
+    return restore_flat_from_pytree(directory, step, like, spec)
+
+
+def restore_params(directory: str, step: Optional[int],
+                   params_like: Pytree) -> Pytree:
+    """Restore a params PYTREE from either checkpoint format: unravels the
+    master-params slab of a flat checkpoint, or loads a legacy pytree
+    checkpoint directly."""
+    if checkpoint_format(directory, step) == "flat":
+        return restore_params_from_flat(directory, step, params_like)
+    return restore_checkpoint(directory, step, params_like)
+
+
 # ------------------------------------------- flat <-> pytree conversion
 
 def restore_params_from_flat(directory: str, step: Optional[int],

@@ -7,7 +7,11 @@ Public API:
     [P]/[n, P] state layout, three interchangeable backends
     (reference / indexed / pallas).
   * schedules — worker speed models and arrival schedules.
-  * baselines — Table-1 comparison algorithms.
+  * algos — the RoundAlgo registry: every server rule (DuDe + Table-1
+    round baselines) on the flat slab layout, runnable mesh-native by the
+    production train step.
+  * baselines — Table-1 comparison algorithms as simulator callbacks (thin
+    wrappers over the algos rule cores).
   * simulator — event-driven asynchronous-training harness.
 """
 
@@ -25,6 +29,7 @@ from .schedules import (
     make_round_schedule,
     truncated_normal_speeds,
 )
+from .algos import ROUND_ALGOS, RoundAlgo, make_round_algo
 from .baselines import ALGO_NAMES, ServerAlgo, make_algo
 from .simulator import SimResult, simulate
 
@@ -35,5 +40,6 @@ __all__ = [
     "FlatSpec", "make_flat_spec",
     "RoundSchedule", "SpeedModel", "delay_stats", "event_stream",
     "make_round_schedule", "truncated_normal_speeds",
+    "ROUND_ALGOS", "RoundAlgo", "make_round_algo",
     "ALGO_NAMES", "ServerAlgo", "make_algo", "SimResult", "simulate",
 ]

@@ -1,0 +1,261 @@
+"""Round-mode server-algorithm registry on the flat slab layout.
+
+The paper's point is that DuDe-ASGD is one *server update rule* among peers
+(sync SGD, MIFA, FedBuff, the ASGD family).  This module is the single home
+of those rules expressed on the engine's canonical flat layout — ``[P]``
+vectors and ``[n, P]`` slabs in the segment-range split of a ``FlatSpec`` —
+so the SAME math runs in both execution modes:
+
+* the production train step (``launch/steps.py`` / ``api.Trainer``): one
+  ``RoundAlgo`` per session, its server state living inside the single
+  ``FlatTrainState`` and its round body running mesh-native (under the
+  engine's P-axis ``shard_map`` when a mesh is given — every rule here is
+  elementwise on P with worker-axis reductions local to each P-shard, so a
+  sharded round moves zero bytes);
+* the event-driven simulator (``core/simulator.py``): ``core/baselines.py``
+  wraps the very same rule cores (``sync_direction`` / ``mifa_update`` /
+  ``fedbuff_fold``) into per-arrival / per-round callbacks, making the
+  simulator a thin scheduling shell over this registry.
+
+A ``RoundAlgo`` consumes the per-round inputs of the semi-async SPMD driver
+— the ``[n, P]`` fresh gradients plus the schedule's start/commit masks —
+and produces the descent direction ``g`` and an ``applied`` gate:
+
+  ``round(state, fresh, start_mask, commit_mask) -> (state, g, applied)``
+
+``applied`` is a traced bool scalar gating the optimizer apply (FedBuff
+holds the model until its buffer fills; everything else applies every
+round).  The DuDe family does not go through ``round`` on the training hot
+path: ``fused_apply=True`` tells the step builder to call
+``DuDeEngine.round_apply`` instead, which fuses the round with the flat
+optimizer apply in one shard_map (PR 3).  ``round`` is still provided for
+every algo so equivalence tests and non-fused callers have one uniform
+entry point.
+
+Mask semantics per rule (all masks are ``[n]`` bool):
+
+* ``dude`` / ``dude_accum`` — paper §3: ``start_mask`` latches the fresh
+  gradient into ``inflight``, ``commit_mask`` folds ``inflight - g_workers``
+  into ``g_bar`` (``DuDeEngine.round``).
+* ``sync_sgd`` — ``commit_mask`` is the participation set; direction is the
+  mean of participating workers' fresh gradients (Khaled & Richtarik 2023).
+* ``mifa`` — participating workers (``commit_mask``) overwrite their row of
+  the gradient memory; direction is the mean over ALL rows, stale entries
+  included (Gu et al. 2021, no local updates).
+* ``fedbuff`` — participating workers' fresh gradients fold into one ``[P]``
+  accumulator; the model updates only when ``buffer_size`` gradients have
+  arrived, with the buffered mean (Nguyen et al. 2022, K=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+from .engine import DuDeEngine, EngineState
+
+Pytree = Any
+
+__all__ = [
+    "ROUND_ALGOS", "RoundAlgo", "make_round_algo",
+    "sync_direction", "mifa_update", "fedbuff_fold",
+]
+
+# every name the production driver / Trainer accepts for --algo
+ROUND_ALGOS = ("dude", "dude_accum", "sync_sgd", "mifa", "fedbuff")
+
+
+# ------------------------------------------------------------- rule cores
+#
+# The pure math, shared verbatim with core/baselines.py (the simulator's
+# per-arrival wrappers).  All operate on flat f32 slabs and are elementwise
+# on P; worker-axis reductions are local to any contiguous P-shard.
+
+def sync_direction(fresh: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean of the participating rows of ``fresh`` ``[n, P]`` -> ``[P]``."""
+    m = mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.sum(fresh.astype(jnp.float32) * m[:, None], axis=0) / cnt
+
+
+def mifa_update(memory: jnp.ndarray, fresh: jnp.ndarray, mask: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """MIFA gradient memory update: participating rows refresh, direction is
+    the mean over all n rows (stale entries included)."""
+    memory = jnp.where(mask[:, None], fresh.astype(jnp.float32), memory)
+    return memory, jnp.mean(memory, axis=0)
+
+
+def fedbuff_fold(acc: jnp.ndarray, count: jnp.ndarray, grad_sum: jnp.ndarray,
+                 k: jnp.ndarray, buffer_size: int):
+    """Fold ``k`` arrived gradients (summed into ``grad_sum``) into the
+    FedBuff accumulator; flush when the buffer holds >= ``buffer_size``.
+
+    Returns ``(acc', count', g, applied)`` — ``g`` is the buffered mean
+    (meaningful only when ``applied``), and the accumulator resets on flush.
+    Used per-arrival by the simulator (k=1, flush exactly at buffer_size, so
+    the mean divides by buffer_size as in the paper) and per-round by the
+    production step (k = |commit set|, which may overshoot the buffer within
+    one round — the mean then divides by the actual count).
+    """
+    acc = acc + grad_sum.astype(jnp.float32)
+    count = count + k.astype(jnp.int32)
+    applied = count >= buffer_size
+    g = acc / jnp.maximum(count, 1).astype(jnp.float32)
+    zero = jnp.zeros((), jnp.int32)
+    return (jnp.where(applied, jnp.zeros_like(acc), acc),
+            jnp.where(applied, zero, count), g, applied)
+
+
+# --------------------------------------------------------------- registry
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundAlgo:
+    """One server update rule bound to an engine, for the round-based
+    production path.
+
+    ``init()`` builds the rule's server state as flat slabs (an
+    ``EngineState`` for the DuDe family; smaller slab tuples for the
+    baselines) — it is the ``server`` field of the session's single
+    ``FlatTrainState``.  ``round(state, fresh, sm, cm)`` advances it one
+    semi-async round.  When ``fused_apply`` is set the step builder skips
+    ``round`` and calls ``engine.round_apply`` (round + flat optimizer apply
+    in one shard_map / Pallas pass) — the gate is then always-applied.
+    """
+
+    name: str
+    engine: DuDeEngine
+    fused_apply: bool
+    init_fn: Callable[[], Pytree]
+    # (state, fresh [n, P], start_mask, commit_mask)
+    #   -> (state, g [P] f32, applied scalar bool)
+    round_fn: Callable[..., tuple]
+    # abstract server state for lowering; None = eval_shape(init_fn)
+    state_shapes_fn: Callable[[], Pytree] = None
+
+    def init(self) -> Pytree:
+        return self.init_fn()
+
+    def state_shapes(self) -> Pytree:
+        """Abstract (ShapeDtypeStruct) server state, for lowering."""
+        if self.state_shapes_fn is not None:
+            return self.state_shapes_fn()
+        return jax.eval_shape(self.init_fn)
+
+    def round(self, state, fresh, start_mask, commit_mask):
+        return self.round_fn(state, fresh,
+                             start_mask.astype(bool), commit_mask.astype(bool))
+
+    # -------------------------------------------------- shard_map plumbing
+
+    def _shard(self, body, in_kinds: tuple, out_kinds: tuple):
+        """Run ``body`` under the engine's P-axis shard_map when meshed.
+
+        Kinds: ``"vec"`` = ``[.., P]`` sharded on the last axis, ``"row"`` =
+        ``[n, P]`` sharded on P, ``"repl"`` = replicated.  Every rule body is
+        elementwise on P (worker reductions stay inside the shard), so the
+        sharded round is collective-free, exactly like the DuDe engine's.
+        """
+        eng = self.engine
+        if eng.mesh is None:
+            return body
+        kind = {"vec": PartitionSpec(eng.paxes),
+                "row": PartitionSpec(None, eng.paxes),
+                "repl": PartitionSpec()}
+        out = tuple(kind[k] for k in out_kinds)
+        return shard_map(body, mesh=eng.mesh,
+                         in_specs=tuple(kind[k] for k in in_kinds),
+                         out_specs=out if len(out) > 1 else out[0],
+                         check_rep=False)
+
+
+def _make_dude(engine: DuDeEngine, name: str) -> RoundAlgo:
+    def round_fn(state: EngineState, fresh, sm, cm):
+        state, g_bar = engine.round(state, fresh, sm, cm)
+        return state, g_bar, jnp.array(True)
+
+    return RoundAlgo(name, engine, fused_apply=True,
+                     init_fn=engine.init, round_fn=round_fn,
+                     state_shapes_fn=engine.state_shapes)
+
+
+def _make_sync(engine: DuDeEngine) -> RoundAlgo:
+    def round_fn(state, fresh, sm, cm):
+        body = algo._shard(sync_direction, ("row", "repl"), ("vec",))
+        return state, body(fresh, cm), jnp.array(True)
+
+    algo = RoundAlgo("sync_sgd", engine, fused_apply=False,
+                     init_fn=lambda: (), round_fn=round_fn)
+    return algo
+
+
+def _make_mifa(engine: DuDeEngine) -> RoundAlgo:
+    n, P = engine.n_workers, engine.P
+
+    def init_fn():
+        return jnp.zeros((n, P), jnp.float32)
+
+    def round_fn(memory, fresh, sm, cm):
+        body = algo._shard(mifa_update, ("row", "row", "repl"), ("row", "vec"))
+        memory, g = body(memory, fresh, cm)
+        return memory, g, jnp.array(True)
+
+    algo = RoundAlgo("mifa", engine, fused_apply=False,
+                     init_fn=init_fn, round_fn=round_fn)
+    return algo
+
+
+def _make_fedbuff(engine: DuDeEngine, buffer_size: int = 4) -> RoundAlgo:
+    P = engine.P
+
+    def init_fn():
+        return (jnp.zeros((P,), jnp.float32), jnp.zeros((), jnp.int32))
+
+    def masked_sum(fresh, cm):
+        return jnp.sum(fresh.astype(jnp.float32)
+                       * cm.astype(jnp.float32)[:, None], axis=0)
+
+    def round_fn(state, fresh, sm, cm):
+        acc, count = state
+        body = algo._shard(masked_sum, ("row", "repl"), ("vec",))
+        # scalar bookkeeping stays outside the shard_map (replicated); the
+        # accumulator fold/reset is elementwise on the sharded [P] slab.
+        acc, count, g, applied = fedbuff_fold(
+            acc, count, body(fresh, cm), jnp.sum(cm.astype(jnp.int32)),
+            buffer_size)
+        return (acc, count), g, applied
+
+    algo = RoundAlgo("fedbuff", engine, fused_apply=False,
+                     init_fn=init_fn, round_fn=round_fn)
+    return algo
+
+
+def make_round_algo(name: str, engine: DuDeEngine,
+                    buffer_size: int = 4) -> RoundAlgo:
+    """Build the named server rule bound to ``engine``.
+
+    The DuDe family requires the engine's ``accumulate`` flag to match the
+    name (``dude_accum`` = the beyond-paper running-mean latch, reference
+    backend only — enforced by ``DuDeEngine`` itself and, earlier, by
+    ``api.TrainerConfig``).
+    """
+    if name in ("dude", "dude_accum"):
+        want = name == "dude_accum"
+        if engine.accumulate != want:
+            raise ValueError(
+                f"algo {name!r} needs an engine with accumulate={want}, "
+                f"got accumulate={engine.accumulate}")
+        return _make_dude(engine, name)
+    if name == "sync_sgd":
+        return _make_sync(engine)
+    if name == "mifa":
+        return _make_mifa(engine)
+    if name == "fedbuff":
+        return _make_fedbuff(engine, buffer_size=buffer_size)
+    raise ValueError(f"unknown round algo {name!r}; options: {ROUND_ALGOS}")

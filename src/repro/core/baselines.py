@@ -12,6 +12,12 @@ flat ``[n, P]`` slab, FedBuff's accumulator a flat ``[P]`` vector.  Gradients
 are raveled once on arrival and the aggregated direction unraveled once for
 the parameter update; everything in between is a single-buffer streaming op.
 
+Since the session-API redesign the rule MATH lives once, in
+``core/algos.py`` (``sync_direction`` / ``mifa_update`` / ``fedbuff_fold``
+and the ``RoundAlgo`` registry the production train step runs mesh-native);
+this module only wraps those cores into the per-arrival / per-round
+callbacks the event-driven simulator schedules.
+
 Implemented (paper Table 1):
   * Synchronous SGD            [Khaled & Richtarik 2023]  — round-based
   * MIFA (no local updates)    [Gu et al. 2021]           — round-based, full agg
@@ -30,6 +36,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .algos import fedbuff_fold, mifa_update, sync_direction
 from .engine import DuDeEngine
 from .flatten import make_flat_spec
 
@@ -87,12 +94,18 @@ class ServerAlgo:
 
 
 def _make_sync(n: int) -> ServerAlgo:
+    box = {}
+
     def init_state(grad_like):
+        box["spec"] = make_flat_spec(grad_like)
         return ()
 
     def on_round(state, stacked_grads, mask, params, lr):
-        # mask is all-ones for sync SGD; average of fresh gradients.
-        g = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked_grads)
+        # mask is all-ones for sync SGD; average of fresh gradients
+        # (algos.sync_direction, the same core the production step runs).
+        spec = box["spec"]
+        g = spec.unravel(sync_direction(spec.ravel_stacked(stacked_grads),
+                                        mask))
         return state, _sgd_apply(params, g, lr), g
 
     return ServerAlgo("sync_sgd", "rounds", init_state, None, on_round=on_round)
@@ -101,7 +114,7 @@ def _make_sync(n: int) -> ServerAlgo:
 def _make_mifa(n: int) -> ServerAlgo:
     """MIFA w/o local updates: per-worker gradient memory (one flat [n, P]
     slab), rounds with partial participation; absent workers contribute their
-    stale entry."""
+    stale entry.  The memory update is ``algos.mifa_update``."""
     box = {}
 
     def init_state(grad_like):
@@ -110,9 +123,9 @@ def _make_mifa(n: int) -> ServerAlgo:
 
     def on_round(memory, stacked_grads, mask, params, lr):
         spec = box["spec"]
-        fresh = spec.ravel_stacked(stacked_grads)
-        memory = jnp.where(mask[:, None], fresh, memory)
-        g = spec.unravel(jnp.mean(memory, axis=0))
+        memory, g_flat = mifa_update(memory, spec.ravel_stacked(stacked_grads),
+                                     mask)
+        g = spec.unravel(g_flat)
         return memory, _sgd_apply(params, g, lr), g
 
     return ServerAlgo("mifa", "rounds", init_state, None, on_round=on_round,
@@ -124,7 +137,10 @@ def _make_mifa(n: int) -> ServerAlgo:
 
 def _make_fedbuff(n: int, buffer_size: int = 4) -> ServerAlgo:
     """FedBuff with K=1 local step: buffer ``buffer_size`` deltas in one flat
-    [P] accumulator, then apply their mean."""
+    [P] accumulator, then apply their mean.  The fold/flush rule is
+    ``algos.fedbuff_fold`` with k=1 (one arrival at a time), so the count at
+    flush is exactly ``buffer_size`` and the buffered mean divides by it, as
+    in the paper."""
     box = {}
 
     def init_state(grad_like):
@@ -134,20 +150,14 @@ def _make_fedbuff(n: int, buffer_size: int = 4) -> ServerAlgo:
 
     def on_gradient(state, worker, grad, params, lr):
         spec = box["spec"]
-        acc, cnt = state
-        acc = acc + spec.ravel(grad)
-        cnt = cnt + 1
+        acc, cnt, g_flat, applied = fedbuff_fold(
+            state[0], state[1], spec.ravel(grad), jnp.int32(1), buffer_size)
 
         def flush(_):
-            g = spec.unravel(acc / buffer_size)
-            new_params = _sgd_apply(params, g, lr)
-            return ((jnp.zeros_like(acc), jnp.zeros((), jnp.int32)),
-                    new_params, jnp.array(True))
+            return _sgd_apply(params, spec.unravel(g_flat), lr)
 
-        def hold(_):
-            return (acc, cnt), params, jnp.array(False)
-
-        return jax.lax.cond(cnt >= buffer_size, flush, hold, None)
+        new_params = jax.lax.cond(applied, flush, lambda _: params, None)
+        return (acc, cnt), new_params, applied
 
     return ServerAlgo("fedbuff", "greedy", init_state, on_gradient,
                       apply_period=buffer_size)

@@ -9,6 +9,11 @@ update) is jitted JAX; the event loop is host Python.
 The simulator is model-agnostic: pass ``grad_fn(params, batch, rng) ->
 (loss, grads)`` and a ``sample_fn(worker, rng) -> batch`` drawing from that
 worker's (heterogeneous) local data.
+
+Since the session-API redesign this file is a thin SCHEDULING shell: the
+server math lives in the shared rule registry (``core/algos.py``, wrapped
+for per-arrival delivery by ``core/baselines.py``), identical to what the
+production train step runs mesh-native.
 """
 
 from __future__ import annotations
@@ -41,7 +46,10 @@ class SimResult:
     n_grads: int             # stochastic gradients computed (sample complexity)
 
 
-def _record(eval_fn, params, running_loss, g):
+def _record(eval_fn, params, running_loss):
+    """Recorded metric: eval if an ``eval_fn`` is given, else the running
+    train-loss EMA.  (The gradient is NOT an input — the signature used to
+    carry an unused ``g`` from before grad norms were recorded separately.)"""
     if eval_fn is not None:
         return float(eval_fn(params))
     return float(running_loss)
@@ -92,7 +100,7 @@ def simulate(
         )
         times.append(t_now)
         iters.append(it)
-        losses.append(_record(eval_fn, params, running, g))
+        losses.append(_record(eval_fn, params, running))
         gnorms.append(gn)
 
     if algo.scheduling == "rounds":

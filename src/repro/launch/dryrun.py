@@ -19,8 +19,10 @@ import traceback     # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.api import (  # noqa: E402
+    ServeConfig, ServeSession, Trainer, TrainerConfig,
+)
 from repro.configs import ARCH_IDS, get_config           # noqa: E402
-from repro.core.dude import DuDeConfig                   # noqa: E402
 from repro.launch.costs import model_flops_6nd, param_counts, roofline  # noqa: E402
 from repro.launch.hlo_analysis import (  # noqa: E402
     analyze_collectives, cost_analysis_dict, memory_stats,
@@ -28,14 +30,7 @@ from repro.launch.hlo_analysis import (  # noqa: E402
 from repro.launch.mesh import HW, make_production_mesh, mesh_num_devices  # noqa: E402
 from repro.launch.steps import (                          # noqa: E402
     INPUT_SHAPES,
-    TrainOptions,
-    abstract_train_state,
-    make_decode_step,
-    make_prefill_step,
-    make_train_step,
-    serve_specs,
     shape_supported,
-    train_batch_specs,
 )
 
 
@@ -59,41 +54,25 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
     try:
         with mesh:
             if kind == "train":
-                dude_cfg = DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
-                options = (
-                    TrainOptions(grad_dtype=jnp.bfloat16, constrain_grads=True)
-                    if optimized else TrainOptions()
-                )
-                (st_shapes, st_sh) = abstract_train_state(
-                    cfg, mesh, dude_cfg=dude_cfg, options=options)
-                (b_shapes, mask_sds), (b_sh, mask_sh) = train_batch_specs(
-                    cfg, mesh, shape_name
-                )
-                step = make_train_step(cfg, mesh, dude_cfg=dude_cfg,
-                                       options=options)
-                jitted = jax.jit(
-                    step,
-                    in_shardings=(st_sh[0], st_sh[1], st_sh[2], b_sh, mask_sh, mask_sh),
-                    out_shardings=(st_sh[0], st_sh[1], st_sh[2], None),
-                    donate_argnums=(0, 1, 2),
-                )
-                lowered = jitted.lower(
-                    st_shapes[0], st_shapes[1], st_shapes[2],
-                    b_shapes, mask_sds, mask_sds,
-                )
-            elif kind == "prefill":
-                (args, shardings) = serve_specs(cfg, mesh, shape_name)
-                step = make_prefill_step(cfg, mesh)
-                jitted = jax.jit(step, in_shardings=shardings,
-                                 out_shardings=(None, shardings[2]),
-                                 donate_argnums=(2,))
-                lowered = jitted.lower(*args)
-            else:  # decode
-                (args, shardings) = serve_specs(cfg, mesh, shape_name)
-                use_window = (
-                    shape_name == "long_500k" and cfg.sliding_window is not None
-                )
-                step = make_decode_step(cfg, mesh, use_window=use_window)
+                # the ONE session API: an abstract (shapes-only) Trainer
+                # lowers the canonical flat train step with its shardings
+                session = Trainer.abstract(TrainerConfig(
+                    arch=cfg, mesh=mesh,
+                    grad_dtype=jnp.bfloat16 if optimized else None,
+                    constrain_grads=optimized,
+                ))
+                lowered = session.lower(shape_name)
+            else:  # prefill / decode
+                spec = INPUT_SHAPES[shape_name]
+                session = ServeSession.abstract(ServeConfig(
+                    arch=cfg, batch=spec["global_batch"],
+                    max_len=spec["seq_len"], mesh=mesh,
+                    use_window=(shape_name == "long_500k"
+                                and cfg.sliding_window is not None),
+                ))
+                (args, shardings) = session.input_specs(shape_name)
+                step = (session.prefill_fn if kind == "prefill"
+                        else session.decode_fn)
                 jitted = jax.jit(step, in_shardings=shardings,
                                  out_shardings=(None, shardings[2]),
                                  donate_argnums=(2,))

@@ -1,5 +1,7 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-shared step — the production decode path (`serve_step`) exercised end-to-end.
+"""Batched serving driver over the ``api.ServeSession``: prefill a batch of
+prompts, then decode with the shared production serve step.  ``--ckpt-dir``
+serves straight from a training checkpoint (flat or legacy pytree format,
+auto-dispatched).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
@@ -13,12 +15,8 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import init_decode_caches, lm_init
+from repro.api import ServeConfig, ServeSession
 from repro.models.stubs import make_prefix_embeddings
 
 
@@ -30,58 +28,56 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve params from this checkpoint (either format)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
+    try:
+        from repro.configs import get_config
+        cfg_probe = get_config(args.arch)
+        if args.smoke:
+            cfg_probe = cfg_probe.smoke()
+        config = ServeConfig(
+            arch=args.arch, smoke=args.smoke, batch=args.batch,
+            seed=args.seed,
+            max_len=cfg_probe.num_prefix_tokens + args.prompt_len
+            + args.gen_len)
+    except ValueError as e:   # ConfigError or get_config's unknown-arch
+        ap.error(str(e))
+
+    session = ServeSession.create(config, ckpt_dir=args.ckpt_dir)
+    cfg = session.cfg
+
     key = jax.random.PRNGKey(args.seed)
-    params = lm_init(key, cfg)
-
     B = args.batch
-    max_len = cfg.num_prefix_tokens + args.prompt_len + args.gen_len
-    caches = init_decode_caches(cfg, B, max_len,
-                                dtype=jnp.float32 if args.smoke else jnp.bfloat16)
-
     tshape = (B, args.prompt_len) + (
         (cfg.num_codebooks,) if cfg.num_codebooks > 1 else ()
     )
-    prompts = jax.random.randint(key, tshape, 0, cfg.vocab_size)
-    batch = {"tokens": prompts}
+    prompts = {"tokens": jax.random.randint(key, tshape, 0, cfg.vocab_size)}
     if cfg.frontend:
-        batch["prefix_emb"] = make_prefix_embeddings(key, cfg, B)
-
-    prefill_step = jax.jit(make_prefill_step(cfg))
-    decode_step = jax.jit(make_decode_step(cfg), static_argnames=())
+        prompts["prefix_emb"] = make_prefix_embeddings(key, cfg, B)
 
     t0 = time.time()
-    logits, caches = prefill_step(params, batch, caches)
+    logits = session.prefill(prompts)
+    jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
-    def sample(key, logits):
-        return jax.random.categorical(key, logits / args.temperature, axis=-1)
-
-    pos0 = cfg.num_prefix_tokens + args.prompt_len
-    tok = sample(key, logits[:, 0])  # [B] or [B, n_cb]
-    generated = [np.asarray(tok)]
+    # decode continues from the prefilled caches (generate skips the
+    # prefill when handed the prompt logits)
     t0 = time.time()
-    for t in range(args.gen_len - 1):
-        key, sk = jax.random.split(key)
-        step_tok = tok.reshape((B, 1) + tok.shape[1:])
-        logits, caches = decode_step(params, step_tok, caches,
-                                     jnp.int32(pos0 + t))
-        tok = sample(sk, logits[:, 0])
-        generated.append(np.asarray(tok))
+    gen = session.generate(prompts, args.gen_len,
+                           temperature=args.temperature, key=key,
+                           prompt_logits=logits)
     t_decode = time.time() - t0
 
-    gen = np.stack(generated, axis=1)
     print(f"[serve] generated shape={gen.shape}")
     print(f"[serve] first sequences: {gen[:2, :8].tolist()}")
     print(json.dumps({
         "arch": cfg.name, "batch": B,
         "prefill_s": round(t_prefill, 3),
-        "decode_tok_per_s": round(B * (args.gen_len - 1) / max(t_decode, 1e-9), 1),
+        "decode_tok_per_s": round(
+            B * (args.gen_len - 1) / max(t_decode, 1e-9), 1),
     }))
 
 

@@ -1,27 +1,35 @@
 """Jitted step builders for the production path (DESIGN.md mode B) and the
 serving path, plus ShapeDtypeStruct ``input_specs`` for the dry-run.
+(The session layer over these builders — one object, one state, one step
+signature — is ``repro.api``; new callers should start there.)
 
-train_step semantics (semi-async DuDe round):
+train_step semantics (semi-async round):
   1. every worker group computes the gradient of the live model on its own
      heterogeneous shard — one vmapped backward, worker axis leading;
-  2. the ServerEngine round latches starting workers' gradients and commits
-     finishing workers' deltas (host-precomputed masks from the speed model);
-  3. the optimizer applies the dual-delayed aggregated direction g^t.
+  2. the server rule (a ``core.algos.RoundAlgo``: the DuDe engine round, or
+     a round-based Table-1 baseline on the same slabs) consumes the fresh
+     ``[n, P]`` gradients and the host-precomputed start/commit masks;
+  3. the flat optimizer applies the rule's direction g^t on the ``[P]``
+     master params — fused into the round for the DuDe family
+     (``engine.round_apply``), gated by the rule's ``applied`` flag
+     otherwise (FedBuff holds the model while its buffer fills).
 
-Since the mesh-native ServerEngine refactor the train loop's DuDe state IS
-the engine's flat ``EngineState`` (padded ``[P]``/``[n, P]`` slabs), sharded
-on the P axis by the segment ranges of the ``FlatSpec`` shard table.  The
-stacked gradients are raveled to the same ``[n, P]`` layout right after the
-vmapped backward; with ``constrain_grads`` the ravel happens INSIDE a
-``with_sharding_constraint`` pinned to the slab sharding, so GSPMD emits a
-reduce-scatter straight into the shard each device owns instead of
-all-reduce + local slice.
+The canonical train state is the flat ``FlatTrainState`` (master params +
+optimizer slots + server slabs, all padded ``[P]``/``[n, P]`` vectors),
+sharded on the P axis by the segment ranges of the ``FlatSpec`` shard
+table.  The stacked gradients are raveled to the same ``[n, P]`` layout
+right after the vmapped backward; with ``constrain_grads`` the ravel
+happens INSIDE a ``with_sharding_constraint`` pinned to the slab sharding,
+so GSPMD emits a reduce-scatter straight into the shard each device owns
+instead of all-reduce + local slice.  The legacy pytree-tuple signature
+survives as a thin DuDe-only compat adapter (one release).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -30,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.algos import RoundAlgo, make_round_algo
 from ..core.dude import DuDeConfig
 from ..core.engine import DuDeEngine, EngineState
 from ..core.flatten import make_flat_spec
@@ -37,7 +46,7 @@ from ..models import decode_step as model_decode_step
 from ..models import forward, init_decode_caches, lm_init, loss_fn, prefill
 from ..models.config import ModelConfig
 from ..models.stubs import token_shape
-from ..optim import FlatTrainState, flat_twin, sgd
+from ..optim import FlatOptState, FlatTrainState, OptState, flat_twin, sgd
 from ..sharding import (
     batch_sharding,
     cache_shardings,
@@ -121,29 +130,53 @@ def make_engine(cfg: ModelConfig, mesh=None,
     )
 
 
+def _deprecated_flat_kw(fn_name: str, options: TrainOptions,
+                        flat_optimizer) -> TrainOptions:
+    """One-release shim for the retired ``flat_optimizer=`` keyword that used
+    to shadow ``TrainOptions.flat_optimizer`` — the options field is the one
+    source of truth now."""
+    if flat_optimizer is None:
+        return options
+    warnings.warn(
+        f"the flat_optimizer= keyword on {fn_name} is deprecated and will be "
+        "removed; set TrainOptions(flat_optimizer=...) (or use api.Trainer, "
+        "which is always flat) instead",
+        DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(options, flat_optimizer=bool(flat_optimizer))
+
+
 def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                     dude_cfg: Optional[DuDeConfig] = None,
                     options: TrainOptions = TrainOptions(),
                     engine: Optional[DuDeEngine] = None,
+                    algo: Optional[RoundAlgo] = None,
                     flat_optimizer: Optional[bool] = None) -> Callable:
-    """The jitted round step.
+    """The jitted round step.  The CANONICAL step is the flat one:
 
-    Pytree mode (default): ``(params, opt_state, dude_state, batch, sm, cm)
-    -> (params, opt_state, dude_state, metrics)`` — the engine round runs on
-    flat slabs, but g_bar is unraveled (regathered on a mesh) every step to
-    feed the per-leaf optimizer apply.
-
-    Flat mode (``flat_optimizer=True`` or ``options.flat_optimizer``):
     ``(state: FlatTrainState, batch, sm, cm) -> (state, metrics)`` — master
     params and optimizer slots stay in the engine's segment-range ``[P]``
-    layout, the round and the apply fuse into one shard_map
-    (``engine.round_apply``, zero-collective), and the only gather left is
-    the single params all-gather feeding ``spec.unravel`` for the forward.
+    layout; for the DuDe family the round and the apply fuse into one
+    shard_map (``engine.round_apply``, zero-collective), for any other
+    ``RoundAlgo`` from the registry (``sync_sgd`` / ``mifa`` / ``fedbuff``)
+    the rule's round body runs mesh-native on the same slabs and its
+    ``applied`` gate holds the optimizer when the rule says so.  The only
+    gather left is the single params all-gather feeding ``spec.unravel``
+    for the forward.
+
+    Pytree mode (``options.flat_optimizer=False``, DuDe family only) is a
+    thin COMPAT ADAPTER kept for one release: ``(params, opt_state,
+    dude_state, batch, sm, cm) -> (params, opt_state, dude_state, metrics)``
+    shares ``fresh_grads`` and the engine round with the flat step and
+    differs only in applying the pytree optimizer per leaf — which matches
+    the flat twin bit-for-bit on f32 params (tests/test_flat_state.py).
+    Convert a held tuple state with ``flat_state_from_legacy``.
     """
+    options = _deprecated_flat_kw("make_train_step", options, flat_optimizer)
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
-    flat = options.flat_optimizer if flat_optimizer is None else flat_optimizer
+    algo = algo or make_round_algo(
+        "dude_accum" if engine.accumulate else "dude", engine)
     shard = make_shard_hook(mesh)
 
     gdt = options.grad_dtype or jnp.float32
@@ -203,36 +236,66 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
             fresh = jax.lax.with_sharding_constraint(fresh, flat_sh)
         return fresh, losses
 
-    if flat:
-        fopt = flat_twin(opt)
-        repl_sh = None
-        if mesh is not None:
-            repl_sh = NamedSharding(mesh, P())
+    fopt = flat_twin(opt)
+    repl_sh = None
+    if mesh is not None:
+        repl_sh = NamedSharding(mesh, P())
 
-        def flat_train_step(state: FlatTrainState, batch,
-                            start_mask, commit_mask):
-            pf = state.params
-            if repl_sh is not None:
-                # THE one all-gather per step: materialize the full [P]
-                # vector once; every leaf slice below is then local, and the
-                # forward consumes the leaves without further param
-                # collectives (re-sharding them per-leaf here would turn
-                # into FSDP-style per-layer re-gathers).
-                pf = jax.lax.with_sharding_constraint(pf, repl_sh)
-            # slice+reshape+cast to the per-leaf target dtypes recorded in
-            # the FlatSpec (f32 masters feed a bf16 forward at large scale)
-            params = engine.spec.unravel(pf)
-            fresh, losses = fresh_grads(params, batch)
-            eng_state, _, pf_new, opt_new = engine.round_apply(
+    def flat_train_step(state: FlatTrainState, batch,
+                        start_mask, commit_mask):
+        pf = state.params
+        if repl_sh is not None:
+            # THE one all-gather per step: materialize the full [P]
+            # vector once; every leaf slice below is then local, and the
+            # forward consumes the leaves without further param
+            # collectives (re-sharding them per-leaf here would turn
+            # into FSDP-style per-layer re-gathers).
+            pf = jax.lax.with_sharding_constraint(pf, repl_sh)
+        # slice+reshape+cast to the per-leaf target dtypes recorded in
+        # the FlatSpec (f32 masters feed a bf16 forward at large scale)
+        params = engine.spec.unravel(pf)
+        fresh, losses = fresh_grads(params, batch)
+        if algo.fused_apply:
+            srv_state, _, pf_new, opt_new = engine.round_apply(
                 state.engine, fresh, start_mask, commit_mask,
                 state.params, state.opt, fopt)
-            return (FlatTrainState(pf_new, opt_new, eng_state),
-                    {"loss": jnp.mean(losses)})
+            applied = jnp.array(True)
+        else:
+            srv_state, g, applied = algo.round(
+                state.engine, fresh, start_mask, commit_mask)
+            # gated flat apply: slots/params/step only advance on rounds
+            # the rule actually applies (FedBuff holds until its buffer
+            # fills); everything stays elementwise on the sharded [P] slabs.
+            t_new = state.opt.step + applied.astype(jnp.int32)
+            pf_up, slots_up = fopt.update(state.params, g,
+                                          state.opt.slots, t_new)
+            pf_new = jnp.where(applied, pf_up, state.params)
+            slots_new = jax.tree.map(
+                lambda u, o: jnp.where(applied, u, o),
+                slots_up, state.opt.slots)
+            opt_new = FlatOptState(t_new, slots_new)
+        return (FlatTrainState(pf_new, opt_new, srv_state),
+                {"loss": jnp.mean(losses),
+                 "applied": applied.astype(jnp.float32)})
 
+    if options.flat_optimizer:
         return flat_train_step
 
-    def train_step(params, opt_state, dude_state: EngineState, batch,
-                   start_mask, commit_mask):
+    if not algo.fused_apply:
+        raise ValueError(
+            f"the legacy pytree step signature only supports the DuDe "
+            f"family; algo {algo.name!r} needs the flat step "
+            "(TrainOptions(flat_optimizer=True) or api.Trainer)")
+
+    def train_step(params, opt_state: OptState, dude_state: EngineState,
+                   batch, start_mask, commit_mask):
+        """COMPAT ADAPTER (legacy tuple signature, DuDe family only, kept
+        for one release): same fresh_grads and engine round as the flat
+        step, with the aggregated direction unraveled to feed the pytree
+        optimizer apply.  The pytree apply and the flat twin agree
+        bit-for-bit on f32 params (tests/test_flat_state.py), so this path
+        adds no second source of optimizer math — use ``api.Trainer`` /
+        the flat step for anything new."""
         fresh, losses = fresh_grads(params, batch)
         dude_state, g_flat = engine.round(dude_state, fresh,
                                           start_mask, commit_mask)
@@ -241,6 +304,40 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
         return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
 
     return train_step
+
+
+def flat_state_from_legacy(engine: DuDeEngine, opt, params: Pytree,
+                           opt_state: OptState,
+                           dude_state: EngineState) -> FlatTrainState:
+    """Migration shim: a legacy ``(params, opt_state, dude_state)`` tuple ->
+    the canonical ``FlatTrainState`` (master params raveled to f32 ``[P]``,
+    per-leaf optimizer slots raveled to the flat twin's slab layout, engine
+    state adopted as-is) — so an old pytree-mode loop can resume through
+    ``api.Trainer`` mid-run."""
+    spec = engine.spec
+    state = FlatTrainState(
+        spec.ravel(params, jnp.float32),
+        FlatOptState(opt_state.step,
+                     _slots_to_flat(spec, opt.name, opt_state.slots)),
+        dude_state)
+    if engine.mesh is not None:
+        sh = flat_train_state_shardings(engine.spec, engine.mesh,
+                                        engine.paxes, state.opt,
+                                        server_like=dude_state)
+        state = jax.device_put(state, sh)
+    return state
+
+
+def _slots_to_flat(spec, opt_name: str, slots: Pytree) -> Pytree:
+    """Per-leaf optimizer slots -> the flat twin's ``[P]`` slab layout."""
+    if opt_name == "sgd":
+        return ()
+    if opt_name == "momentum":
+        return spec.ravel(slots, jnp.float32)
+    if opt_name == "adamw":
+        return {"m": spec.ravel(slots["m"], jnp.float32),
+                "v": spec.ravel(slots["v"], jnp.float32)}
+    raise ValueError(f"optimizer {opt_name!r} has no flat slot layout")
 
 
 def _grad_reduce_scatter(mesh, paxes: tuple) -> Callable:
@@ -311,32 +408,41 @@ def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
                          dude_cfg: Optional[DuDeConfig] = None,
                          options: TrainOptions = TrainOptions(),
                          engine: Optional[DuDeEngine] = None,
+                         algo: Optional[RoundAlgo] = None,
                          flat_optimizer: Optional[bool] = None):
     """Returns (arg_shapes, arg_shardings) for the train step's state.
 
-    Pytree mode: a ``(params, opt_state, dude_state)`` tuple (and the same
-    tuple of shardings).  The DuDe entry is the flat ``EngineState`` of
-    ``make_engine`` — P-axis sharded via ``engine_state_shardings`` when the
-    engine is mesh-native, replicated otherwise.
-
-    Flat mode (``flat_optimizer`` / ``options.flat_optimizer``): one
+    Flat mode (``options.flat_optimizer``, the canonical state): one
     ``FlatTrainState`` of ShapeDtypeStructs and its
     ``flat_train_state_shardings`` — every slab rides the engine's
-    segment-range P-axis split.
+    segment-range P-axis split, with the server entry shaped by the
+    session's ``RoundAlgo`` (an ``EngineState`` for the DuDe family, the
+    rule's own slabs otherwise).
+
+    Pytree mode (compat): a ``(params, opt_state, dude_state)`` tuple (and
+    the same tuple of shardings).  The DuDe entry is the flat
+    ``EngineState`` of ``make_engine`` — P-axis sharded via
+    ``engine_state_shardings`` when the engine is mesh-native, replicated
+    otherwise.
     """
+    options = _deprecated_flat_kw("abstract_train_state", options,
+                                  flat_optimizer)
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
-    flat = options.flat_optimizer if flat_optimizer is None else flat_optimizer
     params = abstract_params(cfg)
 
-    if flat:
+    if options.flat_optimizer:
+        algo = algo or make_round_algo(
+            "dude_accum" if engine.accumulate else "dude", engine)
         fopt = flat_twin(opt)
         pf = _sds((engine.P,), jnp.float32)
         fo_state = jax.eval_shape(fopt.init, pf)
-        st_shapes = FlatTrainState(pf, fo_state, engine.state_shapes())
+        srv_shapes = algo.state_shapes()
+        st_shapes = FlatTrainState(pf, fo_state, srv_shapes)
         st_sh = flat_train_state_shardings(engine.spec, mesh,
-                                           engine.paxes or (), fo_state)
+                                           engine.paxes or (), fo_state,
+                                           server_like=srv_shapes)
         return st_shapes, st_sh
 
     opt_state = jax.eval_shape(opt.init, params)
@@ -356,18 +462,22 @@ def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
     return (params, opt_state, dude_state), (p_sh, o_sh, dude_sh)
 
 
-def init_flat_train_state(engine: DuDeEngine, opt, params: Pytree
+def init_flat_train_state(engine: DuDeEngine, opt, params: Pytree,
+                          algo: Optional[RoundAlgo] = None
                           ) -> FlatTrainState:
     """Concrete ``FlatTrainState`` from pytree params: ravel the master
     params to the f32 ``[P]`` slab, zero-init the flat optimizer slots and
-    the engine state, and land everything on the engine's P-axis shardings
-    when it is mesh-native."""
+    the server state (the engine's ``EngineState`` by default, the given
+    ``RoundAlgo``'s own slabs otherwise), and land everything on the
+    engine's P-axis shardings when it is mesh-native."""
     fopt = flat_twin(opt)
     pf = engine.spec.ravel(params, jnp.float32)
-    state = FlatTrainState(pf, fopt.init(pf), engine.init())
+    srv = algo.init() if algo is not None else engine.init()
+    state = FlatTrainState(pf, fopt.init(pf), srv)
     if engine.mesh is not None:
         sh = flat_train_state_shardings(engine.spec, engine.mesh,
-                                        engine.paxes, state.opt)
+                                        engine.paxes, state.opt,
+                                        server_like=srv)
         state = jax.device_put(state, sh)
     return state
 

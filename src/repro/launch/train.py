@@ -1,40 +1,63 @@
 """Production training driver (DESIGN.md mode B): round-based semi-async
-DuDe-ASGD on whatever mesh is available.
+training on whatever mesh is available, through the one ``api.Trainer``
+session — every server algorithm in the registry (DuDe-ASGD and the
+round-based Table-1 baselines) runs the same mesh-native flat train step.
 
 On the real cluster this runs under the 16x16 / 2x16x16 production meshes
 (see dryrun.py for the lowering proof); on this CPU container it runs the
-same code path on a 1-device mesh at reduced scale.
+same code path on a 1-device mesh at reduced scale (or a host-platform
+multi-device mesh via --mesh and XLA_FLAGS=--xla_force_host_platform_device_count=N).
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --rounds 50 --seq-len 64 --per-worker-batch 2 --algo dude
+  # a Table-1 baseline through the same engine path:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --rounds 50 --algo fedbuff
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import (
-    checkpoint_format, restore_checkpoint, restore_flat_from_pytree,
-    restore_params_from_flat, save_checkpoint,
-)
-from repro.configs import get_config
+from repro.api import CheckpointPolicy, ConfigError, Trainer, TrainerConfig
+from repro.api.config import OPTIMIZERS
 from repro.core import (
-    DuDeConfig, delay_stats, make_round_schedule, truncated_normal_speeds,
+    BACKENDS, ROUND_ALGOS, delay_stats, make_round_schedule,
+    truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
-from repro.launch.steps import (
-    TrainOptions, init_flat_train_state, make_engine, make_train_step,
-)
-from repro.models import lm_init, param_count
 from repro.models.stubs import make_prefix_embeddings
-from repro.optim import adamw, momentum_sgd, sgd
+
+
+class _DeprecatedNoOp(argparse.Action):
+    """A retired flag that still parses (one release) but only warns."""
+
+    def __init__(self, option_strings, dest, **kw):
+        super().__init__(option_strings, dest, nargs=0, **kw)
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        msg = (f"{option_string} is deprecated and a no-op: the flat "
+               "segment-range layout is the only train state now")
+        warnings.warn(msg, DeprecationWarning)
+        print(f"[train] WARNING: {msg}", file=sys.stderr)
+
+
+def parse_mesh(spec: str):
+    """``--mesh`` spec -> Mesh: "none" (default), or "DxM" for a
+    (data, model) host mesh, e.g. "2x4" under an 8-device host platform."""
+    if spec in ("none", ""):
+        return None
+    d, m = (int(x) for x in spec.split("x"))
+    return jax.make_mesh((d, m), ("data", "model"))
 
 
 def main():
@@ -46,18 +69,21 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--per-worker-batch", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.01)
-    ap.add_argument("--opt", default="sgd", choices=["sgd", "momentum", "adamw"])
-    ap.add_argument("--algo", default="dude", choices=["dude", "dude_accum"])
+    ap.add_argument("--opt", default="sgd", choices=sorted(OPTIMIZERS))
+    ap.add_argument("--algo", default="dude", choices=list(ROUND_ALGOS),
+                    help="server update rule (core/algos registry): the "
+                         "DuDe family or a round-based Table-1 baseline — "
+                         "all run the same mesh-native flat train step")
     ap.add_argument("--server-backend", default="reference",
-                    choices=["reference", "indexed", "pallas"],
+                    choices=list(BACKENDS),
                     help="ServerEngine update path for the DuDe round "
                          "(pallas = fused kernel; interpret mode on CPU)")
-    ap.add_argument("--flat-optimizer", action="store_true",
-                    help="flat-state training: master params + optimizer "
-                         "slots as [P] slabs in the engine layout, round "
-                         "and apply fused into one zero-collective pass "
-                         "(engine.round_apply); params are unraveled once "
-                         "per step for the forward")
+    ap.add_argument("--mesh", default="none",
+                    help='"DxM" (data x model) host mesh, or "none"')
+    ap.add_argument("--fedbuff-buffer-size", type=int, default=4)
+    ap.add_argument("--flat-optimizer", action=_DeprecatedNoOp,
+                    help="deprecated no-op: the flat segment-range layout "
+                         "is now the only train state")
     ap.add_argument("--speed-std", type=float, default=1.0,
                     help="worker speed heterogeneity (paper std)")
     ap.add_argument("--heterogeneity", type=float, default=1.0,
@@ -69,53 +95,31 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    if args.algo == "dude_accum" and args.server_backend != "reference":
-        ap.error("--algo dude_accum requires --server-backend reference "
-                 "(accumulate mode is reference-only)")
+    try:
+        config = TrainerConfig(
+            arch=args.arch, smoke=args.smoke, algo=args.algo,
+            optimizer=args.opt, lr=args.lr,
+            server_backend=args.server_backend,
+            mesh=parse_mesh(args.mesh),
+            fedbuff_buffer_size=args.fedbuff_buffer_size,
+            seed=args.seed,
+            checkpoint=CheckpointPolicy(directory=args.ckpt_dir,
+                                        every=args.ckpt_every),
+        )
+    except ConfigError as e:
+        ap.error(str(e))
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    n = cfg.n_workers
-    key = jax.random.PRNGKey(args.seed)
-
-    print(f"[train] arch={cfg.name} workers={n} devices={jax.device_count()} "
-          f"server-backend={args.server_backend}")
-    params = lm_init(key, cfg)
-    print(f"[train] params={param_count(params):,}")
-
-    opt = {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[args.opt](args.lr)
-    dude_cfg = DuDeConfig(n, cfg.dude_buffer_dtype if not args.smoke else jnp.float32,
-                          accumulate=args.algo == "dude_accum")
-    options = TrainOptions(backend=args.server_backend,
-                           flat_optimizer=args.flat_optimizer)
-    # flat ServerEngine state: [P] g_bar + [n, P] slabs (P-axis sharded when
-    # a mesh is given — single-device here, so unsharded)
-    engine = make_engine(cfg, None, dude_cfg, options)
-    flat_state = opt_state = dude_state = None
-    if args.flat_optimizer:
-        # whole train state in the flat segment-range layout
-        flat_state = init_flat_train_state(engine, opt, params)
-    else:
-        opt_state = opt.init(params)
-        dude_state = engine.init()
     if args.resume and args.ckpt_dir:
-        fmt = checkpoint_format(args.ckpt_dir)
-        if args.flat_optimizer:
-            flat_state = (
-                restore_checkpoint(args.ckpt_dir, None, flat_state,
-                                   flat_spec=engine.spec)
-                if fmt == "flat" else
-                restore_flat_from_pytree(args.ckpt_dir, None, flat_state,
-                                         engine.spec))
-        else:
-            params = (restore_params_from_flat(args.ckpt_dir, None, params)
-                      if fmt == "flat" else
-                      restore_checkpoint(args.ckpt_dir, None, params))
-        print(f"[train] resumed from {fmt} checkpoint")
-
-    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg,
-                                   options=options, engine=engine))
+        trainer = Trainer.restore(args.ckpt_dir, config)
+        print("[train] resumed (auto-format restore)")
+    else:
+        trainer = Trainer.create(config)
+    cfg = trainer.cfg
+    n = cfg.n_workers
+    print(f"[train] arch={cfg.name} algo={args.algo} workers={n} "
+          f"devices={jax.device_count()} mesh={args.mesh} "
+          f"server-backend={args.server_backend}")
+    print(f"[train] params={trainer.param_count():,}")
 
     speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
     sch = make_round_schedule(speeds, args.rounds)
@@ -126,7 +130,7 @@ def main():
         heterogeneity=args.heterogeneity, seed=args.seed,
     )
     rng = np.random.default_rng(args.seed)
-    S_total = args.seq_len + cfg.num_prefix_tokens
+    key = jax.random.PRNGKey(args.seed)
 
     def round_batch():
         per = [sampler(i, rng) for i in range(n)]
@@ -148,27 +152,17 @@ def main():
     t0 = time.time()
     history = []
     for r in range(sch.rounds):
-        sm = jnp.asarray(sch.start[r])
-        cm = jnp.asarray(sch.commit[r])
-        if args.flat_optimizer:
-            flat_state, metrics = step(flat_state, round_batch(), sm, cm)
-        else:
-            params, opt_state, dude_state, metrics = step(
-                params, opt_state, dude_state, round_batch(), sm, cm)
+        metrics = trainer.step(round_batch(),
+                               sch.start[r], sch.commit[r])
         loss = float(metrics["loss"])
         history.append(loss)
         if r % args.log_every == 0:
             print(f"[round {r:4d}] loss={loss:.4f} "
                   f"({(time.time() - t0) / (r + 1):.2f}s/round)")
-        if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-            if args.flat_optimizer:
-                save_checkpoint(args.ckpt_dir, r + 1, flat_state,
-                                flat_spec=engine.spec)
-            else:
-                save_checkpoint(args.ckpt_dir, r + 1, params)
+        trainer.maybe_save()
 
     print(json.dumps({
-        "arch": cfg.name, "rounds": sch.rounds,
+        "arch": cfg.name, "algo": args.algo, "rounds": sch.rounds,
         "first_loss": history[0], "last_loss": history[-1],
         "wall_s": round(time.time() - t0, 1),
     }))

@@ -3,6 +3,7 @@ from .transforms import (
     FlatOptimizer,
     FlatOptState,
     FlatTrainState,
+    Optimizer,
     OptState,
     adamw,
     flat_adamw,
@@ -14,7 +15,7 @@ from .transforms import (
 )
 
 __all__ = [
-    "OptState", "sgd", "momentum_sgd", "adamw",
+    "Optimizer", "OptState", "sgd", "momentum_sgd", "adamw",
     "FlatOptState", "FlatOptimizer", "FlatTrainState",
     "flat_sgd", "flat_momentum_sgd", "flat_adamw",
     "FLAT_OPTIMIZERS", "flat_twin",

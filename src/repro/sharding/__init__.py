@@ -4,6 +4,7 @@ from .specs import (
     dp_axes,
     dude_state_shardings,
     engine_state_shardings,
+    flat_slab_shardings,
     flat_train_state_shardings,
     make_shard_hook,
     param_shardings,
@@ -14,6 +15,7 @@ from .specs import (
 __all__ = [
     "param_spec", "param_shardings", "slot_shardings",
     "dude_state_shardings", "engine_state_shardings",
-    "flat_train_state_shardings", "batch_sharding", "cache_shardings",
+    "flat_slab_shardings", "flat_train_state_shardings",
+    "batch_sharding", "cache_shardings",
     "make_shard_hook", "dp_axes",
 ]

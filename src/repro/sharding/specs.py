@@ -215,24 +215,59 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
     )
 
 
+def flat_slab_shardings(state_like: Pytree, spec: FlatSpec, mesh: Mesh,
+                        axes: Any = None) -> Pytree:
+    """Structural P-axis shardings for ANY pytree of flat slabs: every leaf
+    whose trailing dim equals ``spec.padded_size`` shards on that dim by the
+    spec's segment ranges (``[P]`` like ``g_bar``, ``[n, P]`` like the worker
+    slabs); everything else (counters, masks) replicates.  This is how the
+    server state of a non-DuDe ``RoundAlgo`` (MIFA memory, FedBuff
+    accumulator) rides the engine's layout inside one ``FlatTrainState``."""
+    if axes is None:
+        axes = tuple(mesh.axis_names)
+    elif isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    k = _axsize(mesh, axes)
+    sharded = axes and k > 1 and spec.padded_size % k == 0
+
+    def one(leaf):
+        shape = tuple(jnp.shape(leaf))
+        if sharded and shape and shape[-1] == spec.padded_size:
+            return NamedSharding(mesh, P(*((None,) * (len(shape) - 1)
+                                           + (axes,))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, state_like)
+
+
 def flat_train_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
-                               opt_state_like: Any = None) -> FlatTrainState:
+                               opt_state_like: Any = None,
+                               server_like: Any = None) -> FlatTrainState:
     """NamedShardings for a ``FlatTrainState`` on ``mesh``.
 
     Everything rides the engine's segment-range P-axis split: the ``[P]``
     master params and every ``[P]`` optimizer slot slab shard like ``g_bar``
-    (``P(axes)``), the step counter is replicated, and the engine state uses
-    ``engine_state_shardings``.  ``opt_state_like`` supplies the slot tree
+    (``P(axes)``), the step counter is replicated, and the server state uses
+    ``engine_state_shardings`` (``server_like`` None or an ``EngineState`` —
+    the DuDe family) or the structural ``flat_slab_shardings`` rule (any
+    other ``RoundAlgo`` state).  ``opt_state_like`` supplies the slot tree
     structure (arrays or ShapeDtypeStructs; ``None`` means no slots)."""
-    eng_sh = engine_state_shardings(spec, mesh, axes)
-    vec = eng_sh.g_bar
+    if server_like is None or isinstance(server_like, EngineState):
+        srv_sh = engine_state_shardings(spec, mesh, axes)
+        vec = srv_sh.g_bar
+    else:
+        srv_sh = flat_slab_shardings(server_like, spec, mesh, axes)
+        vec = flat_slab_shardings(jax.ShapeDtypeStruct((spec.padded_size,),
+                                                       jnp.float32),
+                                  spec, mesh, axes)
     repl = NamedSharding(mesh, P())
     slots = opt_state_like.slots if opt_state_like is not None else ()
     return FlatTrainState(
         params=vec,
         opt=FlatOptState(step=repl,
                          slots=jax.tree.map(lambda _: vec, slots)),
-        engine=eng_sh,
+        engine=srv_sh,
     )
 
 

@@ -27,6 +27,7 @@ Multi-device tests follow the test_engine_sharded.py pattern: skipped below
 in-process on the 8-device host mesh.
 """
 
+import dataclasses
 import os
 import re
 import subprocess
@@ -143,9 +144,9 @@ def test_flat_train_step_matches_pytree(opt_name):
     fstate = init_flat_train_state(engine, popt, params)
     pstep = jax.jit(make_train_step(cfg, None, popt, dude_cfg,
                                     options=options, engine=engine))
-    fstep = jax.jit(make_train_step(cfg, None, popt, dude_cfg,
-                                    options=options, engine=engine,
-                                    flat_optimizer=True))
+    fstep = jax.jit(make_train_step(
+        cfg, None, popt, dude_cfg, engine=engine,
+        options=dataclasses.replace(options, flat_optimizer=True)))
     key = jax.random.PRNGKey(1)
     batch = {
         "tokens": jax.random.randint(key, (n, 2, 16), 0, cfg.vocab_size),
