@@ -24,10 +24,20 @@ session facade) against the raw prejitted flat step on the identical state
 and batch: ``derived`` is facade time / raw time, proving the facade adds
 no per-step overhead beyond Python dispatch noise.
 
-``--json-out`` (default ``benchmarks/BENCH_4.json``) writes every row as
+The arrival-throughput sweep (async runtime, docs/async.md) times one
+server iteration of the per-arrival hot path — ``engine.commit`` + flat
+optimizer apply, the AsyncRunner's jitted step — against the masked-step
+baseline that expresses the same single arrival as a full ``round_apply``
+with one-hot masks (streaming all ``[n, P]`` slabs for one worker's
+commit).  Rows report arrivals/sec; ``derived`` is the runner-step
+throughput over the masked baseline's.  A full-loop row measures the
+``AsyncRunner`` end to end (host event loop + DeviceQueue included) on a
+toy gradient.
+
+``--json-out`` (default ``benchmarks/BENCH_5.json``) writes every row as
 machine-readable JSON — backend x (n, P) x sharded/unsharded, the
-round+apply grid, and the session-dispatch rows — so the perf trajectory
-is tracked across PRs.
+round+apply grid, the session-dispatch rows, and the arrival-throughput
+rows — so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -275,11 +285,110 @@ def session_dispatch_rows(algos=("dude", "fedbuff"), rounds: int = 30
     return rows
 
 
+def arrival_throughput_rows(points=((8, 1 << 14), (64, 1 << 16)),
+                            loop_iters: int = 200) -> list[dict]:
+    """Arrivals/sec of the async hot path vs the masked-step baseline.
+
+    Per (n, P): the AsyncRunner's jitted arrival step (O(P): commit one
+    worker's gradient + flat sgd apply) against a one-hot-masked
+    ``round_apply`` (O(nP): the round-mode way to express one arrival,
+    streaming every worker slab).  ``derived`` = runner arrivals/sec over
+    masked arrivals/sec — the structural win of arrival granularity grows
+    linearly in n.  Correctness pulse: with the arriving gradient latched
+    in the inflight row, the one-hot round's g_bar equals commit's.
+    Plus one end-to-end loop row: ``AsyncRunner.run`` arrivals/sec on a toy
+    gradient, host event loop + DeviceQueue included.
+    """
+    from repro.core.algos import make_async_algo
+    from repro.optim import FlatOptState
+    from repro.runtime import FixedArrivals
+    from repro.runtime.runner import AsyncRunner
+
+    rows = []
+    key = jax.random.PRNGKey(11)
+    fopt = FLAT_OPTS["sgd"]
+    for n, P in points:
+        spec = make_flat_spec(jnp.zeros((P,)))
+        eng = DuDeEngine(spec=spec, n_workers=n)
+        algo = make_async_algo("dude", eng)
+        ks = jax.random.split(jax.random.fold_in(key, n * P), 4)
+        grad = jax.random.normal(ks[0], (spec.padded_size,))
+        state = eng.init()._replace(
+            g_workers=jax.random.normal(ks[1], (n, spec.padded_size)),
+            inflight=jax.random.normal(ks[2], (n, spec.padded_size)))
+        w0 = jax.random.normal(ks[3], (spec.padded_size,))
+        ost = fopt.init(w0)
+        worker = jnp.int32(1)
+
+        @jax.jit
+        def astep(srv, w, o, wk, g, algo=algo, fopt=fopt):
+            srv, d = algo.arrival(srv, wk, g)
+            t = o.step + 1
+            w, sl = fopt.update(w, d, o.slots, t)
+            return srv, w, FlatOptState(t, sl)
+
+        t_arr = _time(lambda s, w, o, wk, g: astep(s, w, o, wk, g)[1],
+                      state, w0, ost, worker, grad, reps=10)
+
+        # masked-step baseline: same single arrival as a one-hot round
+        onehot = jnp.zeros((n,), bool).at[1].set(True)
+        fresh = jnp.broadcast_to(grad, (n, spec.padded_size))
+        rstep = jax.jit(lambda s, f, a, b, w, o, e=eng, fo=fopt:
+                        e.round_apply(s, f, a, b, w, o, fo))
+        t_msk = _time(lambda s, f, a, b, w, o: rstep(s, f, a, b, w, o)[2],
+                      state, fresh, onehot, onehot, w0, ost, reps=10)
+
+        # correctness pulse: latch grad into the inflight row, then the
+        # one-hot commit fold equals the per-arrival commit
+        latched = state._replace(
+            inflight=state.inflight.at[1].set(grad))
+        _, g_commit = eng.commit(state, worker, grad)
+        _, g_round = eng.round(latched, fresh, jnp.zeros((n,), bool), onehot)
+        err = float(jnp.max(jnp.abs(g_commit - g_round)))
+        rows.append({
+            "name": f"runtime/arrival_throughput/commit_apply/n{n}_P{P}",
+            "n": n, "P": spec.padded_size,
+            "us_per_call": 1e6 * t_arr,
+            "derived": t_msk / t_arr,   # runner-step speedup over masked
+            "extra": {"arrivals_per_s": 1.0 / t_arr,
+                      "masked_arrivals_per_s": 1.0 / t_msk,
+                      "gbar_err_vs_round": err},
+        })
+
+    # end-to-end loop: host scheduling + DeviceQueue + grad included
+    n, P0 = 8, 1 << 10
+    tree = jnp.zeros((P0,))
+    spec = make_flat_spec(tree)
+    eng = DuDeEngine(spec=spec, n_workers=n)
+    runner = AsyncRunner(eng, "dude", FLAT_OPTS["sgd"],
+                         lambda p, b, k: (jnp.sum(p * b), p - b))
+    st = runner.init_state(tree)
+    sample = lambda i, rng: jnp.full((spec.padded_size,), float(i % 3))
+
+    def loop_once():
+        return runner.run(FixedArrivals(np.ones(n)), loop_iters, sample, st,
+                          record_every=10 ** 9).state.params
+
+    loop_once()  # compile/warm
+    t0 = time.perf_counter()
+    jax.block_until_ready(loop_once())
+    t_loop = (time.perf_counter() - t0) / loop_iters
+    rows.append({
+        "name": f"runtime/arrival_throughput/runner_loop/n{n}_P{P0}",
+        "n": n, "P": spec.padded_size,
+        "us_per_call": 1e6 * t_loop,
+        "derived": 1.0 / t_loop,        # arrivals/sec, loop included
+        "extra": {"arrivals_per_s": 1.0 / t_loop, "iters": loop_iters},
+    })
+    return rows
+
+
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
     rows += round_apply_sweep(backends)
     rows += session_dispatch_rows()
+    rows += arrival_throughput_rows()
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
@@ -354,7 +463,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_4.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_5.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -367,7 +476,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 4,
+                "pr": 5,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

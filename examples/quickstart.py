@@ -49,3 +49,19 @@ for r in range(schedule.rounds):
 params = trainer.params()  # unraveled pytree view, e.g. for eval/serving
 print("trained params:", trainer.param_count(), "scalars in",
       len(jax.tree.leaves(params)), "leaves")
+
+# --- the same session, event-driven (mode A, docs/async.md): one server
+# --- iteration per gradient ARRIVAL instead of per masked round; 'dude'
+# --- lives in both registries, so it continues on the same train state.
+from repro.runtime import ExponentialArrivals  # noqa: E402
+
+res = trainer.run_async(
+    ExponentialArrivals(cfg.n_workers, mean=speeds.times, seed=2),
+    total_iters=40,
+    sample_fn=lambda i, rng: {k: jnp.asarray(v)
+                              for k, v in sampler(i, rng).items()},
+    record_every=10,
+)
+print(f"async: {res.stats.arrivals} arrivals, tau_max={res.tau_max}, "
+      f"loss {res.losses[-1]:.4f} (trace of {len(res.trace)} events "
+      "recorded — replayable bit-for-bit)")

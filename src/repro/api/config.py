@@ -24,7 +24,7 @@ from typing import Any, Optional, Union
 
 import jax.numpy as jnp
 
-from ..core.algos import ROUND_ALGOS
+from ..core.algos import ASYNC_ALGOS, ROUND_ALGOS
 from ..core.dude import DuDeConfig
 from ..core.engine import BACKENDS
 from ..models.config import ModelConfig
@@ -83,10 +83,14 @@ class TrainerConfig:
     ``arch`` is a config-registry name (``repro.configs``) or a concrete
     ``ModelConfig``; ``smoke`` applies the registry's reduced CPU-scale
     variant.  ``algo`` picks the server rule from the ``core.algos``
-    registry — the DuDe family and the round-based Table-1 baselines all
-    run through the same mesh-native flat train step.  ``optimizer`` is a
-    name from ``OPTIMIZERS`` (built with ``lr``) or a prebuilt
-    ``Optimizer``.  ``mesh`` None means single-logical-device execution.
+    registries: a round rule (``ROUND_ALGOS`` — the DuDe family and the
+    round-based Table-1 baselines, driven by ``trainer.step``) and/or an
+    arrival rule (``ASYNC_ALGOS`` — async DuDe and the three ASGD routing
+    disciplines, driven by ``trainer.run_async``); ``dude`` is in both.
+    ``optimizer`` is a name from ``OPTIMIZERS`` (built with ``lr``) or a
+    prebuilt ``Optimizer``.  ``mesh`` None means single-logical-device
+    execution.  ``max_in_flight`` / ``arrival_queue_depth`` tune the async
+    runtime (docs/async.md).
     """
 
     arch: Union[str, ModelConfig]
@@ -102,13 +106,21 @@ class TrainerConfig:
     buffer_dtype: Any = None            # engine slabs; None = arch default
                                         # (f32 under smoke)
     fedbuff_buffer_size: int = 4        # fedbuff only: gradients per flush
+    max_in_flight: Optional[int] = None  # async runs: bound on CONCURRENT
+                                         # dispatched-but-unarrived jobs
+                                         # (back-pressure, not a hard tau
+                                         # cap; None = all workers in
+                                         # flight)
+    arrival_queue_depth: int = 2        # async runs: host->device step queue
+                                        # depth (2 = double buffering)
     seed: int = 0
     checkpoint: CheckpointPolicy = CheckpointPolicy()
 
     def __post_init__(self):
-        if self.algo not in ROUND_ALGOS:
+        if self.algo not in ROUND_ALGOS and self.algo not in ASYNC_ALGOS:
             raise ConfigError(
-                f"unknown algo {self.algo!r}; options: {ROUND_ALGOS}")
+                f"unknown algo {self.algo!r}; round options: {ROUND_ALGOS}, "
+                f"async options: {ASYNC_ALGOS}")
         if self.server_backend not in BACKENDS:
             raise ConfigError(
                 f"unknown server_backend {self.server_backend!r}; "
@@ -130,6 +142,12 @@ class TrainerConfig:
         if self.fedbuff_buffer_size < 1:
             raise ConfigError(
                 f"fedbuff_buffer_size={self.fedbuff_buffer_size} < 1")
+        if self.max_in_flight is not None and self.max_in_flight < 1:
+            raise ConfigError(
+                f"max_in_flight={self.max_in_flight} < 1")
+        if self.arrival_queue_depth < 1:
+            raise ConfigError(
+                f"arrival_queue_depth={self.arrival_queue_depth} < 1")
         _check_arch(self.arch)
 
     # ------------------------------------------------------- resolution
@@ -159,7 +177,6 @@ class TrainerConfig:
             constrain_grads=self.constrain_grads,
             backend=self.server_backend,
             shard_engine=self.shard_engine,
-            flat_optimizer=True,   # the session API has ONE train state
         )
 
     def make_optimizer(self) -> Optimizer:

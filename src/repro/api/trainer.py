@@ -5,11 +5,17 @@ model config, mesh-native ``DuDeEngine``, the ``RoundAlgo`` server rule, the
 flat optimizer twin, and ONE canonical train state — a ``FlatTrainState``
 whose master params, optimizer slots and server slabs all live in the
 engine's segment-range ``[P]`` layout (P-axis sharded when a mesh is given).
-Every algorithm in the registry — ``dude``, ``dude_accum``, and the
+Every round algorithm in the registry — ``dude``, ``dude_accum``, and the
 round-based Table-1 baselines ``sync_sgd`` / ``mifa`` / ``fedbuff`` — runs
 through the same jitted step:
 
     metrics = trainer.step(batch, start_mask, commit_mask)
+
+and every ARRIVAL algorithm (``dude``, ``vanilla_asgd``, ``uniform_asgd``,
+``shuffled_asgd``) through the event-driven async runtime on the same
+state:
+
+    result = trainer.run_async(arrivals, total_iters, sample_fn)
 
 There is no flat/pytree fork, no per-algo state tuple, and no caller-side
 restore dispatch: ``trainer.save(dir)`` always writes the flat format with
@@ -32,7 +38,10 @@ import jax
 import jax.numpy as jnp
 
 from ..checkpoint import restore_train_state, save_checkpoint
-from ..core.algos import RoundAlgo, make_round_algo
+from ..core.algos import (
+    ASYNC_ALGOS, ROUND_ALGOS, AsyncAlgo, RoundAlgo, make_async_algo,
+    make_round_algo,
+)
 from ..launch.steps import (
     abstract_train_state, init_flat_train_state, make_engine, make_train_step,
     train_batch_specs,
@@ -64,13 +73,22 @@ class Trainer:
         self.mesh = config.mesh
         self.engine = make_engine(self.cfg, self.mesh, self.dude_cfg,
                                   self.options)
-        self.algo: RoundAlgo = make_round_algo(
-            config.algo, self.engine,
-            buffer_size=config.fedbuff_buffer_size)
+        # one session may hold BOTH granularities of the same rule: a round
+        # rule (trainer.step) and/or an arrival rule (trainer.run_async) —
+        # ``dude`` has both, the ASGD disciplines are arrival-only,
+        # dude_accum and the Table-1 round baselines are round-only.
+        self.algo: Optional[RoundAlgo] = (
+            make_round_algo(config.algo, self.engine,
+                            buffer_size=config.fedbuff_buffer_size)
+            if config.algo in ROUND_ALGOS else None)
+        self.async_algo: Optional[AsyncAlgo] = (
+            make_async_algo(config.algo, self.engine)
+            if config.algo in ASYNC_ALGOS else None)
         self.state: Optional[FlatTrainState] = None
         self.rounds = 0                         # steps taken this session
         self._step_fn = None
         self._jitted = None
+        self._runner = None
 
     # ------------------------------------------------------- constructors
 
@@ -83,7 +101,8 @@ class Trainer:
         t = cls(config)
         if params is None:
             params = lm_init(jax.random.PRNGKey(config.seed), t.cfg)
-        t.state = init_flat_train_state(t.engine, t.opt, params, algo=t.algo)
+        t.state = init_flat_train_state(t.engine, t.opt, params,
+                                        algo=t.server_rule)
         return t
 
     @classmethod
@@ -116,11 +135,18 @@ class Trainer:
                                         server_like=state.engine)
         return jax.device_put(state, sh)
 
+    @property
+    def server_rule(self):
+        """The rule shaping ``state.engine``: the round rule when the algo
+        has one, else the arrival rule (both granularities of one name
+        share the server state — e.g. dude's ``EngineState``)."""
+        return self.algo if self.algo is not None else self.async_algo
+
     def _zero_state(self) -> FlatTrainState:
         """A zero-valued ``FlatTrainState`` on the session's shardings."""
         pf = jnp.zeros((self.engine.P,), jnp.float32)
         return self._shard(FlatTrainState(pf, self.fopt.init(pf),
-                                          self.algo.init()))
+                                          self.server_rule.init()))
 
     @classmethod
     def abstract(cls, config: TrainerConfig) -> "Trainer":
@@ -136,6 +162,11 @@ class Trainer:
         ``(state, batch, start_mask, commit_mask) -> (state, metrics)``.
         A stable function object, so repeated ``jax.jit(trainer.step_fn)``
         calls hit one jit cache entry."""
+        if self.algo is None:
+            raise ConfigError(
+                f"algo {self.config.algo!r} is arrival-granularity only; "
+                "drive it with trainer.run_async (round options: "
+                f"{ROUND_ALGOS})")
         if self._step_fn is None:
             self._step_fn = make_train_step(
                 self.cfg, self.mesh, self.opt, self.dude_cfg,
@@ -158,6 +189,78 @@ class Trainer:
             jnp.asarray(commit_mask))
         self.rounds += 1
         return metrics
+
+    # ------------------------------------------------------------- async
+
+    def run_async(self, arrivals, total_iters: int, sample_fn,
+                  *, record_every: int = 10, eval_fn=None, ema: float = 0.9,
+                  max_time: Optional[float] = None,
+                  seed: Optional[int] = None):
+        """Drive ``total_iters`` per-arrival server iterations through the
+        event-driven ``runtime.AsyncRunner`` — one ``engine.commit`` (or
+        ASGD arrival rule) + flat optimizer apply per gradient arrival, on
+        this session's train state.
+
+        ``arrivals`` is a ``runtime.ArrivalProcess`` or a kind name
+        (``"fixed"`` / ``"exp"``; ``"trace"`` needs a process built via
+        ``runtime.make_arrivals`` or ``TraceArrivals``).  ``sample_fn(
+        worker, rng) -> batch`` draws one worker's batch (leaves WITHOUT
+        the round step's worker axis).  Updates ``self.state`` and advances
+        ``self.rounds`` by the applied iterations; returns the
+        ``runtime.AsyncResult`` (records, staleness stats, and the recorded
+        ``ArrivalTrace`` for replay).  ``seed`` defaults to ``config.seed +
+        self.rounds`` so segmented runs (repeated run_async calls on one
+        session) continue the sampling/key stream instead of replaying it;
+        pass it explicitly (e.g. the recording run's) for trace-replay
+        equivalence.  See docs/async.md.
+        """
+        from ..runtime import make_arrivals
+        from ..runtime.runner import AsyncRunner
+        if self.async_algo is None:
+            raise ConfigError(
+                f"algo {self.config.algo!r} has no arrival-granularity "
+                f"rule; async options: {ASYNC_ALGOS}")
+        if self.state is None:
+            raise ConfigError(
+                "abstract session has no state; use Trainer.create/restore")
+        if seed is None:
+            seed = self.config.seed + self.rounds
+        if isinstance(arrivals, str):
+            # convenience fleet (unit/homogeneous durations), seeded per
+            # segment so repeated runs draw fresh schedules; for the
+            # speed-model-based heterogeneous fleet build the process
+            # explicitly (as launch/train.py does)
+            arrivals = make_arrivals(arrivals, self.cfg.n_workers, seed=seed)
+        if self._runner is None:
+            self._runner = AsyncRunner(
+                self.engine, self.async_algo, self.opt,
+                self._model_grad_fn(),
+                queue_depth=self.config.arrival_queue_depth,
+                max_in_flight=self.config.max_in_flight)
+        res = self._runner.run(
+            arrivals, total_iters, sample_fn, self.state,
+            seed=seed, record_every=record_every,
+            eval_fn=eval_fn, ema=ema, max_time=max_time)
+        self.state = res.state
+        self.rounds += int(res.stats.iters)
+        return res
+
+    def _model_grad_fn(self):
+        """One worker's stochastic gradient of the session's model:
+        ``(params_pytree, batch, key) -> (loss, grads_pytree)`` (the
+        ``simulate``/``AsyncRunner`` contract; ``key`` rides for parity
+        with data pipelines that consume it)."""
+        from ..models import loss_fn
+        from ..sharding import make_shard_hook
+        cfg, shard = self.cfg, make_shard_hook(self.mesh)
+
+        def grad_fn(params, batch, key):
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, shard=shard), has_aux=True
+            )(params)
+            return metrics["loss"], grads
+
+        return grad_fn
 
     # ------------------------------------------------------------- views
 
@@ -196,7 +299,7 @@ class Trainer:
         """(ShapeDtypeStructs, shardings) of the ``FlatTrainState``."""
         return abstract_train_state(self.cfg, self.mesh, self.opt,
                                     self.dude_cfg, options=self.options,
-                                    engine=self.engine, algo=self.algo)
+                                    engine=self.engine, algo=self.server_rule)
 
     def input_specs(self, shape_name: str = "train_4k"):
         """Shapes and shardings of the FULL step signature

@@ -29,7 +29,10 @@ from .schedules import (
     make_round_schedule,
     truncated_normal_speeds,
 )
-from .algos import ROUND_ALGOS, RoundAlgo, make_round_algo
+from .algos import (
+    ASYNC_ALGOS, AsyncAlgo, ROUND_ALGOS, RoundAlgo, make_async_algo,
+    make_round_algo,
+)
 from .baselines import ALGO_NAMES, ServerAlgo, make_algo
 from .simulator import SimResult, simulate
 
@@ -41,5 +44,6 @@ __all__ = [
     "RoundSchedule", "SpeedModel", "delay_stats", "event_stream",
     "make_round_schedule", "truncated_normal_speeds",
     "ROUND_ALGOS", "RoundAlgo", "make_round_algo",
+    "ASYNC_ALGOS", "AsyncAlgo", "make_async_algo",
     "ALGO_NAMES", "ServerAlgo", "make_algo", "SimResult", "simulate",
 ]

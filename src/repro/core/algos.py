@@ -45,6 +45,17 @@ Mask semantics per rule (all masks are ``[n]`` bool):
 * ``fedbuff`` — participating workers' fresh gradients fold into one ``[P]``
   accumulator; the model updates only when ``buffer_size`` gradients have
   arrived, with the buffered mean (Nguyen et al. 2022, K=1).
+
+Alongside the round registry lives the ARRIVAL-granularity one:
+``AsyncAlgo`` rules consume one worker's gradient per server iteration —
+``arrival(state, worker, grad) -> (state, g)`` — and carry the routing
+discipline (greedy / uniform / shuffled) that the event loop
+(``runtime/loop.py``) schedules.  ``dude`` maps to ``DuDeEngine.commit``;
+the three ASGD disciplines are the identity rule under different routing.
+These are what ``runtime.AsyncRunner`` and ``Trainer.run_async`` drive on
+the flat train state, and what ``core/baselines.py`` wraps for the
+simulator.  Covered by docs/engine.md ("The server-rule registry and the
+session API") and docs/async.md ("Arrival-granularity algorithms").
 """
 
 from __future__ import annotations
@@ -63,11 +74,15 @@ Pytree = Any
 
 __all__ = [
     "ROUND_ALGOS", "RoundAlgo", "make_round_algo",
+    "ASYNC_ALGOS", "AsyncAlgo", "make_async_algo",
     "sync_direction", "mifa_update", "fedbuff_fold",
 ]
 
-# every name the production driver / Trainer accepts for --algo
+# every name the production driver / Trainer accepts for --algo (round mode)
 ROUND_ALGOS = ("dude", "dude_accum", "sync_sgd", "mifa", "fedbuff")
+
+# arrival-granularity rules (--async mode); dude appears in both registries
+ASYNC_ALGOS = ("dude", "vanilla_asgd", "uniform_asgd", "shuffled_asgd")
 
 
 # ------------------------------------------------------------- rule cores
@@ -259,3 +274,80 @@ def make_round_algo(name: str, engine: DuDeEngine,
     if name == "fedbuff":
         return _make_fedbuff(engine, buffer_size=buffer_size)
     raise ValueError(f"unknown round algo {name!r}; options: {ROUND_ALGOS}")
+
+
+# -------------------------------------------- arrival-granularity registry
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncAlgo:
+    """One per-arrival server rule bound to an engine, for the fully-async
+    path (``runtime.AsyncRunner`` / ``Trainer.run_async``).
+
+    ``arrival(state, worker, grad)`` consumes ONE worker's flat ``[P]``
+    gradient and returns ``(state, g)`` — the descent direction the flat
+    optimizer applies that same iteration.  The rule body is elementwise on
+    P (``DuDeEngine.commit`` runs under the engine's P-axis ``shard_map``
+    when meshed; the ASGD identity needs no collective at all), so a
+    sharded arrival step moves zero bytes, exactly like the round rules.
+
+    ``route`` is the SCHEDULING half of the algorithm — who receives the
+    post-update model — consumed by ``runtime.loop.drive_arrivals``:
+    ``None`` (greedy: the arriving worker restarts on the freshest model,
+    vanilla ASGD / DuDe), ``"uniform"`` (Koloskova et al. 2022) or
+    ``"shuffled"`` (Islamov et al. 2024) routing.
+    """
+
+    name: str
+    engine: DuDeEngine
+    route: Any                        # None | "uniform" | "shuffled"
+    init_fn: Callable[[], Pytree]
+    # (state, worker i32 scalar, grad [P] f32) -> (state, g [P] f32)
+    arrival_fn: Callable[..., tuple]
+    state_shapes_fn: Callable[[], Pytree] = None
+
+    def init(self) -> Pytree:
+        return self.init_fn()
+
+    def state_shapes(self) -> Pytree:
+        """Abstract (ShapeDtypeStruct) server state, for lowering."""
+        if self.state_shapes_fn is not None:
+            return self.state_shapes_fn()
+        return jax.eval_shape(self.init_fn)
+
+    def arrival(self, state, worker, grad):
+        return self.arrival_fn(state, jnp.asarray(worker, jnp.int32),
+                               grad.astype(jnp.float32))
+
+
+def make_async_algo(name: str, engine: DuDeEngine) -> AsyncAlgo:
+    """Build the named arrival-granularity rule bound to ``engine``.
+
+    ``dude`` is the paper's Algorithm 1 server iteration
+    (``DuDeEngine.commit``: fold ``(g - g_workers[w]) / n`` into ``g_bar``,
+    remember ``g`` as worker ``w``'s latest) — greedy scheduling, full
+    aggregation.  The three ASGD disciplines all descend along the raw
+    arriving gradient and differ only in routing.
+    """
+    if name == "dude":
+        if engine.accumulate:
+            raise ValueError(
+                "async dude runs per-arrival commits; the accumulate "
+                "running-mean latch is a round-mode (dude_accum) feature")
+
+        def dude_arrival(state: EngineState, worker, grad):
+            return engine.commit(state, worker, grad)
+
+        return AsyncAlgo("dude", engine, route=None,
+                         init_fn=engine.init, arrival_fn=dude_arrival,
+                         state_shapes_fn=engine.state_shapes)
+    if name in ("vanilla_asgd", "uniform_asgd", "shuffled_asgd"):
+        route = {"vanilla_asgd": None, "uniform_asgd": "uniform",
+                 "shuffled_asgd": "shuffled"}[name]
+
+        def asgd_arrival(state, worker, grad):
+            return state, grad
+
+        return AsyncAlgo(name, engine, route=route,
+                         init_fn=lambda: (), arrival_fn=asgd_arrival)
+    raise ValueError(f"unknown async algo {name!r}; options: {ASYNC_ALGOS}")

@@ -16,7 +16,12 @@ Since the session-API redesign the rule MATH lives once, in
 ``core/algos.py`` (``sync_direction`` / ``mifa_update`` / ``fedbuff_fold``
 and the ``RoundAlgo`` registry the production train step runs mesh-native);
 this module only wraps those cores into the per-arrival / per-round
-callbacks the event-driven simulator schedules.
+callbacks the event-driven simulator schedules.  Since the async-runtime
+redesign the SCHEDULING is shared too: the ``route`` markers here are
+consumed by the one event loop in ``runtime/loop.py``, and the async
+disciplines exist as first-class ``AsyncAlgo`` rules (``algos.ASYNC_ALGOS``)
+that the production ``runtime.AsyncRunner`` drives on flat state —
+docs/async.md covers both.
 
 Implemented (paper Table 1):
   * Synchronous SGD            [Khaled & Richtarik 2023]  — round-based

@@ -41,6 +41,11 @@ chosen mesh axes.  Sharded and unsharded engines agree bit-for-bit on
 ``dude_round`` / ``dude_round_indexed``) as thin ravel->engine->unravel
 wrappers, so callers keep pytree ergonomics while the hot loop runs on flat
 slabs.
+
+Documented in docs/engine.md — "Backends", "Sharding the flat layout" and
+"Flat training state" (``round_apply``); ``commit`` is the per-arrival hot
+path of the async runtime (docs/async.md, "Arrival-granularity
+algorithms").
 """
 
 from __future__ import annotations

@@ -22,6 +22,9 @@ a shard may own the tail of one leaf and the head of the next, and all pad
 lanes land in the trailing shard, so no shard ever needs remote elements.
 ``shard_ranges`` / ``shard_segments`` expose the resulting per-shard segment
 table for sharding rules, checkpoint layouts, and debugging.
+
+Documented in docs/engine.md — "Flat layout", "Segment table (FlatSpec)"
+and "Sharding the flat layout".
 """
 
 from __future__ import annotations

@@ -13,19 +13,27 @@ worker's (heterogeneous) local data.
 Since the session-API redesign this file is a thin SCHEDULING shell: the
 server math lives in the shared rule registry (``core/algos.py``, wrapped
 for per-arrival delivery by ``core/baselines.py``), identical to what the
-production train step runs mesh-native.
+production train step runs mesh-native.  Since the async-runtime redesign
+the scheduling itself is shared too: the fully-async branch is a
+deterministic client of ``runtime.loop.drive_arrivals`` over a pluggable
+``runtime.arrivals.ArrivalProcess`` (defaulting to the paper's
+fixed-computation-speed model), the exact loop the production
+``runtime.AsyncRunner`` drives — so one recorded ``ArrivalTrace`` replays
+bit-for-bit through either (docs/async.md, "Simulator <-> runner
+equivalence").
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime.arrivals import ArrivalProcess, ArrivalTrace, FixedArrivals
+from ..runtime.loop import drive_arrivals
 from .baselines import ServerAlgo
 from .schedules import SpeedModel
 
@@ -44,6 +52,7 @@ class SimResult:
     params: Pytree
     tau_max: int
     n_grads: int             # stochastic gradients computed (sample complexity)
+    trace: Optional[ArrivalTrace] = None  # async runs: the arrival schedule
 
 
 def _record(eval_fn, params, running_loss):
@@ -68,12 +77,16 @@ def simulate(
     eval_fn: Optional[Callable] = None,
     ema: float = 0.9,
     max_time: Optional[float] = None,
+    arrivals: Optional[ArrivalProcess] = None,
+    max_in_flight: Optional[int] = None,
 ) -> SimResult:
     """Run one asynchronous training simulation.
 
     Workers compute gradients on the model version they last received; model
     versions are tracked explicitly so the dual delay (model staleness vs.
-    data freshness) is physical, not emulated.
+    data freshness) is physical, not emulated.  ``arrivals`` overrides the
+    timing model (default: ``FixedArrivals.from_speeds(speeds)``, the
+    paper's protocol) — pass a ``TraceArrivals`` to replay a recorded run.
     """
     n = speeds.n
     rng = np.random.default_rng(seed)
@@ -89,23 +102,23 @@ def simulate(
     it = 0
     n_grads = 0
     running = None
-    tau_max = 0
     times, iters, losses, gnorms = [], [], [], []
 
-    def rec(g):
+    def rec(g, t, it_now):
         gn = float(
             jnp.sqrt(
                 sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g))
             )
         )
-        times.append(t_now)
-        iters.append(it)
+        times.append(t)
+        iters.append(it_now)
         losses.append(_record(eval_fn, params, running))
         gnorms.append(gn)
 
     if algo.scheduling == "rounds":
         # --- synchronous / round-based disciplines (sync SGD, MIFA) --------
         round_time = float(np.max(speeds.times))  # straggler-bound
+        tau_max = 0
         while it < total_iters and (max_time is None or t_now < max_time):
             key, *wkeys = jax.random.split(key, n + 1)
             grads, loss_acc = [], 0.0
@@ -128,77 +141,55 @@ def simulate(
             it += 1
             tau_max = max(tau_max, 1)
             if it % record_every == 0:
-                rec(g_dir)
+                rec(g_dir, t_now, it)
         return SimResult(
             algo.name, np.array(times), np.array(iters), np.array(losses),
             np.array(gnorms), params, tau_max, n_grads,
         )
 
     # --- asynchronous disciplines (greedy / routed) ------------------------
-    # Each worker holds the model version it will compute on.  version_iter[i]
-    # tracks the server iteration at which that model was produced (for tau).
+    # One shared event loop (runtime/loop.py) schedules dispatch/collect for
+    # both this simulator and the production AsyncRunner.  Each worker holds
+    # the model version it will compute on; the loop stamps versions so the
+    # dual delay is physical.  ``applied`` is mirrored host-side from the
+    # algo's static apply_period (FedBuff flushes every buffer_size-th
+    # arrival, etc.) so the event loop never blocks on a device round-trip
+    # per gradient arrival — the jitted server updates stay queued on the
+    # async dispatch stream and only synchronize at record points.
+    process = arrivals if arrivals is not None \
+        else FixedArrivals.from_speeds(speeds)
     worker_params = [params for _ in range(n)]
-    version_iter = [0] * n
-    heap: list[tuple[float, int]] = []  # (finish_time, worker)
-    queues = [1 for _ in range(n)]  # pending models per worker (routed mode)
-    shuffle_order: list[int] = []
-
-    for i in range(n):
-        heapq.heappush(heap, (speeds.times[i], i))
-
-    def next_routed_worker() -> int:
-        nonlocal shuffle_order
-        if algo.route == "uniform":
-            return int(rng.integers(n))
-        if not shuffle_order:
-            shuffle_order = list(rng.permutation(n))
-        return int(shuffle_order.pop())
-
-    # ``applied`` is mirrored host-side from the algo's static apply_period
-    # (FedBuff flushes every buffer_size-th arrival, etc.) so the event loop
-    # never blocks on a device round-trip per gradient arrival — the jitted
-    # server updates stay queued on the async dispatch stream and only
-    # synchronize at record points.
     pending = 0
-    while it < total_iters and (max_time is None or t_now < max_time):
-        t_now, i = heapq.heappop(heap)
+
+    def on_arrival(view) -> bool:
+        nonlocal key, running, n_grads, pending, state, params
+        i = view.worker
         key, k1 = jax.random.split(key)
         batch = sample_fn(i, rng)
         loss, g = grad_fn(worker_params[i], batch, k1)
         n_grads += 1
-        tau_max = max(tau_max, it + 1 - version_iter[i])
-        state, params, _applied = on_gradient(state, jnp.int32(i), g, params, lr)
+        state, params, _applied = on_gradient(state, jnp.int32(i), g,
+                                              params, lr)
         pending += 1
         applied = pending >= algo.apply_period
         if applied:
             pending = 0
-            it += 1
         # device-side EMA: no host sync per arrival, float()-ed only at record
         running = loss if running is None else ema * running + (1 - ema) * loss
+        # view.iters is the loop's applied-iteration count BEFORE this
+        # arrival — the one source of truth for the iteration number
+        if applied and (view.iters + 1) % record_every == 0:
+            rec(g, view.t, view.iters + 1)
+        return applied
 
-        if algo.scheduling == "greedy":
-            worker_params[i] = params
-            version_iter[i] = it
-            heapq.heappush(heap, (t_now + speeds.times[i], i))
-        else:  # routed (Uniform / Shuffled ASGD)
-            queues[i] -= 1
-            j = next_routed_worker()
-            worker_params[j] = params  # latest model enqueued for worker j
-            version_iter[j] = it
-            queues[j] += 1
-            if queues[i] > 0:  # keep draining this worker's backlog
-                heapq.heappush(heap, (t_now + speeds.times[i], i))
-            if queues[j] == 1 and j != i:
-                heapq.heappush(heap, (t_now + speeds.times[j], j))
-            if not heap:  # all queues empty: route to a random idle worker
-                j = int(rng.integers(n))
-                queues[j] += 1
-                heapq.heappush(heap, (t_now + speeds.times[j], j))
+    def deliver(j: int) -> None:
+        worker_params[j] = params  # latest model enqueued for worker j
 
-        if bool(applied) and it % record_every == 0:
-            rec(g)
-
+    route = algo.route if algo.scheduling == "routed" else None
+    stats = drive_arrivals(process, total_iters, on_arrival, deliver,
+                           route=route, rng=rng,
+                           max_in_flight=max_in_flight, max_time=max_time)
     return SimResult(
         algo.name, np.array(times), np.array(iters), np.array(losses),
-        np.array(gnorms), params, tau_max, n_grads,
+        np.array(gnorms), params, stats.tau_max, n_grads, trace=stats.trace,
     )

@@ -21,15 +21,17 @@ table.  The stacked gradients are raveled to the same ``[n, P]`` layout
 right after the vmapped backward; with ``constrain_grads`` the ravel
 happens INSIDE a ``with_sharding_constraint`` pinned to the slab sharding,
 so GSPMD emits a reduce-scatter straight into the shard each device owns
-instead of all-reduce + local slice.  The legacy pytree-tuple signature
-survives as a thin DuDe-only compat adapter (one release).
+instead of all-reduce + local slice.  The legacy pytree-tuple signature and
+the ``flat_optimizer=`` keyword shim are RETIRED: the flat step is the only
+step (held tuple states convert once via ``flat_state_from_legacy``; see
+the migration table in docs/api.md).  The per-arrival async path lives in
+``runtime/runner.py`` over the same state.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -51,11 +53,9 @@ from ..sharding import (
     batch_sharding,
     cache_shardings,
     dude_state_shardings,
-    engine_state_shardings,
     flat_train_state_shardings,
     make_shard_hook,
     param_shardings,
-    slot_shardings,
 )
 
 Pytree = Any
@@ -97,12 +97,6 @@ class TrainOptions:
                                    # mesh and run the round under shard_map
                                    # (mesh-native engine); False keeps the
                                    # engine layout up to GSPMD
-    flat_optimizer: bool = False   # flat-state training: master params +
-                                   # optimizer slots live as [P] slabs in the
-                                   # engine's segment-range layout, the round
-                                   # and the apply fuse into one shard_map
-                                   # (engine.round_apply), and the params are
-                                   # unraveled ONCE per step for the forward
 
 
 def make_engine(cfg: ModelConfig, mesh=None,
@@ -130,28 +124,12 @@ def make_engine(cfg: ModelConfig, mesh=None,
     )
 
 
-def _deprecated_flat_kw(fn_name: str, options: TrainOptions,
-                        flat_optimizer) -> TrainOptions:
-    """One-release shim for the retired ``flat_optimizer=`` keyword that used
-    to shadow ``TrainOptions.flat_optimizer`` — the options field is the one
-    source of truth now."""
-    if flat_optimizer is None:
-        return options
-    warnings.warn(
-        f"the flat_optimizer= keyword on {fn_name} is deprecated and will be "
-        "removed; set TrainOptions(flat_optimizer=...) (or use api.Trainer, "
-        "which is always flat) instead",
-        DeprecationWarning, stacklevel=3)
-    return dataclasses.replace(options, flat_optimizer=bool(flat_optimizer))
-
-
 def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                     dude_cfg: Optional[DuDeConfig] = None,
                     options: TrainOptions = TrainOptions(),
                     engine: Optional[DuDeEngine] = None,
-                    algo: Optional[RoundAlgo] = None,
-                    flat_optimizer: Optional[bool] = None) -> Callable:
-    """The jitted round step.  The CANONICAL step is the flat one:
+                    algo: Optional[RoundAlgo] = None) -> Callable:
+    """The jitted round step, on the one canonical (flat) train state:
 
     ``(state: FlatTrainState, batch, sm, cm) -> (state, metrics)`` — master
     params and optimizer slots stay in the engine's segment-range ``[P]``
@@ -163,15 +141,10 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
     gather left is the single params all-gather feeding ``spec.unravel``
     for the forward.
 
-    Pytree mode (``options.flat_optimizer=False``, DuDe family only) is a
-    thin COMPAT ADAPTER kept for one release: ``(params, opt_state,
-    dude_state, batch, sm, cm) -> (params, opt_state, dude_state, metrics)``
-    shares ``fresh_grads`` and the engine round with the flat step and
-    differs only in applying the pytree optimizer per leaf — which matches
-    the flat twin bit-for-bit on f32 params (tests/test_flat_state.py).
-    Convert a held tuple state with ``flat_state_from_legacy``.
+    (The legacy pytree-tuple signature and the ``flat_optimizer=`` keyword
+    shim are retired; a held tuple state converts once through
+    ``flat_state_from_legacy`` — see the docs/api.md migration table.)
     """
-    options = _deprecated_flat_kw("make_train_step", options, flat_optimizer)
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
@@ -278,42 +251,19 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                 {"loss": jnp.mean(losses),
                  "applied": applied.astype(jnp.float32)})
 
-    if options.flat_optimizer:
-        return flat_train_step
-
-    if not algo.fused_apply:
-        raise ValueError(
-            f"the legacy pytree step signature only supports the DuDe "
-            f"family; algo {algo.name!r} needs the flat step "
-            "(TrainOptions(flat_optimizer=True) or api.Trainer)")
-
-    def train_step(params, opt_state: OptState, dude_state: EngineState,
-                   batch, start_mask, commit_mask):
-        """COMPAT ADAPTER (legacy tuple signature, DuDe family only, kept
-        for one release): same fresh_grads and engine round as the flat
-        step, with the aggregated direction unraveled to feed the pytree
-        optimizer apply.  The pytree apply and the flat twin agree
-        bit-for-bit on f32 params (tests/test_flat_state.py), so this path
-        adds no second source of optimizer math — use ``api.Trainer`` /
-        the flat step for anything new."""
-        fresh, losses = fresh_grads(params, batch)
-        dude_state, g_flat = engine.round(dude_state, fresh,
-                                          start_mask, commit_mask)
-        g = engine.spec.unravel(g_flat)
-        params, opt_state = opt.apply(params, g, opt_state)
-        return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
-
-    return train_step
+    return flat_train_step
 
 
 def flat_state_from_legacy(engine: DuDeEngine, opt, params: Pytree,
                            opt_state: OptState,
                            dude_state: EngineState) -> FlatTrainState:
-    """Migration shim: a legacy ``(params, opt_state, dude_state)`` tuple ->
-    the canonical ``FlatTrainState`` (master params raveled to f32 ``[P]``,
-    per-leaf optimizer slots raveled to the flat twin's slab layout, engine
-    state adopted as-is) — so an old pytree-mode loop can resume through
-    ``api.Trainer`` mid-run."""
+    """Migration helper: a legacy ``(params, opt_state, dude_state)`` tuple
+    -> the canonical ``FlatTrainState`` (master params raveled to f32
+    ``[P]``, per-leaf optimizer slots raveled to the flat twin's slab
+    layout, engine state adopted as-is).  The pytree-tuple step that
+    PRODUCED such tuples is retired — convert once with this helper, then
+    continue through ``api.Trainer`` / the flat step; the full old-call ->
+    new-call mapping is the migration table in docs/api.md."""
     spec = engine.spec
     state = FlatTrainState(
         spec.ravel(params, jnp.float32),
@@ -408,58 +358,31 @@ def abstract_train_state(cfg: ModelConfig, mesh, opt=None,
                          dude_cfg: Optional[DuDeConfig] = None,
                          options: TrainOptions = TrainOptions(),
                          engine: Optional[DuDeEngine] = None,
-                         algo: Optional[RoundAlgo] = None,
-                         flat_optimizer: Optional[bool] = None):
-    """Returns (arg_shapes, arg_shardings) for the train step's state.
-
-    Flat mode (``options.flat_optimizer``, the canonical state): one
-    ``FlatTrainState`` of ShapeDtypeStructs and its
+                         algo: Optional[RoundAlgo] = None):
+    """Returns (state_shapes, state_shardings) for the train step's state:
+    one ``FlatTrainState`` of ShapeDtypeStructs and its
     ``flat_train_state_shardings`` — every slab rides the engine's
     segment-range P-axis split, with the server entry shaped by the
-    session's ``RoundAlgo`` (an ``EngineState`` for the DuDe family, the
-    rule's own slabs otherwise).
-
-    Pytree mode (compat): a ``(params, opt_state, dude_state)`` tuple (and
-    the same tuple of shardings).  The DuDe entry is the flat
-    ``EngineState`` of ``make_engine`` — P-axis sharded via
-    ``engine_state_shardings`` when the engine is mesh-native, replicated
-    otherwise.
+    session's rule (an ``EngineState`` for the DuDe family, the rule's own
+    slabs otherwise).  ``algo`` may be a ``RoundAlgo`` or an ``AsyncAlgo``
+    — both expose ``state_shapes()``.  (The retired pytree-tuple shapes are
+    gone with the pytree step; see docs/api.md.)
     """
-    options = _deprecated_flat_kw("abstract_train_state", options,
-                                  flat_optimizer)
     opt = opt or sgd(0.01)
     dude_cfg = dude_cfg or DuDeConfig(cfg.n_workers, cfg.dude_buffer_dtype)
     engine = engine or make_engine(cfg, mesh, dude_cfg, options)
-    params = abstract_params(cfg)
 
-    if options.flat_optimizer:
-        algo = algo or make_round_algo(
-            "dude_accum" if engine.accumulate else "dude", engine)
-        fopt = flat_twin(opt)
-        pf = _sds((engine.P,), jnp.float32)
-        fo_state = jax.eval_shape(fopt.init, pf)
-        srv_shapes = algo.state_shapes()
-        st_shapes = FlatTrainState(pf, fo_state, srv_shapes)
-        st_sh = flat_train_state_shardings(engine.spec, mesh,
-                                           engine.paxes or (), fo_state,
-                                           server_like=srv_shapes)
-        return st_shapes, st_sh
-
-    opt_state = jax.eval_shape(opt.init, params)
-    dude_state = engine.state_shapes()
-
-    p_sh = param_shardings(params, mesh)
-    dude_sh = engine_state_shardings(engine.spec, mesh, engine.paxes or ())
-    repl = NamedSharding(mesh, P())
-    o_sh = jax.tree.map(lambda _: repl, opt_state)
-    # momentum/adam slots shard like the params they mirror (slot_shardings
-    # reuses the param shardings structurally, so AdamW's {"m", "v"} path
-    # prefixes cannot skew the name-pattern rules)
-    if hasattr(opt_state, "slots") and opt_state.slots:
-        o_sh = type(opt_state)(step=repl,
-                               slots=slot_shardings(params, opt_state.slots,
-                                                    mesh))
-    return (params, opt_state, dude_state), (p_sh, o_sh, dude_sh)
+    algo = algo or make_round_algo(
+        "dude_accum" if engine.accumulate else "dude", engine)
+    fopt = flat_twin(opt)
+    pf = _sds((engine.P,), jnp.float32)
+    fo_state = jax.eval_shape(fopt.init, pf)
+    srv_shapes = algo.state_shapes()
+    st_shapes = FlatTrainState(pf, fo_state, srv_shapes)
+    st_sh = flat_train_state_shardings(engine.spec, mesh,
+                                       engine.paxes or (), fo_state,
+                                       server_like=srv_shapes)
+    return st_shapes, st_sh
 
 
 def init_flat_train_state(engine: DuDeEngine, opt, params: Pytree,

@@ -1,28 +1,34 @@
-"""Production training driver (DESIGN.md mode B): round-based semi-async
-training on whatever mesh is available, through the one ``api.Trainer``
-session — every server algorithm in the registry (DuDe-ASGD and the
-round-based Table-1 baselines) runs the same mesh-native flat train step.
+"""Production training driver (DESIGN.md mode B): semi-async ROUND training
+or event-driven PER-ARRIVAL training (``--async``) on whatever mesh is
+available, through the one ``api.Trainer`` session — every server algorithm
+in the ``core/algos.py`` registries runs the same mesh-native flat engine
+state.
 
 On the real cluster this runs under the 16x16 / 2x16x16 production meshes
 (see dryrun.py for the lowering proof); on this CPU container it runs the
 same code path on a 1-device mesh at reduced scale (or a host-platform
 multi-device mesh via --mesh and XLA_FLAGS=--xla_force_host_platform_device_count=N).
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --rounds 50 --seq-len 64 --per-worker-batch 2 --algo dude
   # a Table-1 baseline through the same engine path:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --rounds 50 --algo fedbuff
+  # event-driven per-arrival training (docs/async.md): exponential
+  # stragglers, one engine.commit + optimizer apply per gradient arrival
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --async --arrival exp --rounds 50 --algo dude --trace-out trace.json
+  # bit-exact replay of that run's arrival schedule:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --async --arrival trace --trace-in trace.json --rounds 50 --algo dude
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -31,24 +37,14 @@ import numpy as np
 from repro.api import CheckpointPolicy, ConfigError, Trainer, TrainerConfig
 from repro.api.config import OPTIMIZERS
 from repro.core import (
-    BACKENDS, ROUND_ALGOS, delay_stats, make_round_schedule,
+    ASYNC_ALGOS, BACKENDS, ROUND_ALGOS, delay_stats, make_round_schedule,
     truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
 from repro.models.stubs import make_prefix_embeddings
-
-
-class _DeprecatedNoOp(argparse.Action):
-    """A retired flag that still parses (one release) but only warns."""
-
-    def __init__(self, option_strings, dest, **kw):
-        super().__init__(option_strings, dest, nargs=0, **kw)
-
-    def __call__(self, parser, namespace, values, option_string=None):
-        msg = (f"{option_string} is deprecated and a no-op: the flat "
-               "segment-range layout is the only train state now")
-        warnings.warn(msg, DeprecationWarning)
-        print(f"[train] WARNING: {msg}", file=sys.stderr)
+from repro.runtime import (
+    ARRIVAL_KINDS, ExponentialArrivals, FixedArrivals, make_arrivals,
+)
 
 
 def parse_mesh(spec: str):
@@ -65,15 +61,18 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config variant (CPU-scale)")
-    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--rounds", type=int, default=100,
+                    help="server iterations (rounds, or applied arrivals "
+                         "under --async)")
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--per-worker-batch", type=int, default=2)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--opt", default="sgd", choices=sorted(OPTIMIZERS))
-    ap.add_argument("--algo", default="dude", choices=list(ROUND_ALGOS),
-                    help="server update rule (core/algos registry): the "
-                         "DuDe family or a round-based Table-1 baseline — "
-                         "all run the same mesh-native flat train step")
+    ap.add_argument("--algo", default="dude",
+                    choices=sorted(set(ROUND_ALGOS) | set(ASYNC_ALGOS)),
+                    help="server update rule (core/algos registries): round "
+                         "rules drive the masked round step, arrival rules "
+                         "need --async; 'dude' runs either way")
     ap.add_argument("--server-backend", default="reference",
                     choices=list(BACKENDS),
                     help="ServerEngine update path for the DuDe round "
@@ -81,9 +80,27 @@ def main():
     ap.add_argument("--mesh", default="none",
                     help='"DxM" (data x model) host mesh, or "none"')
     ap.add_argument("--fedbuff-buffer-size", type=int, default=4)
-    ap.add_argument("--flat-optimizer", action=_DeprecatedNoOp,
-                    help="deprecated no-op: the flat segment-range layout "
-                         "is now the only train state")
+    # ------------------------------------------------- async runtime flags
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="event-driven per-arrival training (AsyncRunner): "
+                         "one engine.commit + flat optimizer apply per "
+                         "gradient arrival (docs/async.md)")
+    ap.add_argument("--arrival", default="fixed", choices=list(ARRIVAL_KINDS),
+                    help="arrival process: 'fixed' = the paper's fixed-"
+                         "speed model (from --speed-std), 'exp' = "
+                         "exponential durations (stragglers in the tail), "
+                         "'trace' = replay --trace-in")
+    ap.add_argument("--arrival-mean", type=float, default=1.0,
+                    help="exp arrivals: scale on the per-worker mean "
+                         "durations (drawn from the speed model)")
+    ap.add_argument("--trace-in", default=None,
+                    help="ArrivalTrace JSON to replay (--arrival trace)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record this run's ArrivalTrace JSON here")
+    ap.add_argument("--max-in-flight", type=int, default=None,
+                    help="bound on concurrent dispatched-but-unarrived "
+                         "gradient jobs (back-pressure on simultaneously "
+                         "stale work; default: all workers)")
     ap.add_argument("--speed-std", type=float, default=1.0,
                     help="worker speed heterogeneity (paper std)")
     ap.add_argument("--heterogeneity", type=float, default=1.0,
@@ -102,6 +119,7 @@ def main():
             server_backend=args.server_backend,
             mesh=parse_mesh(args.mesh),
             fedbuff_buffer_size=args.fedbuff_buffer_size,
+            max_in_flight=args.max_in_flight,
             seed=args.seed,
             checkpoint=CheckpointPolicy(directory=args.ckpt_dir,
                                         every=args.ckpt_every),
@@ -116,40 +134,86 @@ def main():
         trainer = Trainer.create(config)
     cfg = trainer.cfg
     n = cfg.n_workers
-    print(f"[train] arch={cfg.name} algo={args.algo} workers={n} "
+    mode = "async" if args.async_mode else "rounds"
+    print(f"[train] arch={cfg.name} algo={args.algo} mode={mode} workers={n} "
           f"devices={jax.device_count()} mesh={args.mesh} "
           f"server-backend={args.server_backend}")
     print(f"[train] params={trainer.param_count():,}")
 
     speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
-    sch = make_round_schedule(speeds, args.rounds)
-    print(f"[train] schedule: {delay_stats(sch)}")
-
     sampler = make_token_sampler(
         n, cfg.vocab_size, args.seq_len, args.per_worker_batch,
         heterogeneity=args.heterogeneity, seed=args.seed,
     )
-    rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
 
-    def round_batch():
-        per = [sampler(i, rng) for i in range(n)]
-        toks = np.stack([p["tokens"] for p in per])
-        labs = np.stack([p["labels"] for p in per])
+    def worker_batch(per):
+        """One worker's sample -> model batch (no worker axis)."""
+        toks, labs = np.asarray(per["tokens"]), np.asarray(per["labels"])
         if cfg.num_codebooks > 1:
             toks = np.repeat(toks[..., None], cfg.num_codebooks, -1)
             labs = np.repeat(labs[..., None], cfg.num_codebooks, -1)
         if cfg.num_prefix_tokens:
-            pad = -np.ones((n, args.per_worker_batch, cfg.num_prefix_tokens)
-                           + labs.shape[3:], labs.dtype)
-            labs = np.concatenate([pad, labs], axis=2)
+            pad = -np.ones((args.per_worker_batch, cfg.num_prefix_tokens)
+                           + labs.shape[2:], labs.dtype)
+            labs = np.concatenate([pad, labs], axis=1)
         batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
         if cfg.frontend:
-            pe = make_prefix_embeddings(key, cfg, args.per_worker_batch)
-            batch["prefix_emb"] = jnp.broadcast_to(pe[None], (n,) + pe.shape)
+            batch["prefix_emb"] = make_prefix_embeddings(
+                key, cfg, args.per_worker_batch)
         return batch
 
     t0 = time.time()
+
+    if args.async_mode:
+        # --------------------------- event-driven per-arrival training ----
+        if args.arrival == "fixed":
+            process = FixedArrivals.from_speeds(speeds)
+        elif args.arrival == "exp":
+            process = ExponentialArrivals(
+                n, mean=np.asarray(speeds.times) * args.arrival_mean,
+                seed=args.seed + 2)
+        else:
+            if args.trace_in is None:
+                ap.error("--arrival trace needs --trace-in")
+            process = make_arrivals("trace", n, trace=args.trace_in)
+
+        def sample_fn(i, rng):
+            return worker_batch(sampler(i, rng))
+
+        res = trainer.run_async(process, args.rounds, sample_fn,
+                                record_every=args.log_every)
+        for t, it, loss in zip(res.times, res.iters, res.losses):
+            print(f"[arrival it={it:5d}] loss={loss:.4f} t_sim={t:.2f}")
+        if args.trace_out:
+            res.trace.save(args.trace_out)
+            print(f"[train] wrote arrival trace -> {args.trace_out}")
+        if args.ckpt_dir:
+            # the runner owns the arrival loop, so the round-cadence
+            # maybe_save() never fires mid-run; always persist the final
+            # state when a checkpoint directory is configured
+            print(f"[train] checkpoint -> {trainer.save()}")
+        print(json.dumps({
+            "arch": cfg.name, "algo": args.algo, "mode": "async",
+            "arrival": args.arrival, "iters": int(res.stats.iters),
+            "arrivals": int(res.stats.arrivals),
+            "tau_max": int(res.tau_max),
+            "max_in_flight": int(res.stats.max_in_flight),
+            "first_loss": float(res.losses[0]) if len(res.losses) else None,
+            "last_loss": float(res.losses[-1]) if len(res.losses) else None,
+            "wall_s": round(time.time() - t0, 1),
+        }))
+        return
+
+    # ------------------------------------------- masked round training ----
+    sch = make_round_schedule(speeds, args.rounds)
+    print(f"[train] schedule: {delay_stats(sch)}")
+    rng = np.random.default_rng(args.seed)
+
+    def round_batch():
+        per = [worker_batch(sampler(i, rng)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
     history = []
     for r in range(sch.rounds):
         metrics = trainer.step(round_batch(),
@@ -162,7 +226,8 @@ def main():
         trainer.maybe_save()
 
     print(json.dumps({
-        "arch": cfg.name, "algo": args.algo, "rounds": sch.rounds,
+        "arch": cfg.name, "algo": args.algo, "mode": "rounds",
+        "rounds": sch.rounds,
         "first_loss": history[0], "last_loss": history[-1],
         "wall_s": round(time.time() - t0, 1),
     }))

@@ -23,8 +23,12 @@ three update rules, so the pad lanes of the slab never drift.
 ``FLAT_OPTIMIZERS`` maps each pytree optimizer name to its flat factory;
 ``flat_twin(opt)`` rebuilds the twin from the recorded hyperparameters.
 ``FlatTrainState`` bundles the flat master params, the flat optimizer state,
-and the engine's ``EngineState`` — the whole training state in one
-P-axis-sharded layout.
+and the server rule's slabs (the engine's ``EngineState`` for the DuDe
+family) — the whole training state in one P-axis-sharded layout, consumed
+by the round step (``launch/steps.py``) and the per-arrival async runner
+(``runtime/runner.py``) alike.
+
+Documented in docs/engine.md — "Flat training state".
 """
 
 from __future__ import annotations

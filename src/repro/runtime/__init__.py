@@ -1,0 +1,39 @@
+"""repro.runtime — the event-driven asynchronous training runtime.
+
+Three layers, documented in docs/async.md:
+
+* ``arrivals`` — pluggable ``ArrivalProcess`` timing models (fixed-rate,
+  exponential stragglers, trace replay) and the recordable ``ArrivalTrace``;
+* ``loop`` — the ONE dispatch/collect event loop (routing disciplines,
+  staleness bookkeeping, bounded in-flight depth) shared by the simulator
+  and the production runner;
+* ``runner`` — ``AsyncRunner``: per-arrival ``commit`` + flat optimizer
+  apply on the P-axis-sharded ``FlatTrainState``, with a double-buffered
+  host->device queue.
+
+``runner`` is exported lazily: it imports ``repro.core`` (engines, algos),
+which itself imports ``runtime.loop`` from the simulator — eager re-export
+here would close that cycle during ``repro.core``'s own import.
+"""
+
+from .arrivals import (
+    ARRIVAL_KINDS, Arrival, ArrivalProcess, ArrivalTrace,
+    ExponentialArrivals, FixedArrivals, TraceArrivals, make_arrivals,
+)
+from .loop import ArrivalView, LoopStats, drive_arrivals
+
+__all__ = [
+    "ARRIVAL_KINDS", "Arrival", "ArrivalProcess", "ArrivalTrace",
+    "ExponentialArrivals", "FixedArrivals", "TraceArrivals", "make_arrivals",
+    "ArrivalView", "LoopStats", "drive_arrivals",
+    "AsyncResult", "AsyncRunner", "DeviceQueue",
+]
+
+_RUNNER_EXPORTS = ("AsyncResult", "AsyncRunner", "DeviceQueue")
+
+
+def __getattr__(name):  # PEP 562: break the core <-> runtime import cycle
+    if name in _RUNNER_EXPORTS:
+        from . import runner
+        return getattr(runner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

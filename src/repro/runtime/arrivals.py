@@ -1,0 +1,230 @@
+"""Arrival processes: who finishes a gradient, and when (host-side).
+
+The asynchronous algorithms in this repo are distinguished by their arrival
+*process* — the continuous-time stream of worker completions — not by their
+server math (AsGrad, Islamov et al. 2023).  This module makes that process a
+first-class, pluggable object: an ``ArrivalProcess`` draws the compute
+DURATION of each dispatched gradient job, and the event loop
+(``runtime/loop.py``) turns those draws into a deterministic dispatch/collect
+event stream.  Three processes ship:
+
+* ``FixedArrivals`` — the paper's fixed-computation-speed model (worker ``i``
+  always takes ``times[i]``); ``from_speeds`` adapts a ``SpeedModel``.
+* ``ExponentialArrivals`` — i.i.d. exponential durations per worker; the
+  heavy upper tail produces natural stragglers.
+* ``TraceArrivals`` — bit-exact replay of an ``ArrivalTrace`` recorded by a
+  previous run (simulator or runner): the recorded durations are re-served
+  per worker in dispatch order, so the deterministic event loop reproduces
+  the identical arrival sequence.
+
+Everything here is plain numpy on the host.  Documented in docs/async.md
+("Arrival processes").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ARRIVAL_KINDS", "Arrival", "ArrivalTrace", "ArrivalProcess",
+    "FixedArrivals", "ExponentialArrivals", "TraceArrivals", "make_arrivals",
+]
+
+# the --arrival CLI vocabulary (launch/train.py)
+ARRIVAL_KINDS = ("fixed", "exp", "trace")
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One collect event: worker ``worker``'s job, dispatched at
+    ``t_dispatch``, arrives at the server at ``t_arrive``."""
+
+    seq: int            # global arrival index (0-based)
+    worker: int
+    t_dispatch: float
+    t_arrive: float
+
+    @property
+    def duration(self) -> float:
+        return self.t_arrive - self.t_dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    """A recorded arrival schedule — the ground truth for trace-replay.
+
+    Stores the per-arrival ``(worker, t_dispatch, t_arrive)`` triples in
+    arrival order.  Replay does not re-enact these rows directly: each
+    worker's jobs are sequential, so the per-worker sequence of *durations*
+    fully determines the event evolution under the deterministic loop, and
+    ``TraceArrivals`` re-serves exactly those durations.
+    """
+
+    n: int
+    worker: np.ndarray      # [m] int32, arrival order
+    t_dispatch: np.ndarray  # [m] float64
+    t_arrive: np.ndarray    # [m] float64
+
+    def __len__(self) -> int:
+        return int(self.worker.shape[0])
+
+    def __getitem__(self, k: int) -> Arrival:
+        return Arrival(k, int(self.worker[k]), float(self.t_dispatch[k]),
+                       float(self.t_arrive[k]))
+
+    @classmethod
+    def from_arrivals(cls, n: int, arrivals: Sequence[Arrival]
+                      ) -> "ArrivalTrace":
+        return cls(
+            n=n,
+            worker=np.asarray([a.worker for a in arrivals], np.int32),
+            t_dispatch=np.asarray([a.t_dispatch for a in arrivals]),
+            t_arrive=np.asarray([a.t_arrive for a in arrivals]),
+        )
+
+    def durations_per_worker(self) -> list:
+        """Per-worker FIFO of job durations, in that worker's job order."""
+        out = [[] for _ in range(self.n)]
+        for k in range(len(self)):
+            out[int(self.worker[k])].append(
+                float(self.t_arrive[k]) - float(self.t_dispatch[k]))
+        return out
+
+    # ------------------------------------------------------- persistence
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump({
+                "n": self.n,
+                "worker": [int(w) for w in self.worker],
+                "t_dispatch": [float(t) for t in self.t_dispatch],
+                "t_arrive": [float(t) for t in self.t_arrive],
+            }, f)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ArrivalTrace":
+        with open(path) as f:
+            d = json.load(f)
+        return cls(n=int(d["n"]),
+                   worker=np.asarray(d["worker"], np.int32),
+                   t_dispatch=np.asarray(d["t_dispatch"]),
+                   t_arrive=np.asarray(d["t_arrive"]))
+
+
+class ArrivalProcess:
+    """Timing model of gradient computation: ``duration(worker)`` draws how
+    long the job dispatched NOW on ``worker`` will take.  Stateful processes
+    (rng streams, trace cursors) restart from ``reset()`` — the event loop
+    calls it once per run, so one process object can drive many runs."""
+
+    n: int
+
+    def reset(self) -> None:  # pragma: no cover - trivial default
+        pass
+
+    def duration(self, worker: int) -> float:
+        raise NotImplementedError
+
+
+class FixedArrivals(ArrivalProcess):
+    """Fixed-computation-speed model (paper §5): worker ``i`` always takes
+    ``times[i]`` per gradient.  With equal times this is a fixed-rate
+    round-robin arrival stream."""
+
+    def __init__(self, times):
+        times = np.asarray(times, np.float64)
+        if times.ndim != 1 or np.any(times <= 0):
+            raise ValueError("times must be a 1-D array of positive floats")
+        self.times = times
+        self.n = int(times.shape[0])
+
+    @classmethod
+    def from_speeds(cls, speeds) -> "FixedArrivals":
+        """Adapt a ``core.schedules.SpeedModel`` (anything with ``.times``)."""
+        return cls(np.asarray(speeds.times))
+
+    def duration(self, worker: int) -> float:
+        return float(self.times[worker])
+
+
+class ExponentialArrivals(ArrivalProcess):
+    """I.i.d. exponential job durations: worker ``i``'s jobs take
+    ``Exp(mean=means[i])``.  The exponential's heavy upper tail produces the
+    straggler pattern the paper's delay analysis targets — occasional jobs
+    many times the mean — without a separate straggler knob.  A scalar
+    ``mean`` gives a homogeneous fleet; pass a vector to skew it."""
+
+    def __init__(self, n: int, mean=1.0, seed: int = 0, floor: float = 1e-6):
+        means = np.broadcast_to(np.asarray(mean, np.float64), (n,)).copy()
+        if np.any(means <= 0):
+            raise ValueError("mean durations must be positive")
+        self.n = int(n)
+        self.means = means
+        self.seed = int(seed)
+        self.floor = float(floor)
+        self.reset()
+
+    def reset(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def duration(self, worker: int) -> float:
+        return max(self.floor,
+                   float(self._rng.exponential(self.means[worker])))
+
+
+class TraceArrivals(ArrivalProcess):
+    """Replay of a recorded ``ArrivalTrace``.
+
+    Serves each worker's recorded durations back in dispatch order; the
+    deterministic event loop then reproduces the recorded arrival sequence
+    exactly (same order, same times) — asserted per run by the loop when it
+    finishes, and end-to-end by ``tests/test_runtime.py`` (simulator and
+    runner produce bit-identical parameters from one trace).  A worker whose
+    recorded jobs are exhausted gets an INFINITE duration: the recording run
+    dispatched that trailing job too but it never arrived inside the
+    recorded window, so in replay it never arrives either (the loop stops
+    when only never-arriving jobs remain).
+    """
+
+    def __init__(self, trace: ArrivalTrace):
+        self.trace = trace
+        self.n = trace.n
+        self.reset()
+
+    def reset(self) -> None:
+        self._cursor = [0] * self.n
+        self._durations = self.trace.durations_per_worker()
+
+    def duration(self, worker: int) -> float:
+        c = self._cursor[worker]
+        if c >= len(self._durations[worker]):
+            return float("inf")  # dispatched beyond the recorded window
+        self._cursor[worker] = c + 1
+        return self._durations[worker][c]
+
+
+def make_arrivals(kind: str, n: int, *, times=None, mean=1.0, seed: int = 0,
+                  trace: Optional[str] = None) -> ArrivalProcess:
+    """CLI-facing factory for ``--arrival {fixed,exp,trace}``.
+
+    ``fixed`` uses ``times`` (defaults to all-ones), ``exp`` draws
+    ``Exp(mean)`` durations with ``seed``, ``trace`` loads the
+    ``ArrivalTrace`` JSON at ``trace``.
+    """
+    if kind == "fixed":
+        return FixedArrivals(np.ones(n) if times is None else times)
+    if kind == "exp":
+        return ExponentialArrivals(n, mean=mean, seed=seed)
+    if kind == "trace":
+        if trace is None:
+            raise ValueError("arrival kind 'trace' needs a trace path")
+        t = ArrivalTrace.load(trace)
+        if t.n != n:
+            raise ValueError(f"trace has n={t.n} workers, run has n={n}")
+        return TraceArrivals(t)
+    raise ValueError(f"unknown arrival kind {kind!r}; options: {ARRIVAL_KINDS}")

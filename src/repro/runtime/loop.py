@@ -1,0 +1,202 @@
+"""The one asynchronous event loop: dispatch/collect over an ArrivalProcess.
+
+Both execution modes of this repo run per-arrival training off THIS loop —
+the event-driven simulator (``core/simulator.py``, pytree math) and the
+production ``AsyncRunner`` (``runtime/runner.py``, flat slab math) — so the
+arrival semantics (heap ordering, routing draws, staleness bookkeeping,
+in-flight bounding) exist exactly once and the two modes are bit-for-bit
+comparable on a recorded trace (``tests/test_runtime.py``).
+
+The loop is host-only and deterministic given (a) the process's duration
+draws and (b) the caller-supplied ``rng`` consumed by the routing
+disciplines.  Per arrival it:
+
+1. pops the earliest ``(t_arrive, worker)`` job off the in-flight heap,
+2. calls ``on_arrival(view)`` — the caller computes the gradient on the
+   model version that worker holds and applies the server update, returning
+   whether the model version advanced (``applied``),
+3. routes the post-update model: greedy (``route=None``) hands it back to
+   the arriving worker; ``uniform``/``shuffled`` hand it to a sampled
+   worker's queue (Koloskova et al. 2022 / Islamov et al. 2024 semantics,
+   unchanged from the historical simulator loop),
+4. dispatches the next job(s), gated by ``max_in_flight``: dispatches beyond
+   the bound queue in FIFO order and start when an arrival frees a slot —
+   bounding CONCURRENT jobs (back-pressure, fewer simultaneously stale
+   gradients), not per-job staleness: a straggler's job still ages while
+   the other slots recycle.
+
+Every run records its ``ArrivalTrace``; replaying it through
+``TraceArrivals`` reproduces the identical event sequence (verified against
+the source trace at the end of a replay run).  Documented in docs/async.md
+("The event loop" / "Staleness accounting").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+from .arrivals import Arrival, ArrivalProcess, ArrivalTrace, TraceArrivals
+
+__all__ = ["ArrivalView", "LoopStats", "drive_arrivals"]
+
+ROUTES = (None, "uniform", "shuffled")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalView:
+    """What ``on_arrival`` sees: one worker arriving with a gradient.
+
+    ``iters`` is the number of APPLIED server iterations before this
+    arrival; ``tau`` the model staleness ``iters + 1 - version(worker)``
+    (the paper's model delay: how many server iterations elapsed since the
+    arriving gradient's model version was produced).
+    """
+
+    seq: int        # arrival index, 0-based
+    worker: int
+    t: float        # arrival time (simulated clock)
+    tau: int
+    iters: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopStats:
+    """What one driven run did: counts, staleness, and the recorded trace."""
+
+    arrivals: int
+    iters: int           # applied server iterations
+    tau_max: int
+    t_end: float
+    max_in_flight: int   # max simultaneously computing jobs observed
+    trace: ArrivalTrace
+
+
+def drive_arrivals(
+    process: ArrivalProcess,
+    total_iters: int,
+    on_arrival: Callable[[ArrivalView], bool],
+    deliver: Callable[[int], None],
+    *,
+    route: Optional[str] = None,
+    rng: Optional[np.random.Generator] = None,
+    max_in_flight: Optional[int] = None,
+    max_time: Optional[float] = None,
+) -> LoopStats:
+    """Drive per-arrival training until ``total_iters`` server iterations.
+
+    ``on_arrival(view) -> applied`` computes the gradient of the arriving
+    worker (on the model version it holds) and applies the server update;
+    ``deliver(worker)`` hands the CURRENT model to ``worker`` (the loop then
+    stamps that worker's model version).  ``rng`` feeds the routing draws
+    and must be the same generator the caller samples batches from — draw
+    order is part of the arrival semantics a trace replay must reproduce.
+    """
+    if route not in ROUTES:
+        raise ValueError(f"unknown route {route!r}; options: {ROUTES}")
+    if max_in_flight is not None and max_in_flight < 1:
+        raise ValueError(f"max_in_flight={max_in_flight} must be >= 1")
+    if route is not None and rng is None:
+        raise ValueError(f"route={route!r} needs an rng for its draws")
+    n = process.n
+    process.reset()
+
+    heap: list = []            # (t_arrive, worker, t_dispatch)
+    pending: list = []         # FIFO of workers waiting for an in-flight slot
+    queues = [1] * n           # pending models per worker (routed mode)
+    version_iter = [0] * n     # server iter that produced each worker's model
+    shuffle_order: list = []
+    arrivals: list = []
+    it = 0
+    t_now = 0.0
+    tau_max = 0
+    seq = 0
+    inflight_max = 0
+
+    def dispatch(w: int, t: float) -> None:
+        nonlocal inflight_max
+        if max_in_flight is not None and len(heap) >= max_in_flight:
+            pending.append(w)
+            return
+        heapq.heappush(heap, (t + process.duration(w), w, t))
+        inflight_max = max(inflight_max, len(heap))
+
+    def drain(t: float) -> None:
+        while pending and (max_in_flight is None
+                           or len(heap) < max_in_flight):
+            dispatch(pending.pop(0), t)
+
+    def next_routed_worker() -> int:
+        nonlocal shuffle_order
+        if route == "uniform":
+            return int(rng.integers(n))
+        if not shuffle_order:
+            shuffle_order = list(rng.permutation(n))
+        return int(shuffle_order.pop())
+
+    for i in range(n):
+        dispatch(i, 0.0)
+
+    while heap and it < total_iters and (max_time is None
+                                         or t_now < max_time):
+        t_now, i, t_disp = heapq.heappop(heap)
+        if not np.isfinite(t_now):
+            break  # only never-arriving jobs left (exhausted trace replay)
+        # the pop freed an in-flight slot: the pending FIFO takes it FIRST,
+        # so the arriving worker's own re-dispatch (below) queues behind
+        # earlier waiters instead of starving them at the bound
+        drain(t_now)
+        arrivals.append(Arrival(seq, i, t_disp, t_now))
+        tau = it + 1 - version_iter[i]
+        tau_max = max(tau_max, tau)
+        applied = bool(on_arrival(ArrivalView(seq, i, t_now, tau, it)))
+        seq += 1
+        if applied:
+            it += 1
+
+        if route is None:  # greedy: worker restarts on the freshest model
+            deliver(i)
+            version_iter[i] = it
+            dispatch(i, t_now)
+        else:  # routed: the new model goes to a sampled worker's queue
+            queues[i] -= 1
+            j = next_routed_worker()
+            deliver(j)
+            version_iter[j] = it
+            queues[j] += 1
+            if queues[i] > 0:  # keep draining this worker's backlog
+                dispatch(i, t_now)
+            if queues[j] == 1 and j != i:
+                dispatch(j, t_now)
+            if not heap and not pending:  # all idle: route to a random worker
+                j = int(rng.integers(n))
+                queues[j] += 1
+                dispatch(j, t_now)
+
+    trace = ArrivalTrace.from_arrivals(n, arrivals)
+    if isinstance(process, TraceArrivals):
+        _check_replay(trace, process.trace)
+    return LoopStats(arrivals=seq, iters=it, tau_max=tau_max, t_end=t_now,
+                     max_in_flight=inflight_max, trace=trace)
+
+
+def _check_replay(got: ArrivalTrace, want: ArrivalTrace) -> None:
+    """A replay run must re-enact the source trace event for event."""
+    m = len(got)
+    if m > len(want):
+        raise AssertionError(
+            f"replay produced {m} arrivals but the trace records only "
+            f"{len(want)}")
+    if not (np.array_equal(got.worker, want.worker[:m])
+            and np.allclose(got.t_arrive, want.t_arrive[:m])):
+        k = int(np.argmax((got.worker != want.worker[:m])
+                          | ~np.isclose(got.t_arrive, want.t_arrive[:m])))
+        raise AssertionError(
+            f"trace replay diverged at arrival {k}: got worker "
+            f"{int(got.worker[k])} @ t={float(got.t_arrive[k]):.6g}, trace "
+            f"says worker {int(want.worker[k])} @ "
+            f"t={float(want.t_arrive[k]):.6g} — was the replay run "
+            "configured with the recording run's route/rng?")

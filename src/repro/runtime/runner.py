@@ -1,0 +1,232 @@
+"""AsyncRunner: per-arrival training on the flat engine state.
+
+The production counterpart of the event-driven simulator: the same arrival
+semantics (``runtime/loop.py``) driving the paper's fully-asynchronous
+server iteration on the canonical ``FlatTrainState`` — per arrival, one
+``DuDeEngine.commit`` (or an ``AsyncAlgo`` rule from ``core/algos.py``) plus
+the flat optimizer apply, compiled as ONE jitted device step that is
+elementwise on the P-axis-sharded ``[P]`` slabs (mesh-native engines commit
+under their ``shard_map``, so a sharded arrival step moves zero bytes).
+
+Differences from the simulator, by design:
+
+* math runs on flat slabs (identical values: flat and pytree applies agree
+  bit-for-bit on f32 params, so a runner replaying a simulator trace
+  reproduces its parameters exactly — ``tests/test_runtime.py``);
+* the host never blocks per arrival: device steps are pushed through a
+  bounded ``DeviceQueue`` (depth 2 = double buffering) that only waits when
+  the device is ``queue_depth`` full steps behind the scheduler, and the
+  loss EMA stays on device between record points;
+* worker model snapshots are flat ``[P]`` vectors (n of them — the price of
+  physical staleness), handed out by the loop's ``deliver`` hook.  The
+  arrival step therefore does NOT donate its state: the freshest snapshot
+  aliases ``state.params``.
+
+Documented in docs/async.md ("The AsyncRunner" / "In-flight depth and the
+device queue").
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.algos import AsyncAlgo, make_async_algo
+from ..core.engine import DuDeEngine
+from ..optim import FlatOptState, FlatTrainState, flat_twin
+from .arrivals import ArrivalProcess, ArrivalTrace
+from .loop import LoopStats, drive_arrivals
+
+Pytree = Any
+
+__all__ = ["AsyncResult", "DeviceQueue", "AsyncRunner"]
+
+
+class DeviceQueue:
+    """Bounded queue of in-flight device computations.
+
+    ``push(x)`` enqueues a device value the host does not need yet; once
+    more than ``depth`` values are outstanding the oldest is waited on —
+    so the host runs at most ``depth`` steps ahead of the device (depth 2 =
+    classic double buffering: one step executing, one queued behind it)
+    while never synchronizing when a buffer slot is free.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"queue depth {depth} must be >= 1")
+        self.depth = depth
+        self._q: collections.deque = collections.deque()
+        self.waits = 0  # times the host actually blocked (for tests/bench)
+
+    def push(self, value) -> None:
+        self._q.append(value)
+        if len(self._q) > self.depth:
+            self.waits += 1
+            jax.block_until_ready(self._q.popleft())
+
+    def flush(self) -> None:
+        while self._q:
+            jax.block_until_ready(self._q.popleft())
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    """One AsyncRunner run, mirror of the simulator's ``SimResult`` plus the
+    loop's scheduling stats and the recorded trace."""
+
+    name: str
+    times: np.ndarray        # simulated clock at each record point
+    iters: np.ndarray        # server iterations at each record point
+    losses: np.ndarray       # running train-loss EMA (or eval_fn) at records
+    gnorms: np.ndarray       # |g| at each record point
+    state: FlatTrainState    # final train state (flat)
+    tau_max: int
+    n_grads: int             # stochastic gradients computed
+    stats: LoopStats
+
+    @property
+    def trace(self) -> ArrivalTrace:
+        return self.stats.trace
+
+
+class AsyncRunner:
+    """Event-driven per-arrival training session over the flat engine.
+
+    ``engine`` fixes the flat layout (and the mesh, when P-axis sharded);
+    ``algo`` is an ``AsyncAlgo`` or a name from ``core.algos.ASYNC_ALGOS``;
+    ``opt`` any optimizer with a flat twin.  ``grad_fn(params, batch, key)
+    -> (loss, grads)`` computes one worker's stochastic gradient on the
+    (stale) pytree params — the same callable contract as ``simulate`` —
+    and is jitted once, so a runner and a simulator sharing one ``grad_fn``
+    execute the identical compiled gradient.
+    """
+
+    def __init__(self, engine: DuDeEngine, algo, opt,
+                 grad_fn: Callable[..., tuple], *,
+                 queue_depth: int = 2,
+                 max_in_flight: Optional[int] = None):
+        self.engine = engine
+        self.algo: AsyncAlgo = (make_async_algo(algo, engine)
+                                if isinstance(algo, str) else algo)
+        self.fopt = flat_twin(opt)
+        self.max_in_flight = max_in_flight
+        self.queue_depth = queue_depth
+        spec = engine.spec
+        self._grad = jax.jit(grad_fn)
+        self._unravel = jax.jit(spec.unravel)
+        ravel_kw = {}
+        if engine.mesh is not None:
+            # land the raveled gradient straight in the engine's segment-
+            # range P-axis layout, so commit's shard_map sees local shards
+            from ..sharding import flat_vec_sharding
+            ravel_kw["out_shardings"] = flat_vec_sharding(
+                spec, engine.mesh, engine.paxes)
+        self._ravel = jax.jit(lambda g: spec.ravel(g, jnp.float32),
+                              **ravel_kw)
+        # NOT donated: the freshest worker snapshot aliases state.params
+        self._step = jax.jit(self._arrival_step)
+
+    def _arrival_step(self, state: FlatTrainState, worker, grad):
+        """One server iteration: algo rule (commit for DuDe) + flat apply,
+        all elementwise on the (possibly P-sharded) slabs."""
+        srv, g = self.algo.arrival(state.engine, worker, grad)
+        t_new = state.opt.step + 1
+        pf, slots = self.fopt.update(state.params, g, state.opt.slots, t_new)
+        return FlatTrainState(pf, FlatOptState(t_new, slots), srv), g
+
+    # ------------------------------------------------------------- state
+
+    def init_state(self, params: Pytree) -> FlatTrainState:
+        """Fresh ``FlatTrainState`` (same construction as the Trainer's)."""
+        from ..launch.steps import init_flat_train_state
+        return init_flat_train_state(self.engine, self.fopt, params,
+                                     algo=self.algo)
+
+    # --------------------------------------------------------------- run
+
+    def run(
+        self,
+        process: ArrivalProcess,
+        total_iters: int,
+        sample_fn: Callable,
+        state: FlatTrainState,
+        *,
+        seed: int = 0,
+        record_every: int = 10,
+        eval_fn: Optional[Callable] = None,
+        ema: float = 0.9,
+        max_time: Optional[float] = None,
+    ) -> AsyncResult:
+        """Drive ``total_iters`` per-arrival server iterations.
+
+        ``sample_fn(worker, rng) -> batch`` draws from that worker's local
+        data; ``seed`` feeds both the host rng (sampling + routing draws)
+        and the gradient PRNG key — pass the seed a ``simulate`` run used
+        and a trace replay reproduces its parameters bit-for-bit.
+        """
+        n = self.engine.n_workers
+        if process.n != n:
+            raise ValueError(
+                f"process has n={process.n}, engine n_workers={n}")
+        rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+        queue = DeviceQueue(self.queue_depth)
+
+        # every worker starts on the initial model (version 0)
+        worker_params = [state.params for _ in range(n)]
+        box = {"state": state, "key": key, "running": None, "n_grads": 0}
+        times, iters, losses, gnorms = [], [], [], []
+
+        def on_arrival(view) -> bool:
+            box["key"], k1 = jax.random.split(box["key"])
+            batch = sample_fn(view.worker, rng)
+            loss, g = self._grad(self._unravel(worker_params[view.worker]),
+                                 batch, k1)
+            gflat = self._ravel(g)
+            box["n_grads"] += 1
+            box["state"], g_dir = self._step(box["state"],
+                                             jnp.int32(view.worker), gflat)
+            # device-side EMA; the queue keeps the host <= depth steps ahead
+            # (g_dir comes out of the arrival step, so waiting on it bounds
+            # the whole grad+commit+apply chain of that arrival)
+            r = box["running"]
+            box["running"] = loss if r is None else ema * r + (1 - ema) * loss
+            queue.push((box["running"], g_dir))
+            it_after = view.iters + 1
+            if it_after % record_every == 0:
+                times.append(view.t)
+                iters.append(it_after)
+                if eval_fn is not None:
+                    losses.append(float(eval_fn(
+                        self.engine.spec.unravel(box["state"].params))))
+                else:
+                    losses.append(float(box["running"]))
+                # norm of the RAW arriving gradient — what SimResult records
+                # (the folded direction g_dir only gates the device queue)
+                gnorms.append(float(jnp.sqrt(jnp.sum(jnp.square(gflat)))))
+            return True  # every async rule applies every arrival
+
+        def deliver(worker: int) -> None:
+            worker_params[worker] = box["state"].params
+
+        stats = drive_arrivals(
+            process, total_iters, on_arrival, deliver,
+            route=self.algo.route, rng=rng,
+            max_in_flight=self.max_in_flight, max_time=max_time)
+        queue.flush()
+        return AsyncResult(
+            name=self.algo.name,
+            times=np.asarray(times), iters=np.asarray(iters),
+            losses=np.asarray(losses), gnorms=np.asarray(gnorms),
+            state=box["state"], tau_max=stats.tau_max,
+            n_grads=box["n_grads"], stats=stats,
+        )

@@ -6,6 +6,7 @@ from .specs import (
     engine_state_shardings,
     flat_slab_shardings,
     flat_train_state_shardings,
+    flat_vec_sharding,
     make_shard_hook,
     param_shardings,
     param_spec,
@@ -16,6 +17,7 @@ __all__ = [
     "param_spec", "param_shardings", "slot_shardings",
     "dude_state_shardings", "engine_state_shardings",
     "flat_slab_shardings", "flat_train_state_shardings",
+    "flat_vec_sharding",
     "batch_sharding", "cache_shardings",
     "make_shard_hook", "dp_axes",
 ]

@@ -215,6 +215,20 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
     )
 
 
+def flat_vec_sharding(spec: FlatSpec, mesh: Mesh, axes: Any = None
+                      ) -> NamedSharding:
+    """The NamedSharding of ONE flat ``[P]`` slab (the ``g_bar`` rule):
+    segment-range P-axis split over ``axes`` (None = all mesh axes),
+    dropping to replication when the axis product does not divide ``P``.
+    Used by the async runtime to land per-arrival raveled gradients and
+    worker param snapshots directly in the engine's layout.  A single-leaf
+    view of the structural ``flat_slab_shardings`` rule, so the fallback
+    logic exists once."""
+    return flat_slab_shardings(
+        jax.ShapeDtypeStruct((spec.padded_size,), jnp.float32),
+        spec, mesh, axes)
+
+
 def flat_slab_shardings(state_like: Pytree, spec: FlatSpec, mesh: Mesh,
                         axes: Any = None) -> Pytree:
     """Structural P-axis shardings for ANY pytree of flat slabs: every leaf

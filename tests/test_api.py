@@ -3,8 +3,6 @@ signature; config validation in one place; auto-format checkpoints; the
 round-algo registry shared between the production step and the simulator.
 """
 
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -84,20 +82,22 @@ def test_config_accepts_arch_aliases():
         ServeConfig(arch=name, smoke=True, max_len=32)
 
 
-def test_make_train_step_flat_kw_deprecated():
-    """The redundant flat_optimizer= keyword is a one-release shim: it still
-    works but warns; TrainOptions.flat_optimizer is the source of truth."""
-    from repro.launch.steps import TrainOptions, make_train_step
-    cfg = _tiny_cfg()
-    with pytest.warns(DeprecationWarning, match="flat_optimizer"):
-        step = make_train_step(cfg, None, flat_optimizer=True)
-    # the shim really selects the flat signature
-    from repro.launch.steps import init_flat_train_state, make_engine
+def test_flat_optimizer_shims_removed():
+    """PR-4's one-release deprecation window is over: the flat_optimizer=
+    keyword and the TrainOptions field are GONE (the flat step is the only
+    step), and the default make_train_step builds the flat signature."""
+    import dataclasses
+    from repro.launch.steps import (
+        TrainOptions, init_flat_train_state, make_engine, make_train_step)
     from repro.models import lm_init
+    cfg = _tiny_cfg()
+    with pytest.raises(TypeError):
+        make_train_step(cfg, None, flat_optimizer=True)
+    assert "flat_optimizer" not in {
+        f.name for f in dataclasses.fields(TrainOptions)}
+    # the default step IS the flat one
     engine = make_engine(cfg)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        step = make_train_step(cfg, None, engine=engine, flat_optimizer=True)
+    step = make_train_step(cfg, None, engine=engine)
     state = init_flat_train_state(engine, sgd(0.05),
                                   lm_init(jax.random.PRNGKey(0), cfg))
     ones = jnp.ones(cfg.n_workers, bool)
@@ -321,22 +321,26 @@ def test_serve_session_from_trainer_checkpoint(tmp_path):
 
 
 def test_flat_state_from_legacy_tuple():
-    """An old pytree-mode loop's (params, opt_state, dude_state) converts to
-    the canonical FlatTrainState and continues through the flat step."""
+    """A held pytree-mode (params, opt_state, dude_state) tuple — produced
+    by the RETIRED tuple step of an old release — converts once to the
+    canonical FlatTrainState and continues through the flat step."""
     from repro.launch.steps import (
-        TrainOptions, flat_state_from_legacy, make_engine, make_train_step)
+        flat_state_from_legacy, make_engine, make_train_step)
     from repro.models import lm_init
     from repro.optim import momentum_sgd
     cfg = _tiny_cfg()
     opt = momentum_sgd(0.05)
     engine = make_engine(cfg)
     params = lm_init(jax.random.PRNGKey(0), cfg)
-    opt_state = opt.init(params)
-    dude_state = engine.init()
     ones = jnp.ones(cfg.n_workers, bool)
-    pstep = jax.jit(make_train_step(cfg, None, opt, engine=engine))
-    params, opt_state, dude_state, _ = pstep(params, opt_state, dude_state,
-                                             _batch(cfg), ones, ones)
+    # re-enact one old-style tuple update by hand (the retired step was
+    # exactly: engine.round -> unravel -> pytree opt.apply)
+    rng = np.random.default_rng(0)
+    fresh = jnp.asarray(rng.normal(size=(cfg.n_workers, engine.P)),
+                        jnp.float32)
+    dude_state, g_flat = engine.round(engine.init(), fresh, ones, ones)
+    params, opt_state = opt.apply(params, engine.spec.unravel(g_flat),
+                                  opt.init(params))
     state = flat_state_from_legacy(engine, opt, params, opt_state, dude_state)
     np.testing.assert_array_equal(
         np.asarray(state.params),
@@ -344,9 +348,7 @@ def test_flat_state_from_legacy_tuple():
     np.testing.assert_array_equal(
         np.asarray(state.opt.slots),
         np.asarray(engine.spec.ravel(opt_state.slots, jnp.float32)))
-    fstep = jax.jit(make_train_step(
-        cfg, None, opt, engine=engine,
-        options=TrainOptions(flat_optimizer=True)))
+    fstep = jax.jit(make_train_step(cfg, None, opt, engine=engine))
     state, metrics = fstep(state, _batch(cfg), ones, ones)
     assert np.isfinite(float(metrics["loss"]))
 
@@ -377,12 +379,20 @@ def test_abstract_session_has_no_state():
         t.step(_batch(_tiny_cfg()), jnp.ones(4, bool), jnp.ones(4, bool))
 
 
-def test_pytree_signature_rejects_baseline_algos():
-    """The legacy tuple signature is DuDe-only; baselines need the flat
-    step (exactly the fork the session API removes)."""
-    from repro.launch.steps import make_engine, make_train_step
+def test_flat_step_serves_baseline_algos_directly():
+    """With the pytree fork retired, make_train_step hands ANY registry
+    rule the same flat signature — no DuDe-only carve-out left."""
+    from repro.launch.steps import (
+        init_flat_train_state, make_engine, make_train_step)
+    from repro.models import lm_init
     cfg = _tiny_cfg()
     engine = make_engine(cfg)
     algo = make_round_algo("mifa", engine)
-    with pytest.raises(ValueError, match="flat step"):
-        make_train_step(cfg, None, engine=engine, algo=algo)
+    step = make_train_step(cfg, None, sgd(0.05), engine=engine, algo=algo)
+    state = init_flat_train_state(engine, sgd(0.05),
+                                  lm_init(jax.random.PRNGKey(0), cfg),
+                                  algo=algo)
+    ones = jnp.ones(cfg.n_workers, bool)
+    state, metrics = jax.jit(step)(state, _batch(cfg), ones, ones)
+    assert np.isfinite(float(metrics["loss"]))
+    assert state.engine.shape == (cfg.n_workers, engine.P)  # mifa memory

@@ -51,35 +51,28 @@ def test_smoke_forward_shapes(arch):
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
-    """One full DuDe train step (mode B) on CPU: loss finite, params move,
-    no NaNs anywhere in the updated state."""
+    """One full DuDe train step (mode B, flat train state) on CPU: loss
+    finite, params move, no NaNs anywhere in the updated state."""
+    from repro.launch.steps import init_flat_train_state
     cfg = get_config(arch).smoke()
     key = jax.random.PRNGKey(1)
     params = lm_init(key, cfg)
     n = cfg.n_workers
     dude_cfg = DuDeConfig(n, jnp.float32)
     opt = sgd(0.01)
-    opt_state = opt.init(params)
     engine = make_engine(cfg, None, dude_cfg)
-    dude_state = engine.init()
-    step = make_train_step(cfg, None, opt, dude_cfg, engine=engine)
+    state = init_flat_train_state(engine, opt, params)
+    step = jax.jit(make_train_step(cfg, None, opt, dude_cfg, engine=engine))
     batch, _ = _smoke_batch(cfg, key, B=1, S=16, worker_dim=n)
     ones = jnp.ones(n, bool)
-    p0 = jax.tree.leaves(params)[0]
-    params2, opt_state, dude_state, metrics = jax.jit(step)(
-        params, opt_state, dude_state, batch, ones, ones
-    )
+    state2, metrics = step(state, batch, ones, ones)
     assert bool(jnp.isfinite(metrics["loss"])), arch
     # second round commits the latched gradients -> params must move
-    params3, _, dude_state, m2 = jax.jit(step)(
-        params2, opt_state, dude_state, batch, ones, ones
-    )
-    moved = sum(
-        float(jnp.sum(jnp.abs(a - b)))
-        for a, b in zip(jax.tree.leaves(params3), jax.tree.leaves(params2))
-    )
+    state3, m2 = step(state2, batch, ones, ones)
+    moved = float(jnp.sum(jnp.abs(state3.params - state2.params)))
     assert moved > 0, arch
-    for leaf in jax.tree.leaves(params3):
+    assert bool(jnp.all(jnp.isfinite(state3.params))), arch
+    for leaf in jax.tree.leaves(engine.spec.unravel(state3.params)):
         assert bool(jnp.all(jnp.isfinite(leaf))), arch
 
 

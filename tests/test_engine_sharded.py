@@ -152,21 +152,21 @@ def test_constrain_grads_emits_reduce_scatter():
     for constrain in (False, True):
         options = TrainOptions(constrain_grads=constrain)
         with mesh:
+            from repro.launch.steps import init_flat_train_state
             engine = make_engine(cfg, mesh, dude_cfg, options)
-            step = jax.jit(make_train_step(cfg, mesh, dude_cfg=dude_cfg,
+            opt = sgd(0.01)
+            step = jax.jit(make_train_step(cfg, mesh, opt, dude_cfg=dude_cfg,
                                            options=options, engine=engine))
-            params = lm_init(jax.random.PRNGKey(0), cfg)
-            opt_state = sgd(0.01).init(params)
-            dude_state = engine.init()
+            state = init_flat_train_state(
+                engine, opt, lm_init(jax.random.PRNGKey(0), cfg))
             b_sh = NamedSharding(mesh, P(None, "data", None))
             sharded_batch = jax.tree.map(
                 lambda x: jax.device_put(x, b_sh), batch)
-            hlo = step.lower(params, opt_state, dude_state, sharded_batch,
+            hlo = step.lower(state, sharded_batch,
                              ones, ones).compile().as_text()
             counts[constrain] = collective_counts(hlo)
             for _ in range(2):
-                params, opt_state, dude_state, metrics = step(
-                    params, opt_state, dude_state, sharded_batch, ones, ones)
+                state, metrics = step(state, sharded_batch, ones, ones)
             results[constrain] = float(metrics["loss"])
     assert counts[False]["reduce-scatter"] == 0, counts[False]
     assert counts[True]["reduce-scatter"] >= 1, counts[True]

@@ -27,7 +27,6 @@ Multi-device tests follow the test_engine_sharded.py pattern: skipped below
 in-process on the 8-device host mesh.
 """
 
-import dataclasses
 import os
 import re
 import subprocess
@@ -125,12 +124,14 @@ def test_flat_apply_matches_pytree_apply(backend, opt_name):
 
 @pytest.mark.parametrize("opt_name", list(OPTIMIZERS))
 def test_flat_train_step_matches_pytree(opt_name):
-    """Acceptance: flat and pytree TRAIN paths agree bit-for-bit on params
+    """Acceptance: the flat train step and a hand-rolled PYTREE reference
+    (vmapped backward -> engine.round -> unravel -> pytree opt.apply —
+    exactly the retired tuple step's math) agree bit-for-bit on params
     after 5 train steps on a small LM config."""
     from repro.core import DuDeConfig
     from repro.launch.steps import (TrainOptions, init_flat_train_state,
                                     make_engine, make_train_step)
-    from repro.models import lm_init
+    from repro.models import lm_init, loss_fn
 
     cfg = _small_cfg()
     n = cfg.n_workers
@@ -142,11 +143,23 @@ def test_flat_train_step_matches_pytree(opt_name):
     opt_state = popt.init(params)
     dude_state = engine.init()
     fstate = init_flat_train_state(engine, popt, params)
-    pstep = jax.jit(make_train_step(cfg, None, popt, dude_cfg,
-                                    options=options, engine=engine))
-    fstep = jax.jit(make_train_step(
-        cfg, None, popt, dude_cfg, engine=engine,
-        options=dataclasses.replace(options, flat_optimizer=True)))
+
+    @jax.jit
+    def pstep(params, opt_state, dude_state, batch, sm, cm):
+        def per_worker(p, wb):
+            (_, m), g = jax.value_and_grad(
+                lambda q: loss_fn(q, wb, cfg), has_aux=True)(p)
+            return g, m["loss"]
+
+        grads, losses = jax.vmap(per_worker, in_axes=(None, 0))(params, batch)
+        fresh = engine.spec.ravel_stacked(grads, jnp.float32)
+        dude_state, g_flat = engine.round(dude_state, fresh, sm, cm)
+        params, opt_state = popt.apply(params, engine.spec.unravel(g_flat),
+                                       opt_state)
+        return params, opt_state, dude_state, {"loss": jnp.mean(losses)}
+
+    fstep = jax.jit(make_train_step(cfg, None, popt, dude_cfg, engine=engine,
+                                    options=options))
     key = jax.random.PRNGKey(1)
     batch = {
         "tokens": jax.random.randint(key, (n, 2, 16), 0, cfg.vocab_size),
@@ -172,19 +185,22 @@ def test_flat_train_step_matches_pytree(opt_name):
 def test_slot_shardings_match_param_shardings(opt_name):
     """Every optimizer slot must shard exactly like its parameter — on the
     REAL model tree, whose ``groups`` stack lives at the root (so AdamW's
-    ``m/``/``v/`` prefixes used to shift the path patterns)."""
+    ``m/``/``v/`` prefixes used to shift the path patterns).  Exercised
+    directly on the sharding rules (the retired pytree train state was the
+    original consumer; serving/params paths still use them)."""
     from repro.configs import get_config
-    from repro.launch.steps import abstract_train_state
+    from repro.launch.steps import abstract_params
+    from repro.sharding import param_shardings, slot_shardings
 
     cfg = get_config("qwen2_0_5b").smoke()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     opt = OPTIMIZERS[opt_name]()
-    (params, opt_state, _), (p_sh, o_sh, _) = abstract_train_state(
-        cfg, mesh, opt)
+    params = abstract_params(cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    p_sh = param_shardings(params, mesh)
     if not opt_state.slots:
-        assert not jax.tree.leaves(o_sh.slots)
         return
-    slot_sh = o_sh.slots
+    slot_sh = slot_shardings(params, opt_state.slots, mesh)
     p_struct = jax.tree_util.tree_structure(p_sh)
     if jax.tree_util.tree_structure(slot_sh) == p_struct:
         subtrees = [slot_sh]                      # momentum: params-shaped
@@ -376,7 +392,7 @@ def test_flat_train_step_single_params_allgather():
     n = cfg.n_workers
     dude_cfg = DuDeConfig(n, jnp.float32)
     opt = momentum_sgd(0.05)
-    options = TrainOptions(flat_optimizer=True)
+    options = TrainOptions()
     with mesh:
         engine = make_engine(cfg, mesh, dude_cfg, options)
         st_shapes, st_sh = abstract_train_state(cfg, mesh, opt, dude_cfg,

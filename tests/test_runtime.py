@@ -1,0 +1,397 @@
+"""Async-runtime acceptance tests (docs/async.md).
+
+* Trace-replay determinism: the production AsyncRunner replaying a
+  simulator run's recorded ArrivalTrace reproduces the simulator's
+  parameters BIT-FOR-BIT for dude and all three ASGD routing disciplines —
+  unsharded, and with the engine P-axis sharded on the 8-device mesh
+  (the flat arrival step is elementwise on P, so sharding cannot change a
+  single bit).
+* The simulator replays its own trace bit-for-bit (routing rng parity).
+* Bounded in-flight depth: the event loop never exceeds ``max_in_flight``
+  dispatched-but-unarrived jobs, and still completes the run.
+* Straggler ordering under the exponential process: arrivals are time-
+  ordered and a 100x-slower worker arrives rarely.
+* DeviceQueue double buffering, ArrivalTrace persistence, registry
+  validation, and a Trainer.run_async end-to-end smoke.
+
+Multi-device tests follow the test_flat_state.py pattern: skipped below 8
+devices and re-run by ``test_runtime_sharded_suite_subprocess`` under
+``--xla_force_host_platform_device_count=8``; CI also runs this file
+in-process on the 8-device host mesh.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import NDEV, multidevice, p_mesh
+from repro.core import make_algo, simulate, truncated_normal_speeds
+from repro.core.algos import ASYNC_ALGOS, make_async_algo
+from repro.core.engine import DuDeEngine
+from repro.core.flatten import make_flat_spec
+from repro.optim import sgd
+from repro.runtime import (
+    ArrivalTrace, ExponentialArrivals, FixedArrivals, TraceArrivals,
+    drive_arrivals, make_arrivals,
+)
+from repro.runtime.runner import AsyncRunner, DeviceQueue
+
+N = 5
+LR = 0.05
+SEED = 3
+
+# runner algo name -> simulator algo name (same discipline)
+DISCIPLINES = {
+    "dude": "dude_asgd",
+    "vanilla_asgd": "vanilla_asgd",
+    "uniform_asgd": "uniform_asgd",
+    "shuffled_asgd": "shuffled_asgd",
+}
+
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {"w": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=5), jnp.float32)}
+
+
+_TARGETS = jnp.asarray(np.random.default_rng(42).normal(size=(N, 3, 4)),
+                       jnp.float32)
+
+
+def _sample_fn(i, rng):
+    return {"i": jnp.int32(i),
+            "noise": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)}
+
+
+def _loss(p, batch):
+    t = _TARGETS[batch["i"]] + 0.1 * batch["noise"]
+    return 0.5 * jnp.sum((p["w"] - t) ** 2) + 0.5 * jnp.sum(p["b"] ** 2)
+
+
+def _grad_fn(params, batch, key):
+    loss, g = jax.value_and_grad(_loss)(params, batch)
+    return loss, g
+
+
+def _sim(name, total=40, **kw):
+    speeds = truncated_normal_speeds(N, std=1.0, seed=1)
+    return simulate(make_algo(name, N), speeds, _grad_fn, _sample_fn,
+                    _tree(), lr=LR, total_iters=total, seed=SEED,
+                    record_every=10, **kw)
+
+
+def _runner(algo, process, total=40, mesh=None):
+    tree = _tree()
+    spec = make_flat_spec(tree, mesh_axis_size=NDEV if mesh else 1)
+    eng = DuDeEngine(spec=spec, n_workers=N, interpret=True, mesh=mesh,
+                     axis_name="p" if mesh else None)
+    runner = AsyncRunner(eng, algo, sgd(LR), _grad_fn)
+    state = runner.init_state(tree)
+    out = runner.run(process, total, _sample_fn, state, seed=SEED,
+                     record_every=10)
+    return eng, out
+
+
+# -------------------------------------------------- trace-replay equivalence
+
+
+@pytest.mark.parametrize("algo", list(DISCIPLINES))
+def test_runner_trace_replay_matches_simulator(algo):
+    """THE acceptance criterion: AsyncRunner on a recorded arrival trace
+    reproduces the simulator's parameters bit-for-bit (flat slab math ==
+    pytree math, one shared event loop, one shared jitted grad_fn)."""
+    res = _sim(DISCIPLINES[algo])
+    eng, out = _runner(algo, TraceArrivals(res.trace))
+    back = eng.spec.unravel(out.state.params)
+    for k, leaf in res.params.items():
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(leaf),
+                                      err_msg=f"{algo}/{k}")
+    assert out.tau_max == res.tau_max
+    assert out.n_grads == res.n_grads
+    # instrumentation parity: both record the RAW arriving gradient's norm
+    np.testing.assert_allclose(out.gnorms, res.grad_norms, rtol=1e-6)
+    # and the replay's own trace re-enacts the source schedule
+    np.testing.assert_array_equal(out.trace.worker, res.trace.worker)
+    np.testing.assert_allclose(out.trace.t_arrive, res.trace.t_arrive)
+
+
+@multidevice
+@pytest.mark.parametrize("algo", list(DISCIPLINES))
+def test_runner_trace_replay_matches_simulator_sharded(algo):
+    """Same bit-for-bit equivalence with the engine P-axis sharded over the
+    8-device mesh: per-arrival commit + flat apply are elementwise on P, so
+    the sharded runner cannot differ from the unsharded simulator."""
+    res = _sim(DISCIPLINES[algo])
+    eng, out = _runner(algo, TraceArrivals(res.trace), mesh=p_mesh())
+    back = eng.spec.unravel(out.state.params)
+    for k, leaf in res.params.items():
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(leaf),
+                                      err_msg=f"{algo}/{k}")
+    assert out.tau_max == res.tau_max
+
+
+@pytest.mark.parametrize("algo", ["dude_asgd", "uniform_asgd",
+                                  "shuffled_asgd"])
+def test_simulator_self_replay(algo):
+    """simulate(arrivals=TraceArrivals(own trace)) is bit-identical — the
+    routing rng draws are part of the replayed semantics."""
+    res = _sim(algo)
+    res2 = _sim(algo, arrivals=TraceArrivals(res.trace))
+    for k in res.params:
+        np.testing.assert_array_equal(np.asarray(res.params[k]),
+                                      np.asarray(res2.params[k]))
+    assert res2.tau_max == res.tau_max
+
+
+# ------------------------------------------------------- in-flight bounding
+
+
+def _count_loop(process, total, route=None, rng=None, max_in_flight=None):
+    seen = []
+
+    def on_arrival(view):
+        seen.append(view.worker)
+        return True
+
+    def deliver(w):
+        pass
+
+    stats = drive_arrivals(process, total, on_arrival, deliver, route=route,
+                           rng=rng, max_in_flight=max_in_flight)
+    return seen, stats
+
+
+def test_bounded_in_flight_invariant():
+    """With max_in_flight=k the loop never has more than k jobs computing,
+    still completes the requested iterations, the pending FIFO keeps EVERY
+    worker participating (no starvation at the bound), and the bound is
+    tight (an unbounded run saturates all n workers)."""
+    proc = FixedArrivals(np.linspace(0.5, 2.0, 6))
+    seen, stats = _count_loop(proc, 40, max_in_flight=2)
+    assert stats.max_in_flight <= 2
+    assert stats.iters == 40 and len(seen) == 40
+    assert set(seen) == set(range(6)), "bound must rotate, not starve"
+    proc.reset()
+    _, unbounded = _count_loop(proc, 40)
+    assert unbounded.max_in_flight == 6
+
+
+def test_bounded_in_flight_reduces_staleness_pressure():
+    """The in-flight bound caps CONCURRENT jobs, not per-job tau (a
+    straggler's job still ages while other slots recycle) — but fewer
+    simultaneously stale jobs means the bounded run's tau_max cannot
+    exceed the unbounded run's on the same fleet."""
+    proc = FixedArrivals(np.asarray([1.0, 1.1, 1.3, 1.7, 2.9, 5.0]))
+    _, free = _count_loop(proc, 60)
+    proc.reset()
+    _, tight = _count_loop(proc, 60, max_in_flight=2)
+    assert tight.max_in_flight <= 2 < free.max_in_flight
+    assert tight.tau_max <= free.tau_max
+    # and the non-guarantee is real: one extreme straggler can age
+    # arbitrarily while the fast slot turns over under the bound
+    strag = FixedArrivals(np.asarray([50.0, 1.0]))
+    _, s = _count_loop(strag, 60, max_in_flight=2)
+    assert s.tau_max > 2
+
+
+def test_routed_respects_in_flight_bound():
+    rng = np.random.default_rng(0)
+    proc = ExponentialArrivals(6, mean=1.0, seed=5)
+    seen, stats = _count_loop(proc, 50, route="uniform", rng=rng,
+                              max_in_flight=3)
+    assert stats.max_in_flight <= 3
+    assert stats.iters == 50
+
+
+# ------------------------------------------------- exponential stragglers
+
+
+def test_straggler_ordering_exponential():
+    """A 25x-slower worker under the exponential process: arrivals stay
+    globally time-ordered, the straggler arrives (far) less often, and its
+    jobs overlap many faster arrivals (large observed staleness)."""
+    means = np.asarray([25.0, 1.0, 1.0, 1.0, 1.0])
+    proc = ExponentialArrivals(5, mean=means, seed=7)
+    seen, stats = _count_loop(proc, 400)
+    t = stats.trace.t_arrive
+    assert np.all(np.diff(t) >= 0), "arrivals must be time-ordered"
+    counts = np.bincount(stats.trace.worker, minlength=5)
+    assert counts[0] <= counts[1:].min() / 5, counts
+    assert counts[0] >= 1  # the straggler does eventually arrive
+    # straggler jobs span many server iterations
+    assert stats.tau_max > 20
+
+
+def test_exponential_durations_heavy_tail():
+    proc = ExponentialArrivals(1, mean=1.0, seed=0)
+    d = np.asarray([proc.duration(0) for _ in range(2000)])
+    assert 0.9 < d.mean() < 1.1
+    assert d.max() > 4.0  # the straggler tail exists
+
+
+# ------------------------------------------------------- trace persistence
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    res = _sim("dude_asgd", total=25)
+    p = str(tmp_path / "trace.json")
+    res.trace.save(p)
+    back = ArrivalTrace.load(p)
+    np.testing.assert_array_equal(back.worker, res.trace.worker)
+    np.testing.assert_allclose(back.t_dispatch, res.trace.t_dispatch)
+    np.testing.assert_allclose(back.t_arrive, res.trace.t_arrive)
+    # and the loaded trace drives a bit-identical replay
+    res2 = _sim("dude_asgd", total=25,
+                arrivals=make_arrivals("trace", N, trace=p))
+    for k in res.params:
+        np.testing.assert_array_equal(np.asarray(res.params[k]),
+                                      np.asarray(res2.params[k]))
+
+
+def test_make_arrivals_validation(tmp_path):
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        make_arrivals("poisson", 4)
+    with pytest.raises(ValueError, match="needs a trace path"):
+        make_arrivals("trace", 4)
+    res = _sim("vanilla_asgd", total=10)
+    p = str(tmp_path / "t.json")
+    res.trace.save(p)
+    with pytest.raises(ValueError, match="workers"):
+        make_arrivals("trace", N + 1, trace=p)
+
+
+# --------------------------------------------------------- device queue
+
+
+def test_device_queue_bounds_host_ahead():
+    q = DeviceQueue(depth=2)
+    for i in range(10):
+        q.push(jnp.full((4,), i))
+        assert len(q) <= 2
+    assert q.waits == 8
+    q.flush()
+    assert len(q) == 0
+    with pytest.raises(ValueError):
+        DeviceQueue(depth=0)
+
+
+# ------------------------------------------------------- registry plumbing
+
+
+def test_async_algo_registry_validation():
+    spec = make_flat_spec(_tree())
+    eng = DuDeEngine(spec=spec, n_workers=N, interpret=True)
+    with pytest.raises(ValueError, match="unknown async algo"):
+        make_async_algo("sync_sgd", eng)
+    acc = DuDeEngine(spec=spec, n_workers=N, accumulate=True,
+                     interpret=True)
+    with pytest.raises(ValueError, match="accumulate"):
+        make_async_algo("dude", acc)
+    for name in ASYNC_ALGOS:
+        algo = make_async_algo(name, eng)
+        assert (algo.route is None) == (name in ("dude", "vanilla_asgd"))
+
+
+def test_runner_rejects_mismatched_process():
+    spec = make_flat_spec(_tree())
+    eng = DuDeEngine(spec=spec, n_workers=N, interpret=True)
+    runner = AsyncRunner(eng, "dude", sgd(LR), _grad_fn)
+    state = runner.init_state(_tree())
+    with pytest.raises(ValueError, match="n_workers"):
+        runner.run(FixedArrivals(np.ones(N + 1)), 5, _sample_fn, state)
+
+
+# ------------------------------------------------------ Trainer.run_async
+
+
+def _tiny_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        name="runtime-test-lm", arch_type="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=32,
+        dtype=jnp.float32, remat=False, attn_chunk=16, n_workers=4,
+    )
+
+
+def test_trainer_run_async_smoke():
+    """End-to-end: an arrival-only algo trains through Trainer.run_async
+    (and rejects the round step), advancing the session state/rounds."""
+    from repro.api import ConfigError, Trainer, TrainerConfig
+    cfg = _tiny_cfg()
+    t = Trainer.create(TrainerConfig(arch=cfg, algo="vanilla_asgd",
+                                     lr=0.05, seed=1))
+    with pytest.raises(ConfigError, match="arrival-granularity"):
+        t.step({}, jnp.ones(4, bool), jnp.ones(4, bool))
+    key = jax.random.PRNGKey(0)
+
+    def sample_fn(i, rng):
+        toks = jax.random.randint(jax.random.fold_in(key, i), (1, 16),
+                                  0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    p0 = np.asarray(t.state.params)
+    res = t.run_async("exp", 12, sample_fn, record_every=4)
+    assert t.rounds == 12 == res.stats.iters
+    assert np.all(np.isfinite(res.losses))
+    assert np.any(np.asarray(t.state.params) != p0)
+    assert int(t.state.opt.step) == 12
+    # dude runs BOTH granularities on one session state
+    t2 = Trainer.create(TrainerConfig(arch=cfg, algo="dude", lr=0.05))
+    t2.run_async("fixed", 4, sample_fn)
+    ones = jnp.ones(4, bool)
+    m = t2.step(_round_batch(cfg, key), ones, ones)
+    assert np.isfinite(float(m["loss"]))
+    assert t2.rounds == 5
+
+
+def _round_batch(cfg, key):
+    n = cfg.n_workers
+    toks = jax.random.randint(key, (n, 1, 16), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+def test_trainer_config_async_knobs():
+    from repro.api import ConfigError, TrainerConfig
+    cfg = _tiny_cfg()
+    for name in ASYNC_ALGOS:
+        TrainerConfig(arch=cfg, algo=name)
+    with pytest.raises(ConfigError, match="unknown algo"):
+        TrainerConfig(arch=cfg, algo="poisson_sgd")
+    with pytest.raises(ConfigError, match="max_in_flight"):
+        TrainerConfig(arch=cfg, max_in_flight=0)
+    with pytest.raises(ConfigError, match="arrival_queue_depth"):
+        TrainerConfig(arch=cfg, arrival_queue_depth=0)
+
+
+# ------------------------------------------------------ subprocess driver
+
+
+def test_runtime_sharded_suite_subprocess():
+    """Run the in-process multidevice tests above on 8 host-platform devices
+    (they are skipped in a default single-device session)."""
+    if jax.device_count() >= NDEV:
+        pytest.skip("already multi-device in-process")
+    repo = Path(__file__).resolve().parent.parent
+    env = {
+        **os.environ,
+        "PYTHONPATH": "src",
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                      + f" --xla_force_host_platform_device_count={NDEV}"
+                      ).strip(),
+    }
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(Path(__file__).resolve()),
+         "-k", "sharded and not subprocess"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=repo,
+    )
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
+    assert "skipped" not in r.stdout.splitlines()[-1], r.stdout[-500:]

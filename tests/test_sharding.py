@@ -59,12 +59,13 @@ dude_cfg = DuDeConfig(n, jnp.float32)
 with mesh:
     st_shapes, st_sh = abstract_train_state(cfg, mesh, dude_cfg=dude_cfg)
     engine = make_engine(cfg, mesh, dude_cfg)
-    step = make_train_step(cfg, mesh, dude_cfg=dude_cfg, engine=engine)
-    # real (non-abstract) state, sharded (engine.init() lands P-axis sharded)
-    params = jax.device_put(lm_init(jax.random.PRNGKey(0), cfg), st_sh[0])
     opt = sgd(0.01)
-    opt_state = opt.init(params)
-    dude_state = engine.init()
+    step = make_train_step(cfg, mesh, opt, dude_cfg=dude_cfg, engine=engine)
+    # real (non-abstract) flat state, P-axis sharded by init_flat_train_state
+    from repro.launch.steps import init_flat_train_state
+    state = init_flat_train_state(engine, opt,
+                                  lm_init(jax.random.PRNGKey(0), cfg))
+    assert state.params.sharding == st_sh.params
     key = jax.random.PRNGKey(1)
     S = 64
     batch = {
@@ -73,13 +74,10 @@ with mesh:
     }
     ones = jnp.ones(n, bool)
     jitted = jax.jit(step)
-    out = None
     for _ in range(3):
-        params, opt_state, dude_state, metrics = jitted(
-            params, opt_state, dude_state, batch, ones, ones)
+        state, metrics = jitted(state, batch, ones, ones)
     loss = float(metrics["loss"])
     finite = bool(jnp.isfinite(loss))
-    # compare against single-logical-device run? just report
     print(json.dumps({"loss": loss, "finite": finite,
                       "ndev": jax.device_count()}))
 """

@@ -83,14 +83,14 @@ def test_spmd_train_loop_loss_decreases():
         num_kv_heads=2, d_ff=128, vocab_size=64, dtype=jnp.float32,
         remat=False, attn_chunk=16, n_workers=4,
     )
+    from repro.launch.steps import init_flat_train_state
     n = cfg.n_workers
     key = jax.random.PRNGKey(0)
     params = lm_init(key, cfg)
     opt = sgd(0.05)
-    opt_state = opt.init(params)
     dude_cfg = DuDeConfig(n, jnp.float32)
     engine = make_engine(cfg, None, dude_cfg)
-    dude_state = engine.init()
+    state = init_flat_train_state(engine, opt, params)
     step = jax.jit(make_train_step(cfg, None, opt, dude_cfg, engine=engine))
 
     speeds = truncated_normal_speeds(n, std=1.0, seed=2)
@@ -106,8 +106,8 @@ def test_spmd_train_loop_loss_decreases():
 
     losses = []
     for r in range(sch.rounds):
-        params, opt_state, dude_state, metrics = step(
-            params, opt_state, dude_state, batch_for_round(r),
+        state, metrics = step(
+            state, batch_for_round(r),
             jnp.asarray(sch.start[r]), jnp.asarray(sch.commit[r]),
         )
         losses.append(float(metrics["loss"]))
