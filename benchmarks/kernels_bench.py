@@ -34,10 +34,21 @@ throughput over the masked baseline's.  A full-loop row measures the
 ``AsyncRunner`` end to end (host event loop + DeviceQueue included) on a
 toy gradient.
 
-``--json-out`` (default ``benchmarks/BENCH_5.json``) writes every row as
+The unravel sweep (TP-native param feed, docs/engine.md) compares the two
+``params_layout`` paths on a real architecture's param shardings over a
+(data, model) host mesh: ``replicated`` all-gathers the flat ``[P]`` master
+vector onto every device before slicing leaves out, ``tp`` runs the
+ppermute ring exchange that feeds each leaf straight from the P-shards.
+Rows report measured call time plus the plan's analytic per-device peak
+live bytes, ring/gather bytes moved, and the max per-leaf gather bound;
+``derived`` for the tp rows is the footprint ratio (replicated full-vector
+bytes / tp peak bytes).  Correctness pulse: max error vs. the eager
+(placement-free) oracle — 0.0 = bit-for-bit.
+
+``--json-out`` (default ``benchmarks/BENCH_6.json``) writes every row as
 machine-readable JSON — backend x (n, P) x sharded/unsharded, the
-round+apply grid, the session-dispatch rows, and the arrival-throughput
-rows — so the perf trajectory is tracked across PRs.
+round+apply grid, the session-dispatch rows, the arrival-throughput rows,
+and the unravel rows — so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -383,6 +394,111 @@ def arrival_throughput_rows(points=((8, 1 << 14), (64, 1 << 16)),
     return rows
 
 
+def unravel_sweep(arch: str = "qwen2_0_5b", shape=(2, 4),
+                  n_workers: int | None = None) -> list[dict]:
+    """Replicated vs TP-native param exchange on a (data, model) host mesh.
+
+    Both directions are swept — ``unravel`` ([P] shards -> TP-layout leaves,
+    the forward feed) and ``ravel_stacked`` (TP-layout grad leaves ->
+    [n, P] slab shards, the reverse path) — on the real ``param_shardings``
+    of ``arch``'s smoke config, so the per-leaf exchange plan exercises
+    genuine Megatron-TP layouts (embedding, fused-QKV-like kernels, norms).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.configs import get_config
+    from repro.models import lm_init
+    from repro.sharding import (
+        flat_slab_shardings, flat_vec_sharding, param_shardings,
+    )
+
+    d, m = shape
+    if jax.device_count() < d * m:
+        print(f"# unravel sweep skipped: needs {d * m} devices")
+        return []
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[: d * m]).reshape(d, m), ("data", "model"))
+    axes = ("data", "model")
+    cfg = get_config(arch).smoke()
+    n = n_workers or cfg.n_workers
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    spec = make_flat_spec(params, mesh_axis_size=d * m)
+    p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
+    plan = spec.tp_plan(mesh, p_sh, axes=axes)
+
+    flat = jax.device_put(spec.ravel(params),
+                          flat_vec_sharding(spec, mesh, axes))
+    repl_sh = NamedSharding(mesh, PartitionSpec())
+    unravel_repl = jax.jit(lambda f: spec.unravel(
+        jax.lax.with_sharding_constraint(f, repl_sh)))
+    unravel_tp = jax.jit(lambda f: spec.unravel_sharded(f, mesh, plan=plan))
+
+    oracle = jax.tree.leaves(unravel_repl(flat))
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+              for a, b in zip(jax.tree.leaves(unravel_tp(flat)), oracle))
+
+    k = plan.k
+    repl_gather = plan.full_vector_bytes * (k - 1) // k  # all-gather payload
+    footprint = {  # per-device peak live bytes for the params feed
+        "replicated": plan.full_vector_bytes,
+        "tp": plan.peak_bytes,
+    }
+    moved = {"replicated": repl_gather, "tp": plan.ring_bytes}
+    rows = []
+    for layout, fn in (("replicated", unravel_repl), ("tp", unravel_tp)):
+        t = _time(lambda f: jax.tree.leaves(fn(f))[0], flat)
+        rows.append({
+            "name": f"exchange/unravel/{layout}/{arch}_{d}x{m}",
+            "layout": layout, "P": spec.padded_size, "devices": d * m,
+            "us_per_call": 1e6 * t,
+            "derived": plan.full_vector_bytes / footprint[layout],
+            "extra": {
+                "peak_live_bytes_per_device": footprint[layout],
+                "exchange_bytes_per_device": moved[layout],
+                "max_leaf_gather_bytes": plan.max_leaf_segment_bytes(),
+                "err_vs_replicated": 0.0 if layout == "replicated" else err,
+            },
+        })
+
+    # reverse path: TP-layout stacked grads -> [n, P] slab shards.  Each
+    # layout is fed ITS OWN natural input placement (the replicated path's
+    # grads come out of a replicated-params forward; the tp path's out of a
+    # TP forward), and both are checked against the placement-free eager
+    # oracle — letting GSPMD auto-partition the ravel from TP-placed leaves
+    # is not only O(nP) per device, it MISCOMPILES on this jax version
+    # (reshape+concat over mixed 2-D-sharded operands returns permuted
+    # rows; the explicit shard_map ring sidesteps the partitioner).
+    stree = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(n)]), params)
+    want = spec.ravel_stacked(stree)  # eager oracle, placement-free
+    g_sh = spec.treedef.unflatten(
+        [NamedSharding(mesh, PartitionSpec(None, *lf.entries))
+         for lf in plan.leaves])
+    stree_tp = jax.device_put(stree, g_sh)
+    stree_repl = jax.device_put(stree, NamedSharding(mesh, PartitionSpec()))
+    slab_sh = flat_slab_shardings(
+        jax.ShapeDtypeStruct((n, spec.padded_size), jnp.float32),
+        spec, mesh, axes)
+    ravel_repl = jax.jit(lambda t: jax.lax.with_sharding_constraint(
+        spec.ravel_stacked(t), slab_sh))
+    ravel_tp = jax.jit(lambda t: spec.ravel_stacked_sharded(
+        t, mesh, plan=plan))
+    for layout, fn, inp in (("replicated", ravel_repl, stree_repl),
+                            ("tp", ravel_tp, stree_tp)):
+        rerr = float(jnp.max(jnp.abs(fn(inp) - want)))
+        t = _time(fn, inp)
+        full = n * plan.full_vector_bytes
+        peak = full if layout == "replicated" else n * plan.peak_bytes
+        rows.append({
+            "name": f"exchange/ravel_stacked/{layout}/{arch}_{d}x{m}",
+            "layout": layout, "P": spec.padded_size, "n": n,
+            "devices": d * m, "us_per_call": 1e6 * t,
+            "derived": full / peak,
+            "extra": {"err_vs_oracle": rerr},
+        })
+    return rows
+
+
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
@@ -392,8 +508,9 @@ def run(backend: str = "all") -> list[dict]:
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
+        rows += unravel_sweep()
     else:
-        print("# sharded engine sweep skipped: 1 device "
+        print("# sharded engine + unravel sweeps skipped: 1 device "
               "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     key = jax.random.PRNGKey(0)
 
@@ -463,7 +580,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_5.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_6.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -476,7 +593,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 5,
+                "pr": 6,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

@@ -103,6 +103,11 @@ class TrainerConfig:
     grad_dtype: Any = None              # ravel the stacked grads in this dtype
     constrain_grads: bool = False       # explicit reduce-scatter into P-shards
     shard_engine: bool = True           # mesh-native engine (P-axis shard_map)
+    params_layout: str = "replicated"   # forward param feed: "replicated"
+                                        # (one [P] all-gather per step) or
+                                        # "tp" (TP-native exchange from the
+                                        # P-shards; no full [P] anywhere —
+                                        # needs mesh + shard_engine)
     buffer_dtype: Any = None            # engine slabs; None = arch default
                                         # (f32 under smoke)
     fedbuff_buffer_size: int = 4        # fedbuff only: gradients per flush
@@ -148,6 +153,22 @@ class TrainerConfig:
         if self.arrival_queue_depth < 1:
             raise ConfigError(
                 f"arrival_queue_depth={self.arrival_queue_depth} < 1")
+        from ..launch.steps import PARAMS_LAYOUTS
+        if self.params_layout not in PARAMS_LAYOUTS:
+            raise ConfigError(
+                f"unknown params_layout {self.params_layout!r}; "
+                f"options: {PARAMS_LAYOUTS}")
+        if self.params_layout == "tp":
+            if self.mesh is None:
+                raise ConfigError(
+                    "params_layout='tp' needs a mesh (the TP-native "
+                    "exchange redistributes across the P-axis device "
+                    "group); use 'replicated' for meshless runs")
+            if not self.shard_engine:
+                raise ConfigError(
+                    "params_layout='tp' needs shard_engine=True — without "
+                    "the mesh-native engine the flat state has no P-shards "
+                    "to exchange from")
         _check_arch(self.arch)
 
     # ------------------------------------------------------- resolution
@@ -177,6 +198,7 @@ class TrainerConfig:
             constrain_grads=self.constrain_grads,
             backend=self.server_backend,
             shard_engine=self.shard_engine,
+            params_layout=self.params_layout,
         )
 
     def make_optimizer(self) -> Optimizer:

@@ -23,6 +23,12 @@ the spec segment table, and ``Trainer.restore(ckpt_dir, config)`` reads
 EITHER a flat or a legacy pytree directory (``checkpoint_format`` decides),
 so old checkpoints keep loading through the one entry point.
 
+``TrainerConfig.params_layout`` picks how the step feeds the forward:
+``"replicated"`` re-materializes the full ``[P]`` master vector each step
+(the correctness oracle), ``"tp"`` routes the P-shards straight into the
+params' Megatron-TP layout through the ``FlatSpec`` exchange ring, so no
+device ever holds the whole vector (docs/engine.md, "TP-native unravel").
+
 For lowering-only work (dry-run, HLO analysis) ``Trainer.abstract(config)``
 builds the same session without materializing any state;
 ``trainer.input_specs(shape_name)`` returns the (shapes, shardings) of the

@@ -225,6 +225,16 @@ class DuDeEngine:
         from ..sharding.specs import engine_state_shardings
         return engine_state_shardings(self.spec, self.mesh, self.paxes)
 
+    def tp_plan(self, param_sh: Pytree):
+        """The TP-native exchange plan between this engine's P-shards and
+        the given Megatron-TP param shardings (``flat_to_tp_plan`` on the
+        engine's mesh and P-axis group; cached).  Feed it to
+        ``spec.unravel_sharded`` / ``spec.ravel_stacked_sharded`` so the
+        train step never materializes the full ``[P]`` vector."""
+        if self.mesh is None:
+            raise ValueError("engine has no mesh")
+        return self.spec.tp_plan(self.mesh, param_sh, axes=self.paxes)
+
     def _pspecs(self):
         """(vec, row, repl, state) PartitionSpecs for shard_map plumbing."""
         vec = PartitionSpec(self.paxes)

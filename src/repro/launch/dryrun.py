@@ -25,7 +25,7 @@ from repro.api import (  # noqa: E402
 from repro.configs import ARCH_IDS, get_config           # noqa: E402
 from repro.launch.costs import model_flops_6nd, param_counts, roofline  # noqa: E402
 from repro.launch.hlo_analysis import (  # noqa: E402
-    analyze_collectives, cost_analysis_dict, memory_stats,
+    analyze_collectives, cost_analysis_dict, full_p_tensors, memory_stats,
 )
 from repro.launch.mesh import HW, make_production_mesh, mesh_num_devices  # noqa: E402
 from repro.launch.steps import (                          # noqa: E402
@@ -34,22 +34,37 @@ from repro.launch.steps import (                          # noqa: E402
 )
 
 
+def _host_mesh(spec: str):
+    """``"DxM"`` -> a (data, model) mesh over the FIRST D*M host devices —
+    the CI-scale twin of the production mesh (the 512-device override is
+    already in force, so any small shape fits)."""
+    import numpy as np
+    d, m = (int(x) for x in spec.split("x"))
+    devs = np.asarray(jax.devices()[: d * m]).reshape(d, m)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool, *,
-            parse_hlo: bool = True, optimized: bool = False) -> dict:
+            parse_hlo: bool = True, optimized: bool = False,
+            params_layout: str = "replicated",
+            host_mesh: str | None = None) -> dict:
     cfg = get_config(arch)
     ok, why = shape_supported(cfg, shape_name)
     rec: dict = {
         "arch": cfg.name, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": host_mesh or ("2x16x16" if multi_pod else "16x16"),
         "params": param_counts(cfg),
+        "params_layout": params_layout,
     }
     if not ok:
         rec.update({"status": "skipped", "reason": why})
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (_host_mesh(host_mesh) if host_mesh
+            else make_production_mesh(multi_pod=multi_pod))
     chips = mesh_num_devices(mesh)
     kind = INPUT_SHAPES[shape_name]["kind"]
+    engine_P = None
     t0 = time.time()
     try:
         with mesh:
@@ -60,7 +75,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
                     arch=cfg, mesh=mesh,
                     grad_dtype=jnp.bfloat16 if optimized else None,
                     constrain_grads=optimized,
+                    params_layout=params_layout,
                 ))
+                engine_P = session.engine.P
                 lowered = session.lower(shape_name)
             else:  # prefill / decode
                 spec = INPUT_SHAPES[shape_name]
@@ -95,6 +112,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
             hlo = compiled.as_text()
             rec["hlo_chars"] = len(hlo)
             coll = analyze_collectives(hlo)
+            if params_layout == "tp" and engine_P is not None:
+                # the TP-native contract: no op may materialize a
+                # replicated [P]-sized buffer on any device
+                bad = full_p_tensors(hlo, engine_P)
+                rec["full_p_tensors"] = bad
+                if bad:
+                    rec["status"] = "FAILED"
+                    rec["error"] = (
+                        f"params_layout='tp' lowered {len(bad)} tensor "
+                        f"shape(s) >= P={engine_P} elements: {bad[:5]}")
             del hlo
         else:
             coll = {"total_bytes": 0.0, "per_op": {}, "counts": {}}
@@ -129,25 +156,42 @@ def main():
     ap.add_argument("--optimized", action="store_true",
                     help="beyond-paper train options (bf16 grads, "
                          "reduce-scatter constraint) — §Perf variants")
+    ap.add_argument("--params-layout", default="replicated",
+                    choices=["replicated", "tp"],
+                    help="'tp' feeds the forward from the P-shards via the "
+                         "TP-native exchange and FAILS the run if the "
+                         "lowered HLO contains any full-[P] tensor")
+    ap.add_argument("--host-mesh", default=None, metavar="DxM",
+                    help="lower on a small (data, model) host mesh (e.g. "
+                         "2x4) instead of the production mesh — the CI "
+                         "large-config smoke")
     args = ap.parse_args()
 
     archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
     shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.host_mesh:
+        meshes = [False]  # the host mesh replaces the production meshes
 
     os.makedirs(args.out, exist_ok=True)
     n_fail = 0
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                mesh_tag = (f"host{args.host_mesh}" if args.host_mesh
+                            else ("multi" if mp else "single"))
+                tag = f"{arch}_{shape}_{mesh_tag}"
+                if args.params_layout != "replicated":
+                    tag += f"_{args.params_layout}"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path) and not args.force:
                     print(f"[skip existing] {tag}")
                     continue
                 print(f"[dryrun] {tag} ...", flush=True)
                 rec = run_one(arch, shape, mp, parse_hlo=not args.no_hlo,
-                              optimized=args.optimized)
+                              optimized=args.optimized,
+                              params_layout=args.params_layout,
+                              host_mesh=args.host_mesh)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -163,6 +163,29 @@ def analyze_collectives(hlo: str, default_trip: int = 1) -> dict:
     }
 
 
+def full_p_tensors(hlo: str, p: int, exclude_dims: tuple = ()) -> list:
+    """Shape literals in ``hlo`` with at least ``p`` elements — the
+    replicated full-``[P]`` buffers the TP-native unravel must NOT produce.
+
+    Post-SPMD-partitioning per-device HLO only shows per-device shapes, so
+    any tensor of >= ``p`` elements means some op materialized the whole
+    flat vector (or an equally large intermediate) on one device.  Returns
+    the offending shape strings (deduplicated, sorted).  ``exclude_dims``
+    skips shapes whose leading dim matches (e.g. a [n, B, S, V] logits
+    buffer that legitimately exceeds P at tiny smoke scale)."""
+    bad = set()
+    for dt, dims in _SHAPE_RE.findall(hlo):
+        if dt not in _DTYPE_BYTES or _DTYPE_BYTES[dt] == 0:
+            continue
+        sizes = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in sizes:
+            n *= d
+        if n >= p and not (sizes and sizes[0] in exclude_dims):
+            bad.add(f"{dt}[{dims}]")
+    return sorted(bad)
+
+
 def cost_analysis_dict(compiled) -> dict:
     """``compiled.cost_analysis()`` normalized to one flat dict (newer jax
     returns a list with one dict per device)."""

@@ -21,7 +21,12 @@ table.  The stacked gradients are raveled to the same ``[n, P]`` layout
 right after the vmapped backward; with ``constrain_grads`` the ravel
 happens INSIDE a ``with_sharding_constraint`` pinned to the slab sharding,
 so GSPMD emits a reduce-scatter straight into the shard each device owns
-instead of all-reduce + local slice.  The legacy pytree-tuple signature and
+instead of all-reduce + local slice.  With ``params_layout="tp"`` the
+params never leave their P-shards at all: the forward is fed through the
+TP-native exchange (``FlatSpec.unravel_sharded``) and the gradients come
+back through its reverse (``ravel_stacked_sharded``) — no device ever
+holds the full ``[P]`` vector or a replicated ``[n, P]`` slab (docs/
+engine.md, "TP-native unravel").  The legacy pytree-tuple signature and
 the ``flat_optimizer=`` keyword shim are RETIRED: the flat step is the only
 step (held tuple states convert once via ``flat_state_from_legacy``; see
 the migration table in docs/api.md).  The per-arrival async path lives in
@@ -32,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -80,6 +86,9 @@ def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
 
 # ------------------------------------------------------------- step builders
 
+PARAMS_LAYOUTS = ("replicated", "tp")
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainOptions:
     """Beyond-paper §Perf knobs (defaults == paper-faithful baseline)."""
@@ -97,6 +106,20 @@ class TrainOptions:
                                    # mesh and run the round under shard_map
                                    # (mesh-native engine); False keeps the
                                    # engine layout up to GSPMD
+    params_layout: str = "replicated"  # how the forward gets its params:
+                                   # "replicated" — one [P] all-gather per
+                                   # step, then local slices (correctness
+                                   # oracle; O(P) HBM per device);
+                                   # "tp" — TP-native exchange straight
+                                   # from the P-shards into the Megatron-TP
+                                   # leaf layout, no full [P] anywhere
+                                   # (needs a mesh-native engine)
+
+    def __post_init__(self):
+        if self.params_layout not in PARAMS_LAYOUTS:
+            raise ValueError(
+                f"unknown params_layout {self.params_layout!r}; "
+                f"options: {PARAMS_LAYOUTS}")
 
 
 def make_engine(cfg: ModelConfig, mesh=None,
@@ -153,10 +176,18 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
     shard = make_shard_hook(mesh)
 
     gdt = options.grad_dtype or jnp.float32
+    tp_plan = None      # TP-native exchange plan (params_layout="tp")
+    if options.params_layout == "tp":
+        if mesh is None or engine.mesh is None:
+            raise ValueError(
+                "params_layout='tp' needs a mesh-native engine (pass a mesh "
+                "and keep shard_engine=True); the replicated layout is the "
+                "meshless fallback")
+        tp_plan = engine.tp_plan(param_shardings(abstract_params(cfg), mesh))
     flat_sh = None      # [n, P] slab sharding for the raveled grads
     leaf_sh = None      # legacy per-leaf constraint (unsharded engine)
     rs_fn = None        # explicit reduce-scatter into the owned P-shard
-    if options.constrain_grads and mesh is not None:
+    if options.constrain_grads and mesh is not None and tp_plan is None:
         if engine.mesh is not None:
             flat_sh = engine.shardings().g_workers
             if "data" in engine.paxes and mesh.shape["data"] > 1:
@@ -185,6 +216,8 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
         """
         split = (D > 1 and all(x.ndim >= 2 and x.shape[1] % D == 0
                                for x in jax.tree.leaves(batch)))
+        if D > 1 and not split:
+            _warn_unsplittable(batch, D)
         vbatch = batch
         if split:
             vbatch = jax.tree.map(
@@ -194,6 +227,14 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                 ).reshape((D * x.shape[0], x.shape[1] // D) + x.shape[2:]),
                 batch)
         grads, losses = jax.vmap(per_worker_grad, in_axes=(None, 0))(params, vbatch)
+        if tp_plan is not None:
+            # reverse TP-native exchange: TP-layout gradient leaves ->
+            # [n, P] slab shards, no replicated [n, P] intermediate (the
+            # data-axis reduction lands on the TP blocks at the shard_map
+            # boundary, bounded by each leaf's segment)
+            fresh = engine.spec.ravel_stacked_sharded(
+                grads, mesh, dtype=gdt, plan=tp_plan)
+            return fresh, losses
         if leaf_sh is not None:
             grads = jax.tree.map(jax.lax.with_sharding_constraint, grads, leaf_sh)
         # ravel INSIDE the constraint: the stacked backward output lands
@@ -216,17 +257,25 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
 
     def flat_train_step(state: FlatTrainState, batch,
                         start_mask, commit_mask):
-        pf = state.params
-        if repl_sh is not None:
-            # THE one all-gather per step: materialize the full [P]
-            # vector once; every leaf slice below is then local, and the
-            # forward consumes the leaves without further param
-            # collectives (re-sharding them per-leaf here would turn
-            # into FSDP-style per-layer re-gathers).
-            pf = jax.lax.with_sharding_constraint(pf, repl_sh)
-        # slice+reshape+cast to the per-leaf target dtypes recorded in
-        # the FlatSpec (f32 masters feed a bf16 forward at large scale)
-        params = engine.spec.unravel(pf)
+        if tp_plan is not None:
+            # TP-native path: each leaf's flat range is copied straight
+            # out of the P-shards into its Megatron-TP layout via the
+            # plan's ppermute ring — no device ever holds the full [P]
+            # vector; the forward consumes the TP blocks in place.
+            params = engine.spec.unravel_sharded(
+                state.params, mesh, plan=tp_plan)
+        else:
+            pf = state.params
+            if repl_sh is not None:
+                # THE one all-gather per step: materialize the full [P]
+                # vector once; every leaf slice below is then local, and
+                # the forward consumes the leaves without further param
+                # collectives (re-sharding them per-leaf here would turn
+                # into FSDP-style per-layer re-gathers).
+                pf = jax.lax.with_sharding_constraint(pf, repl_sh)
+            # slice+reshape+cast to the per-leaf target dtypes recorded in
+            # the FlatSpec (f32 masters feed a bf16 forward at large scale)
+            params = engine.spec.unravel(pf)
         fresh, losses = fresh_grads(params, batch)
         if algo.fused_apply:
             srv_state, _, pf_new, opt_new = engine.round_apply(
@@ -288,6 +337,28 @@ def _slots_to_flat(spec, opt_name: str, slots: Pytree) -> Pytree:
         return {"m": spec.ravel(slots["m"], jnp.float32),
                 "v": spec.ravel(slots["v"], jnp.float32)}
     raise ValueError(f"optimizer {opt_name!r} has no flat slot layout")
+
+
+_WARNED_UNSPLITTABLE: set = set()
+
+
+def _warn_unsplittable(batch, D: int) -> None:
+    """One-time warning when ``constrain_grads`` configured an explicit
+    reduce-scatter but the batch cannot be split by the data-axis size: the
+    step silently falls back to the all-reduce + slice lowering, and users
+    tuning collective traffic should know which leaf blocked the split."""
+    bad = tuple(tuple(jnp.shape(x)) for x in jax.tree.leaves(batch)
+                if not (jnp.ndim(x) >= 2 and jnp.shape(x)[1] % D == 0))
+    key = (bad, D)
+    if key in _WARNED_UNSPLITTABLE:
+        return
+    _WARNED_UNSPLITTABLE.add(key)
+    warnings.warn(
+        f"constrain_grads: batch leaf shape(s) {list(bad)} have a per-worker "
+        f"batch dim not divisible by the data-axis size {D}; the explicit "
+        "gradient reduce-scatter is skipped this step shape (falling back "
+        "to GSPMD's all-reduce + slice lowering)",
+        RuntimeWarning, stacklevel=3)
 
 
 def _grad_reduce_scatter(mesh, paxes: tuple) -> Callable:

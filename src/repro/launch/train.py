@@ -79,6 +79,12 @@ def main():
                          "(pallas = fused kernel; interpret mode on CPU)")
     ap.add_argument("--mesh", default="none",
                     help='"DxM" (data x model) host mesh, or "none"')
+    ap.add_argument("--params-layout", default="replicated",
+                    choices=["replicated", "tp"],
+                    help="forward param feed: 'replicated' = one [P] "
+                         "all-gather per step; 'tp' = TP-native exchange "
+                         "from the P-shards (no full [P] on any device; "
+                         "needs --mesh)")
     ap.add_argument("--fedbuff-buffer-size", type=int, default=4)
     # ------------------------------------------------- async runtime flags
     ap.add_argument("--async", dest="async_mode", action="store_true",
@@ -118,6 +124,7 @@ def main():
             optimizer=args.opt, lr=args.lr,
             server_backend=args.server_backend,
             mesh=parse_mesh(args.mesh),
+            params_layout=args.params_layout,
             fedbuff_buffer_size=args.fedbuff_buffer_size,
             max_in_flight=args.max_in_flight,
             seed=args.seed,

@@ -1,10 +1,13 @@
 from .specs import (
+    FlatTpPlan,
+    LeafExchange,
     batch_sharding,
     cache_shardings,
     dp_axes,
     dude_state_shardings,
     engine_state_shardings,
     flat_slab_shardings,
+    flat_to_tp_plan,
     flat_train_state_shardings,
     flat_vec_sharding,
     make_shard_hook,
@@ -18,6 +21,7 @@ __all__ = [
     "dude_state_shardings", "engine_state_shardings",
     "flat_slab_shardings", "flat_train_state_shardings",
     "flat_vec_sharding",
+    "FlatTpPlan", "LeafExchange", "flat_to_tp_plan",
     "batch_sharding", "cache_shardings",
     "make_shard_hook", "dp_axes",
 ]

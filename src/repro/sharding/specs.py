@@ -17,10 +17,12 @@ that does not divide (replication is always correct, just more memory).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.engine import EngineState
@@ -283,6 +285,240 @@ def flat_train_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
                          slots=jax.tree.map(lambda _: vec, slots)),
         engine=srv_sh,
     )
+
+
+# ------------------------------------------------- TP-native unravel plan
+
+@dataclasses.dataclass(frozen=True)
+class LeafExchange:
+    """Static exchange recipe for ONE leaf of a TP-native unravel.
+
+    ``entries`` is the leaf's resolved Megatron-TP PartitionSpec, one entry
+    per dim: ``None`` (replicated dim) or a tuple of mesh axis names.
+    ``block_shape`` is the per-device TP block (``shape[d] / prod(entries[d])``
+    per dim) and ``strides`` the row-major element strides of the FULL leaf —
+    together they place every block element at its global flat offset.
+    ``segments`` is the per-(shard, leaf) table from ``FlatSpec
+    .shard_segments``: which P-shards hold a piece of this leaf, in
+    leaf-local coordinates — the bound on what any exchange for this leaf
+    may touch."""
+
+    index: int
+    offset: int
+    size: int
+    shape: tuple
+    dtype: Any
+    entries: tuple        # per-dim: None | tuple of mesh axis names
+    block_shape: tuple
+    strides: tuple
+    segments: tuple       # ((shard, leaf_lo, leaf_hi), ...)
+
+    @property
+    def block_size(self) -> int:
+        return int(np.prod(self.block_shape, dtype=np.int64))
+
+    @property
+    def tp_axes(self) -> tuple:
+        """Mesh axes this leaf's layout actually uses (replicated over the
+        rest of the P-axis group)."""
+        out = []
+        for e in self.entries:
+            if e is not None:
+                out.extend(e)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTpPlan:
+    """Static per-(shard, leaf) exchange plan: flat P-shards <-> TP blocks.
+
+    Consumed by ``FlatSpec.unravel_sharded`` / ``ravel_stacked_sharded``
+    (core/flatten.py): the flat vector stays split into its ``k`` contiguous
+    segment-range windows of ``window`` elements, one per device of the
+    P-axis group ``axes``; the windows circulate around a ppermute ring and
+    each device copies exactly its TP-block elements out of (into) each
+    passing window.  No collective ever carries more than one ``[window]``
+    buffer, and no device materializes the full ``[P]`` vector or a full
+    leaf.  Built by ``flat_to_tp_plan`` and cached per (spec, mesh, axes,
+    leaf specs)."""
+
+    axes: tuple           # P-axis mesh axes, shard-linear (major -> minor)
+    mesh_shape: tuple     # sizes of those axes
+    k: int                # number of P-shards == ring length
+    window: int           # elements per P-shard (spec.padded_size / k)
+    leaves: tuple         # LeafExchange per spec leaf
+    needs_i64: bool       # flat offsets exceed int32 (>2 GiB of elements);
+                          # informational — the rings address windows in two
+                          # int32 digits (pos>>7, pos&127) at every scale, so
+                          # no int64 ever enters the traced index math
+
+    # ------------------------------------------------ analytics (for the
+    # ------------------------------------------------ bench and the docs)
+
+    @property
+    def full_vector_bytes(self) -> int:
+        """Per-device bytes of the replicated-path [P] f32 materialization."""
+        return 4 * self.window * self.k
+
+    @property
+    def window_bytes(self) -> int:
+        return 4 * self.window
+
+    @property
+    def block_bytes(self) -> int:
+        """Per-device bytes of all TP blocks in f32 staging."""
+        return sum(4 * lf.block_size for lf in self.leaves)
+
+    @property
+    def index_bytes(self) -> int:
+        """Per-device bytes of the gather-position digit vectors (hi + lo,
+        both int32, at every scale)."""
+        return sum(8 * lf.block_size for lf in self.leaves)
+
+    @property
+    def peak_bytes(self) -> int:
+        """Per-device peak live bytes of a TP-native unravel: own window +
+        one circulating window + every TP block (f32) + position vectors.
+        The replicated path peaks at ``full_vector_bytes`` instead."""
+        return 2 * self.window_bytes + self.block_bytes + self.index_bytes
+
+    @property
+    def ring_bytes(self) -> int:
+        """Per-device bytes moved by the ring (k-1 window hops)."""
+        return (self.k - 1) * self.window_bytes
+
+    def max_leaf_segment_bytes(self) -> int:
+        """f32 bytes of the largest per-(shard, leaf) segment — the bound on
+        any single leaf's per-window gather."""
+        best = 0
+        for lf in self.leaves:
+            for _, a, b in lf.segments:
+                best = max(best, 4 * (b - a))
+        return best
+
+
+_TP_PLAN_CACHE: dict = {}
+
+
+def _leaf_pspec_entries(sh, rank: int) -> tuple:
+    """NamedSharding | PartitionSpec -> per-dim entries, padded to rank."""
+    ps = sh.spec if isinstance(sh, NamedSharding) else sh
+    entries = list(tuple(ps)) + [None] * (rank - len(tuple(ps)))
+    out = []
+    for e in entries[:rank]:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append((e,))
+        else:
+            out.append(tuple(e))
+    return tuple(out)
+
+
+def flat_to_tp_plan(spec: FlatSpec, mesh: Mesh, param_sh: Pytree,
+                    axes: Any = None) -> FlatTpPlan:
+    """The TP-native unravel rule: a static exchange plan mapping the flat
+    vector's segment-range P-shards to the params' Megatron-TP layout.
+
+    ``param_sh`` is the ``param_shardings`` pytree (NamedShardings or raw
+    PartitionSpecs) for the SAME tree layout as ``spec``; ``axes`` the mesh
+    axes carrying the P shard (None = all mesh axes, 'data' leading, i.e.
+    the engine's ``paxes`` convention).  Every leaf spec must (a) only use
+    axes from the P-axis group — the exchange redistributes within that
+    group — and (b) divide its dims; a non-dividing axis drops to
+    replication (the module-wide ``_fit`` convention).
+
+    The plan is static: per leaf it records the TP block shape, the full
+    leaf's element strides, and the per-(shard, leaf) segment table from
+    ``FlatSpec.shard_segments`` — everything ``unravel_sharded`` needs to
+    copy block elements straight out of the circulating windows.  Cached on
+    (spec, mesh, axes, leaf specs)."""
+    if axes is None:
+        axes = tuple(sorted(mesh.axis_names, key=lambda a: (a != "data",)))
+    elif isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(axes)
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(f"axis {a!r} not in mesh {tuple(mesh.axis_names)}")
+    k = _axsize(mesh, axes)
+    if k < 1 or spec.padded_size % k != 0:
+        raise ValueError(
+            f"P={spec.padded_size} not divisible into {k} shards over "
+            f"axes {axes}; build the spec with mesh_axis_size={k}")
+
+    sh_leaves = spec.treedef.flatten_up_to(param_sh)
+    if len(sh_leaves) != len(spec.shapes):
+        raise ValueError(
+            f"param_sh has {len(sh_leaves)} leaves, spec has "
+            f"{len(spec.shapes)}")
+    entries_key = tuple(_leaf_pspec_entries(sh, len(shp))
+                        for sh, shp in zip(sh_leaves, spec.shapes))
+    key = (spec, mesh, axes, entries_key)
+    plan = _TP_PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+
+    window = spec.padded_size // k
+    # per-leaf segment tables: invert the per-shard tables (uses the
+    # memoized FlatSpec.shard_segments when the shard counts agree)
+    per_leaf_segs: dict = {i: [] for i in range(len(spec.shapes))}
+    if k == spec.mesh_axis_size:
+        for s in range(k):
+            for i, a, b in spec.shard_segments(s):
+                per_leaf_segs[i].append((s, a, b))
+    else:
+        for s in range(k):
+            lo, hi = s * window, (s + 1) * window
+            for i, (off, sz) in enumerate(zip(spec.offsets, spec.sizes)):
+                a, b = max(lo, off), min(hi, off + sz)
+                if a < b:
+                    per_leaf_segs[i].append((s, a - off, b - off))
+
+    leaves = []
+    for i, (shp, ents) in enumerate(zip(spec.shapes, entries_key)):
+        fitted = []
+        bshp = []
+        for d, e in zip(shp, ents):
+            if e is not None:
+                bad = [a for a in e if a not in axes]
+                if bad:
+                    raise ValueError(
+                        f"leaf {i} spec uses axes {bad} outside the P-axis "
+                        f"group {axes}")
+            m = _axsize(mesh, e)
+            if e is None or d % m != 0:
+                fitted.append(None)
+                bshp.append(d)
+            else:
+                fitted.append(e)
+                bshp.append(d // m)
+        strides = []
+        s = 1
+        for d in reversed(shp):
+            strides.insert(0, s)
+            s *= int(d)
+        leaves.append(LeafExchange(
+            index=i, offset=spec.offsets[i], size=spec.sizes[i], shape=shp,
+            dtype=spec.dtypes[i], entries=tuple(fitted),
+            block_shape=tuple(bshp), strides=tuple(strides),
+            segments=tuple(per_leaf_segs[i])))
+
+    if window % 128:
+        raise ValueError(
+            f"TP-native exchange needs 128-lane-aligned windows; got "
+            f"window={window} (pad the spec with pad_multiple=128)")
+    if spec.padded_size > (np.iinfo(np.int32).max << 7):
+        raise NotImplementedError(
+            f"padded_size={spec.padded_size} exceeds 2^38: the two-digit "
+            f"int32 window addressing (128 lanes per row) tops out at "
+            f"~274 B params")
+    plan = FlatTpPlan(
+        axes=axes, mesh_shape=tuple(mesh.shape[a] for a in axes), k=k,
+        window=window, leaves=tuple(leaves),
+        needs_i64=spec.padded_size > np.iinfo(np.int32).max)
+    _TP_PLAN_CACHE[key] = plan
+    return plan
 
 
 def dp_axes(mesh: Mesh):
