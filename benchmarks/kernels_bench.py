@@ -45,10 +45,18 @@ live bytes, ring/gather bytes moved, and the max per-leaf gather bound;
 bytes / tp peak bytes).  Correctness pulse: max error vs. the eager
 (placement-free) oracle — 0.0 = bit-for-bit.
 
-``--json-out`` (default ``benchmarks/BENCH_6.json``) writes every row as
+The commit-format sweep (compressed slabs, docs/engine.md) prices the
+``commit_format`` choices — f32 / int8_ef / topk_ef — on the per-arrival
+hot path at several (n, P) points: analytic wire bytes per commit and
+resident ``[n, P]`` slab bytes (the HBM win), measured arrivals/sec (the
+quantize/dequantize cost), and the max |g_bar| error vs. the f32 engine
+checked against the tile-wise quantization bound.
+
+``--json-out`` (default ``benchmarks/BENCH_7.json``) writes every row as
 machine-readable JSON — backend x (n, P) x sharded/unsharded, the
 round+apply grid, the session-dispatch rows, the arrival-throughput rows,
-and the unravel rows — so the perf trajectory is tracked across PRs.
+the commit-format rows, and the unravel rows — so the perf trajectory is
+tracked across PRs.
 """
 
 from __future__ import annotations
@@ -394,6 +402,106 @@ def arrival_throughput_rows(points=((8, 1 << 14), (64, 1 << 16)),
     return rows
 
 
+def commit_format_sweep(points=((8, 1 << 14), (64, 1 << 16))) -> list[dict]:
+    """Compressed-slab commit formats vs f32 on the per-arrival hot path.
+
+    Per (n, P) x ``commit_format`` (docs/engine.md "Compressed slabs"):
+
+    * ``bytes_per_arrival`` — the analytic wire payload of ONE commit
+      (``CommitCodec.commit_wire_bytes``): f32 moves ``4P``; int8_ef moves
+      ``P + 4P/128`` (payload + per-tile scales, ~3.9x less); topk_ef moves
+      ``(2k + 4) * P/128`` (k int8 values + k in-tile indices + scale per
+      tile);
+    * ``slab_bytes`` — resident bytes of one ``[n, P]`` worker slab plus its
+      scale slab (``CommitCodec.slab_bytes``; the engine keeps two such
+      slabs, stored + in-flight — same ratio);
+    * ``arrivals_per_s`` — measured throughput of the jitted arrival step
+      (``engine.commit`` + flat sgd apply, the AsyncRunner hot path), so the
+      quantize/dequantize math is priced in, not assumed free;
+    * ``gbar_err_vs_f32`` — max |g_bar| error against the f32 engine after
+      one commit per worker on identical gradients, with the tile-wise
+      quantization bound (``quant_bound``) it must respect for int8_ef
+      (top-k drops lanes into EF, so its one-shot error is bounded by the
+      dropped mass, not the quantization step).
+
+    ``derived`` is the slab-residency reduction (f32 slab bytes / this
+    format's).
+    """
+    from repro.core.algos import make_async_algo
+    from repro.core.compression import COMMIT_FORMATS
+    from repro.optim import FlatOptState
+
+    rows = []
+    key = jax.random.PRNGKey(23)
+    fopt = FLAT_OPTS["sgd"]
+    for n, P in points:
+        spec = make_flat_spec(jnp.zeros((P,)))
+        Pp = spec.padded_size
+        ks = jax.random.split(jax.random.fold_in(key, n * P), 3)
+        grad = jax.random.normal(ks[0], (Pp,))
+        w0 = jax.random.normal(ks[1], (Pp,))
+        # one distinct gradient per worker for the correctness pulse
+        k_commit = min(n, 8)
+        gs = jax.random.normal(ks[2], (k_commit, Pp))
+        f32_t = None
+        f32_gbar = None
+        for fmt in COMMIT_FORMATS:
+            eng = DuDeEngine(spec=spec, n_workers=n, commit_format=fmt)
+            codec = eng.codec
+            algo = make_async_algo("dude", eng)
+            state = eng.init()
+            ost = fopt.init(w0)
+
+            @jax.jit
+            def astep(srv, w, o, wk, g, algo=algo, fopt=fopt):
+                srv, d = algo.arrival(srv, wk, g)
+                t = o.step + 1
+                w, sl = fopt.update(w, d, o.slots, t)
+                return srv, w, FlatOptState(t, sl)
+
+            t_arr = _time(lambda s, w, o, wk, g: astep(s, w, o, wk, g)[1],
+                          state, w0, ost, jnp.int32(1), grad, reps=10)
+
+            # correctness pulse: one commit per worker, vs the f32 engine
+            st = state
+            commit = jax.jit(eng.commit)
+            for i in range(k_commit):
+                st, gbar = commit(st, jnp.int32(i), gs[i])
+            extra = {
+                "arrivals_per_s": 1.0 / t_arr,
+                "bytes_per_arrival": codec.commit_wire_bytes(Pp),
+                "slab_bytes": codec.slab_bytes(n, Pp),
+            }
+            if fmt == "f32":
+                f32_t, f32_gbar = t_arr, gbar
+                extra["gbar_err_vs_f32"] = 0.0
+            else:
+                extra["gbar_err_vs_f32"] = float(
+                    jnp.max(jnp.abs(gbar - f32_gbar)))
+                # lane-wise bound: mean over committed rows of each row's
+                # per-tile quantization bound (uncommitted rows are 0 = 0)
+                bound = sum(np.repeat(np.asarray(codec.quant_bound(gs[i])),
+                                      codec.tile) for i in range(k_commit)) / n
+                extra["quant_bound_max"] = float(bound.max())
+                extra["gbar_err_within_bound"] = (
+                    fmt != "int8_ef"
+                    or bool((np.abs(np.asarray(gbar - f32_gbar))
+                             <= bound + 1e-7).all()))
+                extra["bytes_reduction_vs_f32"] = (
+                    4 * Pp / codec.commit_wire_bytes(Pp))
+                extra["slab_reduction_vs_f32"] = (
+                    4 * n * Pp / codec.slab_bytes(n, Pp))
+                extra["arrivals_per_s_vs_f32"] = f32_t / t_arr
+            rows.append({
+                "name": f"compression/commit_format/{fmt}/n{n}_P{Pp}",
+                "format": fmt, "n": n, "P": Pp,
+                "us_per_call": 1e6 * t_arr,
+                "derived": 4 * n * Pp / codec.slab_bytes(n, Pp),
+                "extra": extra,
+            })
+    return rows
+
+
 def unravel_sweep(arch: str = "qwen2_0_5b", shape=(2, 4),
                   n_workers: int | None = None) -> list[dict]:
     """Replicated vs TP-native param exchange on a (data, model) host mesh.
@@ -505,6 +613,7 @@ def run(backend: str = "all") -> list[dict]:
     rows += round_apply_sweep(backends)
     rows += session_dispatch_rows()
     rows += arrival_throughput_rows()
+    rows += commit_format_sweep()
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
@@ -580,7 +689,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_6.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_7.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -593,7 +702,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 6,
+                "pr": 7,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

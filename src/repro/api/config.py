@@ -25,6 +25,7 @@ from typing import Any, Optional, Union
 import jax.numpy as jnp
 
 from ..core.algos import ASYNC_ALGOS, ROUND_ALGOS
+from ..core.compression import COMMIT_FORMATS
 from ..core.dude import DuDeConfig
 from ..core.engine import BACKENDS
 from ..models.config import ModelConfig
@@ -109,7 +110,14 @@ class TrainerConfig:
                                         # P-shards; no full [P] anywhere —
                                         # needs mesh + shard_engine)
     buffer_dtype: Any = None            # engine slabs; None = arch default
-                                        # (f32 under smoke)
+                                        # (f32 under smoke); f32 format only
+    commit_format: str = "f32"          # slab storage / commit wire format:
+                                        # "f32" (historical full precision),
+                                        # "int8_ef" (tiled int8 + per-128-
+                                        # lane-tile scales + EF residual) or
+                                        # "topk_ef" (per-tile magnitude
+                                        # top-k before int8) — docs/engine.md
+                                        # "Compressed slabs"
     fedbuff_buffer_size: int = 4        # fedbuff only: gradients per flush
     max_in_flight: Optional[int] = None  # async runs: bound on CONCURRENT
                                          # dispatched-but-unarrived jobs
@@ -137,6 +145,15 @@ class TrainerConfig:
                 "algo 'dude_accum' requires server_backend 'reference' "
                 "(the accumulate running-mean latch is reference-only); "
                 f"got server_backend={self.server_backend!r}")
+        if self.commit_format not in COMMIT_FORMATS:
+            raise ConfigError(
+                f"unknown commit_format {self.commit_format!r}; "
+                f"options: {COMMIT_FORMATS}")
+        if self.algo == "dude_accum" and self.commit_format != "f32":
+            raise ConfigError(
+                "algo 'dude_accum' requires commit_format 'f32' (the "
+                "accumulate running-mean latch cannot keep quantized slabs "
+                f"exact); got commit_format={self.commit_format!r}")
         if isinstance(self.optimizer, str) \
                 and self.optimizer not in OPTIMIZERS:
             raise ConfigError(
@@ -199,6 +216,7 @@ class TrainerConfig:
             backend=self.server_backend,
             shard_engine=self.shard_engine,
             params_layout=self.params_layout,
+            commit_format=self.commit_format,
         )
 
     def make_optimizer(self) -> Optimizer:

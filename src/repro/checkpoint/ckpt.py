@@ -170,20 +170,30 @@ def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
     if paths != manifest["paths"]:
         raise ValueError("checkpoint structure mismatch")
     stored_spec = manifest.get("flat_spec")
-    refit = None
+    refits = []
     if flat_spec is not None and stored_spec is not None:
         _check_spec_compatible(stored_spec, flat_spec)
-        refit = (stored_spec["padded_size"], flat_spec.padded_size,
-                 stored_spec["size"])
+        old_p, new_p = stored_spec["padded_size"], flat_spec.padded_size
+        size = stored_spec["size"]
+        refits.append((old_p, new_p, size))
+        # Compressed-format scale slabs are [..., P/128] (one f32 scale per
+        # 128-lane tile, core/compression.py): refit them at tile
+        # granularity.  The real prefix is the tiles overlapping [0, size);
+        # pad-tail tiles hold zero scales by construction.
+        from ..core.flatten import PAD_MULTIPLE
+        if old_p % PAD_MULTIPLE == 0 and new_p % PAD_MULTIPLE == 0:
+            refits.append((old_p // PAD_MULTIPLE, new_p // PAD_MULTIPLE,
+                           -(-size // PAD_MULTIPLE)))
     flat, treedef = jax.tree_util.tree_flatten(like)
     out = []
     for i, ref in enumerate(flat):
         arr = _decode_array(data[f"a{i}"], manifest["dtypes"][i])
-        if (refit is not None and arr.ndim >= 1
-                and arr.shape[-1] == refit[0]
-                and tuple(ref.shape[:-1]) == arr.shape[:-1]
-                and ref.shape[-1] == refit[1]):
-            arr = _refit_flat(arr, *refit)
+        for refit in refits:
+            if (arr.ndim >= 1 and arr.shape[-1] == refit[0]
+                    and tuple(ref.shape[:-1]) == arr.shape[:-1]
+                    and ref.shape[-1] == refit[1]):
+                arr = _refit_flat(arr, *refit)
+                break
         if list(arr.shape) != list(ref.shape):
             raise ValueError(f"shape mismatch at {paths[i]}: {arr.shape} vs {ref.shape}")
         out.append(jnp.asarray(arr, dtype=ref.dtype))

@@ -15,6 +15,7 @@ Public API:
   * simulator — event-driven asynchronous-training harness.
 """
 
+from .compression import COMMIT_FORMATS, CommitCodec
 from .dude import (
     DuDeConfig, DuDeState, dude_commit, dude_init, dude_round,
     dude_round_indexed, masks_to_indices,
@@ -40,6 +41,7 @@ __all__ = [
     "DuDeConfig", "DuDeState", "dude_commit", "dude_init", "dude_round",
     "dude_round_indexed", "masks_to_indices",
     "BACKENDS", "DuDeEngine", "EngineState", "masks_to_indices_jnp",
+    "COMMIT_FORMATS", "CommitCodec",
     "FlatSpec", "make_flat_spec",
     "RoundSchedule", "SpeedModel", "delay_stats", "event_stream",
     "make_round_schedule", "truncated_normal_speeds",

@@ -1,108 +1,251 @@
-"""Beyond-paper: compressed DuDe buffers with error feedback.
+"""Flat-slab commit codec: tiled int8 + error feedback over ``[P]`` vectors.
 
-DuDe-ASGD's server memory is Theta(n * p): one stored gradient per worker plus
-one in-flight gradient per worker.  At 100B+ parameter scale this term
-dominates HBM (see EXPERIMENTS §Dry-run).  We add a per-tensor symmetric int8
-codec with error feedback: the quantization residual of each commit is carried
-into the next commit of the same worker, so the *long-run* aggregate direction
-is unbiased (standard EF-SGD argument layered on DuDe's incremental rule).
+DuDe-ASGD's server memory is Theta(n * P): one stored gradient per worker plus
+one in-flight gradient per worker.  At 100B+ parameter scale the ``[n, P]``
+slab dominates HBM, and every per-arrival commit moves a full-precision row.
+This module provides the storage/wire format that cuts both ~4x while keeping
+the dual-delay protocol exactly intact:
 
-This changes nothing about the dual-delay protocol — only the storage format
-of G~_i / in-flight buffers — and is recorded separately from the
-paper-faithful baseline in EXPERIMENTS §Perf.
+* ``quantize`` / ``dequantize`` — symmetric int8 with a **per-128-lane-tile**
+  f32 scale: the smallest POWER OF TWO >= ``max|x_t| / 127``.  One scale per
+  tile, never per tensor: a single scale across a full ``[P]`` slab would
+  collapse the precision of small segments.  128 lanes is the engine's pad
+  granularity (``flatten.PAD_MULTIPLE``), so tile boundaries always align
+  with P-axis shard boundaries and per-shard encoding equals global
+  encoding.  Power-of-two scales cost at most one extra bit of error
+  (error <= scale/2 <= max|x_t|/127) and make ``q * scale`` / ``x / scale``
+  EXACT in f32 — the decode value cannot shift under compiler fusion (XLA
+  contracts ``q*scale`` into neighboring subtractions as an FMA; with an
+  exact product the contraction is value-identical).
+* ``topk_mask`` — per-tile magnitude top-k sparsifier, applied *before*
+  quantization so the top-k format shares all int8 storage and kernel
+  machinery (dropped values re-enter through error feedback).
+* ``CommitCodec`` — the format object carried by ``DuDeEngine``.  Its
+  ``encode_commit`` implements the error-feedback commit: the codec quantizes
+  ``target = g + ef`` and stores the *quantized row itself* in the slab, so
+  the server's ``g_workers`` row is bit-identical to what was decoded into
+  ``g_bar`` — the incremental-aggregation invariant
+  ``g_bar == mean_i dec(g_workers[i])`` holds exactly, with zero
+  re-quantization error.
+
+EF bitwise invariant.  With ``(q, s) = quantize(target)`` and
+``dec = dequantize(q, s)``, the new residual ``ef' = target - dec`` satisfies
+``dec + ef' == target`` **bitwise** in f32.  Two ingredients: (1) ``dec`` is
+the EXACT real product ``q * s`` (power-of-two scale — no multiply rounding,
+so even an FMA-contracted ``target - q*s`` computes the same value); (2) the
+subtraction ``target - dec`` is itself exact — when ``q == 0`` trivially
+(``dec == 0``), and when ``|q| >= 1`` ``target`` and ``dec`` are within a
+factor of 2 of each other (``|target - dec| <= s/2 <= |dec|/2``), so the
+Sterbenz lemma applies.  Hence ``dec ⊕ ef' == g ⊕ ef`` (f32 adds) holds
+bit-for-bit — the decoded stream plus residual telescopes to the true stream
+with no float slop.  Tested in ``tests/test_compression.py``.
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import dataclasses
 
-import jax
+from jax import lax
 import jax.numpy as jnp
 
-Pytree = Any
+from .flatten import PAD_MULTIPLE
 
-__all__ = ["QTensor", "quantize", "dequantize", "ef_encode", "ef_decode"]
+__all__ = [
+    "COMMIT_FORMATS", "TILE", "CommitCodec",
+    "quantize", "dequantize", "topk_mask", "ef_encode", "ef_decode",
+]
 
+TILE = PAD_MULTIPLE  # 128 lanes per scale tile — the engine pad granularity
 
-class QTensor(NamedTuple):
-    q: jnp.ndarray      # int8 payload
-    scale: jnp.ndarray  # f32 scalar per tensor
+COMMIT_FORMATS = ("f32", "int8_ef", "topk_ef")
 
-
-def quantize(x: jnp.ndarray) -> QTensor:
-    x = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return QTensor(q=q, scale=scale)
+_SCALE_FLOOR = 1e-12
 
 
-def dequantize(qt: QTensor) -> jnp.ndarray:
-    return qt.q.astype(jnp.float32) * qt.scale
-
-
-def ef_encode(x: jnp.ndarray, err: jnp.ndarray) -> tuple[QTensor, jnp.ndarray]:
-    """Quantize ``x + err`` and return the new residual."""
-    target = x.astype(jnp.float32) + err
-    qt = quantize(target)
-    new_err = target - dequantize(qt)
-    return qt, new_err
-
-
-def ef_decode(qt: QTensor) -> jnp.ndarray:
-    return dequantize(qt)
-
-
-def tree_quantize(tree: Pytree) -> Pytree:
-    return jax.tree.map(quantize, tree)
-
-
-def tree_dequantize(tree: Pytree) -> Pytree:
-    return jax.tree.map(dequantize, tree, is_leaf=lambda x: isinstance(x, QTensor))
-
-
-# ------------------------------------------------------ compressed DuDe delta
-
-def compressed_commit(state, worker, grad, err_tree, cfg):
-    """Beyond-paper: worker-side int8+EF compression of the DuDe delta.
-
-    The paper's worker message is delta = G_new - G~_worker (Fig. 1).  Here the
-    worker quantizes delta with error feedback (residual kept locally), and the
-    server applies the DECODED delta to both g_bar and its copy of G~_worker —
-    server and worker buffers stay bit-identical, so the incremental-
-    aggregation invariant is preserved exactly, while the wire payload drops
-    4x (int8 vs f32).  Returns (new_state, g_bar, new_err_tree).
-    """
-    import jax
-    import jax.numpy as jnp
-
-    n = cfg.n_workers
-
-    def upd(gbar, gw, g, err):
-        g = g.astype(jnp.float32)
-        old = jax.lax.dynamic_index_in_dim(gw, worker, axis=0, keepdims=False)
-        delta = g - old.astype(jnp.float32)
-        qt, new_err = ef_encode(delta, err)
-        dec = dequantize(qt)
-        gbar = gbar + dec / n
-        new_row = old.astype(jnp.float32) + dec
-        gw = jax.lax.dynamic_update_index_in_dim(
-            gw, new_row.astype(gw.dtype), worker, axis=0
+def _tiles(x: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """View ``[..., P]`` (P % tile == 0) as ``[..., P//tile, tile]``."""
+    if x.shape[-1] % tile:
+        raise ValueError(
+            f"trailing dim {x.shape[-1]} is not a multiple of tile={tile}"
         )
-        return gbar, gw, new_err
+    return x.reshape(x.shape[:-1] + (x.shape[-1] // tile, tile))
 
-    flat_bar, treedef = jax.tree.flatten(state.g_bar)
-    flat_gw = treedef.flatten_up_to(state.g_workers)
-    flat_g = treedef.flatten_up_to(grad)
-    flat_err = treedef.flatten_up_to(err_tree)
-    nb, nw, ne = [], [], []
-    for b, w, g, e in zip(flat_bar, flat_gw, flat_g, flat_err):
-        b2, w2, e2 = upd(b, w, g, e)
-        nb.append(b2)
-        nw.append(w2)
-        ne.append(e2)
-    new_state = state._replace(
-        g_bar=jax.tree.unflatten(treedef, nb),
-        g_workers=jax.tree.unflatten(treedef, nw),
-        step=state.step + 1,
-    )
-    return new_state, new_state.g_bar, jax.tree.unflatten(treedef, ne)
+
+def _pow2_ceil(x: jnp.ndarray) -> jnp.ndarray:
+    """Smallest power of two >= x (x strictly positive, normal f32).
+
+    Bit-level and branch-free: adding ``0x007FFFFF`` carries into the
+    exponent iff any mantissa bit is set, and masking to the exponent field
+    clears the mantissa — exact powers of two pass through unchanged.  No
+    libm (``log2``/``exp2``) rounding anywhere, so eager, jit, and the
+    Pallas kernel all agree bit-for-bit.
+    """
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    return lax.bitcast_convert_type((bits + 0x007FFFFF) & 0x7F800000,
+                                    jnp.float32)
+
+
+def _tile_scale(xt: jnp.ndarray) -> jnp.ndarray:
+    """Per-tile quantization scale of ``[..., T, tile]`` tiles: the smallest
+    POWER OF TWO >= ``max|tile| / 127`` (floored at 1e-12 so all-zero tiles
+    encode to q=0)."""
+    raw = jnp.maximum(jnp.max(jnp.abs(xt), axis=-1), _SCALE_FLOOR) / 127.0
+    return _pow2_ceil(raw)
+
+
+def quantize(x: jnp.ndarray, tile: int = TILE) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Tiled symmetric int8: ``[..., P] -> (q int8 [..., P], scale f32 [..., P//tile])``.
+
+    Each 128-lane tile gets its own f32 scale: the smallest power of two
+    >= ``max|tile| / 127`` (floored at 1e-12 so all-zero tiles encode to
+    q=0).  A power-of-two scale costs at most one extra bit of quantization
+    error (error <= scale/2 <= max|tile|/127) and buys EXACTNESS: ``q/scale``
+    divides and ``q*scale`` multiplies without rounding, so ``dequantize`` is
+    bit-deterministic under any compiler fusion (an FMA contraction of
+    ``q*scale`` into a neighboring subtract cannot change the value) — the
+    foundation of the bitwise EF invariant (module docstring).  The trailing
+    dim must be a multiple of ``tile`` — engine slabs always are; pad shorter
+    vectors with zeros first (zero lanes quantize to zero exactly).
+    """
+    xt = _tiles(x.astype(jnp.float32), tile)
+    scale = _tile_scale(xt)
+    q = jnp.clip(jnp.round(xt / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               tile: int = TILE) -> jnp.ndarray:
+    """Inverse of :func:`quantize`: ``q [..., P], scale [..., P//tile] -> f32 [..., P]``."""
+    qt = _tiles(q.astype(jnp.float32), tile)
+    return (qt * scale[..., None]).reshape(q.shape)
+
+
+def topk_mask(x: jnp.ndarray, k: int, tile: int = TILE) -> jnp.ndarray:
+    """Zero all but the ``k`` largest-|x| lanes of each 128-lane tile.
+
+    Threshold-based: lanes with ``|x| >= (k-th largest |x| in tile)`` survive,
+    so exact-magnitude ties may keep a few extra lanes (measure-zero for
+    continuous gradients).  Implemented as k-1 vectorized max-suppression
+    sweeps instead of a sort so the identical op sequence lowers inside the
+    Pallas kernel and the plain-jnp oracle.
+    """
+    if not 1 <= k <= tile:
+        raise ValueError(f"topk k={k} must be in [1, {tile}]")
+    a = jnp.abs(_tiles(x.astype(jnp.float32), tile))
+    cur = a
+    for _ in range(k - 1):
+        m = jnp.max(cur, axis=-1, keepdims=True)
+        cur = jnp.where(cur >= m, -jnp.inf, cur)
+    thresh = jnp.max(cur, axis=-1, keepdims=True)
+    keep = (a >= thresh).reshape(x.shape)
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def ef_encode(x: jnp.ndarray, err: jnp.ndarray,
+              tile: int = TILE) -> tuple[tuple[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """Quantize ``x + err`` and return ``((q, scale), new_err)``."""
+    target = x.astype(jnp.float32) + err
+    q, scale = quantize(target, tile)
+    new_err = target - dequantize(q, scale, tile)
+    return (q, scale), new_err
+
+
+def ef_decode(q: jnp.ndarray, scale: jnp.ndarray,
+              tile: int = TILE) -> jnp.ndarray:
+    return dequantize(q, scale, tile)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitCodec:
+    """Commit/storage format for the flat engine's ``[n, P]`` slabs.
+
+    ``f32``      — today's format: full-precision rows, no EF slot.
+    ``int8_ef``  — tiled symmetric int8 rows + per-tile f32 scales, with a
+                   ``[P]`` error-feedback residual on the commit stream.
+    ``topk_ef``  — per-tile magnitude top-k applied before int8 quantization;
+                   same slab layout (the int8 payload is mostly zeros, the
+                   wire payload is k values + k in-tile indices per tile).
+    """
+
+    format: str = "f32"
+    tile: int = TILE
+    topk: int = 16  # survivors per tile (topk_ef only)
+
+    def __post_init__(self):
+        if self.format not in COMMIT_FORMATS:
+            raise ValueError(
+                f"commit_format {self.format!r} not in {COMMIT_FORMATS}"
+            )
+        if not 1 <= self.topk <= self.tile:
+            raise ValueError(f"topk={self.topk} must be in [1, {self.tile}]")
+
+    @property
+    def compressed(self) -> bool:
+        return self.format != "f32"
+
+    def n_tiles(self, p: int) -> int:
+        if p % self.tile:
+            raise ValueError(f"P={p} not a multiple of tile={self.tile}")
+        return p // self.tile
+
+    # ------------------------------------------------------------- codec ops
+
+    def sparsify(self, x: jnp.ndarray) -> jnp.ndarray:
+        """The pre-quantization lane filter (identity except topk_ef)."""
+        if self.format == "topk_ef":
+            return topk_mask(x, self.topk, self.tile)
+        return x
+
+    def encode(self, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """``[..., P] -> (q, scale)`` (sparsify then tiled int8)."""
+        return quantize(self.sparsify(x), self.tile)
+
+    def decode(self, q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+        return dequantize(q, scale, self.tile)
+
+    def encode_commit(
+        self, g: jnp.ndarray, ef: jnp.ndarray
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Error-feedback commit encode of one ``[P]`` gradient row.
+
+        Returns ``(q, scale, dec, ef_new)`` where ``dec = decode(q, scale)``
+        and ``dec + ef_new == g + ef`` bitwise (see module docstring).
+        """
+        target = g.astype(jnp.float32) + ef
+        q, scale = self.encode(target)
+        dec = self.decode(q, scale)
+        return q, scale, dec, target - dec
+
+    def quant_bound(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Per-tile worst-case |dequantize(quantize(x)) - x| bound: scale/2 + slop.
+
+        Rounding to the nearest int8 level is off by at most ``scale/2`` per
+        lane — exactly, because the power-of-two scale makes the divide and
+        multiply exact; the small extra term covers the one case where the
+        floored ``max/127`` rounds a hair low and a max-magnitude lane clips
+        at 127.  Since ``scale < 2 * max|tile|/127``, the bound is at most
+        the classic ``max|tile|/127`` (+ slop).  (For ``topk_ef`` this bounds
+        the error on *surviving* lanes; dropped lanes carry their full value
+        into EF.)
+        """
+        xs = self.sparsify(x)
+        scale = _tile_scale(_tiles(xs.astype(jnp.float32), self.tile))
+        return scale * (0.5 + 4.0 * jnp.finfo(jnp.float32).eps * 127.0)
+
+    # ----------------------------------------------------------- byte models
+
+    def commit_wire_bytes(self, p: int) -> int:
+        """Bytes one per-arrival commit moves over the (future) wire."""
+        t = self.n_tiles(p)
+        if self.format == "f32":
+            return 4 * p
+        if self.format == "int8_ef":
+            return p + 4 * t               # int8 payload + f32 scale per tile
+        # topk_ef: k (value int8 + in-tile index uint8) per tile + scales
+        return t * 2 * self.topk + 4 * t
+
+    def slab_bytes(self, n: int, p: int) -> int:
+        """Resident bytes of one ``[n, P]`` worker slab (+ its scale slab)."""
+        if self.format == "f32":
+            return 4 * n * p
+        return n * p + 4 * n * self.n_tiles(p)

@@ -60,9 +60,11 @@ from jax.experimental import checkify
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
+from .compression import COMMIT_FORMATS, CommitCodec
 from .flatten import FlatSpec, make_flat_spec
 from ..kernels.dude_update import (
-    DEFAULT_TILE, SLOT_STREAMS, dude_round_apply_pallas, dude_update_pallas,
+    DEFAULT_TILE, SLOT_STREAMS, dude_round_apply_pallas,
+    dude_round_apply_q_pallas, dude_update_pallas,
 )
 from ..optim.transforms import FlatOptState, FlatOptimizer
 
@@ -76,13 +78,25 @@ INDEX_CHECKS = ("debug", "checkify", "off")
 
 
 class EngineState(NamedTuple):
-    """Flat DuDe server state.  Field names mirror ``DuDeState``."""
+    """Flat DuDe server state.  Field names mirror ``DuDeState``.
+
+    The trailing three fields exist only under a compressed
+    ``commit_format`` (``int8_ef`` / ``topk_ef``): the slabs then hold int8
+    payloads, ``gw_scale``/``infl_scale`` hold their per-128-lane-tile f32
+    scales, and ``ef`` carries the commit-stream error-feedback residual.
+    Under ``"f32"`` they stay ``None`` — ``None`` leaves vanish from jax
+    pytrees, so the f32 state keeps the exact historical flatten structure,
+    checkpoint paths, and shardings (bit-for-bit compatibility).
+    """
 
     g_bar: jnp.ndarray      # [P] f32 running aggregated gradient (paper g~)
     g_workers: jnp.ndarray  # [n, P] latest committed gradient per worker
     inflight: jnp.ndarray   # [n, P] gradient latched at job start
     acc_count: jnp.ndarray  # [n] i32 rounds accumulated (accumulate mode)
     step: jnp.ndarray       # scalar i32 server iteration counter
+    gw_scale: Any = None    # [n, P/128] f32 scales of g_workers (compressed)
+    infl_scale: Any = None  # [n, P/128] f32 scales of inflight (compressed)
+    ef: Any = None          # [P] f32 commit-stream EF residual (compressed)
 
 
 def masks_to_indices_jnp(mask: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -127,6 +141,12 @@ class DuDeEngine:
     # make_flat_spec(tree, mesh_axis_size=<product of those axes>).
     mesh: Optional[Mesh] = None
     axis_name: Any = None
+    # Slab storage / commit wire format (core/compression.py).  "f32" is the
+    # historical full-precision layout; "int8_ef" / "topk_ef" store the
+    # [n, P] slabs as int8 payloads + per-128-lane-tile f32 scale slabs and
+    # add a [P] error-feedback residual on the commit stream.  The configured
+    # buffer_dtype only applies to the f32 format.
+    commit_format: str = "f32"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -136,6 +156,15 @@ class DuDeEngine:
             raise ValueError(
                 "accumulate mode is only implemented by the reference "
                 f"backend, not {self.backend!r}")
+        if self.commit_format not in COMMIT_FORMATS:
+            raise ValueError(
+                f"unknown commit_format {self.commit_format!r}; "
+                f"options: {COMMIT_FORMATS}")
+        if self.accumulate and self.commit_format != "f32":
+            raise ValueError(
+                "accumulate mode re-averages the in-flight rows every round "
+                "and cannot keep quantized slabs exact; it requires "
+                "commit_format='f32'")
         if self.index_width is not None and not (
                 1 <= self.index_width <= self.n_workers):
             raise ValueError(
@@ -176,6 +205,19 @@ class DuDeEngine:
     @property
     def P(self) -> int:
         return self.spec.padded_size
+
+    @property
+    def codec(self) -> CommitCodec:
+        return CommitCodec(format=self.commit_format)
+
+    @property
+    def compressed(self) -> bool:
+        return self.commit_format != "f32"
+
+    @property
+    def n_tiles(self) -> int:
+        """Scale tiles per row (P / 128; the scale-slab trailing dim)."""
+        return self.codec.n_tiles(self.P)
 
     @property
     def paxes(self) -> tuple:
@@ -223,7 +265,8 @@ class DuDeEngine:
         if self.mesh is None:
             raise ValueError("engine has no mesh")
         from ..sharding.specs import engine_state_shardings
-        return engine_state_shardings(self.spec, self.mesh, self.paxes)
+        return engine_state_shardings(self.spec, self.mesh, self.paxes,
+                                      like=self.state_shapes())
 
     def tp_plan(self, param_sh: Pytree):
         """The TP-native exchange plan between this engine's P-shards and
@@ -236,11 +279,20 @@ class DuDeEngine:
         return self.spec.tp_plan(self.mesh, param_sh, axes=self.paxes)
 
     def _pspecs(self):
-        """(vec, row, repl, state) PartitionSpecs for shard_map plumbing."""
+        """(vec, row, repl, state) PartitionSpecs for shard_map plumbing.
+
+        Scale slabs ``[n, P/128]`` shard their trailing dim over the same P
+        axes — tile boundaries align with shard boundaries because P/k is a
+        multiple of 128, so P/128 is a multiple of k.
+        """
         vec = PartitionSpec(self.paxes)
         row = PartitionSpec(None, self.paxes)
         repl = PartitionSpec()
-        return vec, row, repl, EngineState(vec, row, row, repl, repl)
+        if self.compressed:
+            st = EngineState(vec, row, row, repl, repl, row, row, vec)
+        else:
+            st = EngineState(vec, row, row, repl, repl)
+        return vec, row, repl, st
 
     def _shmap(self, body, in_specs, out_specs):
         return shard_map(body, mesh=self.mesh, in_specs=in_specs,
@@ -250,13 +302,26 @@ class DuDeEngine:
 
     def init(self) -> EngineState:
         n, P = self.n_workers, self.P
-        state = EngineState(
-            g_bar=jnp.zeros((P,), jnp.float32),
-            g_workers=jnp.zeros((n, P), self.buffer_dtype),
-            inflight=jnp.zeros((n, P), self.buffer_dtype),
-            acc_count=jnp.zeros((n,), jnp.int32),
-            step=jnp.zeros((), jnp.int32),
-        )
+        if self.compressed:
+            t = self.n_tiles
+            state = EngineState(
+                g_bar=jnp.zeros((P,), jnp.float32),
+                g_workers=jnp.zeros((n, P), jnp.int8),
+                inflight=jnp.zeros((n, P), jnp.int8),
+                acc_count=jnp.zeros((n,), jnp.int32),
+                step=jnp.zeros((), jnp.int32),
+                gw_scale=jnp.zeros((n, t), jnp.float32),
+                infl_scale=jnp.zeros((n, t), jnp.float32),
+                ef=jnp.zeros((P,), jnp.float32),
+            )
+        else:
+            state = EngineState(
+                g_bar=jnp.zeros((P,), jnp.float32),
+                g_workers=jnp.zeros((n, P), self.buffer_dtype),
+                inflight=jnp.zeros((n, P), self.buffer_dtype),
+                acc_count=jnp.zeros((n,), jnp.int32),
+                step=jnp.zeros((), jnp.int32),
+            )
         if self.mesh is not None:
             state = jax.device_put(state, self.shardings())
         return state
@@ -265,6 +330,18 @@ class DuDeEngine:
         """Abstract ``EngineState`` (ShapeDtypeStructs) for lowering."""
         n, P = self.n_workers, self.P
         sds = jax.ShapeDtypeStruct
+        if self.compressed:
+            t = self.n_tiles
+            return EngineState(
+                g_bar=sds((P,), jnp.float32),
+                g_workers=sds((n, P), jnp.int8),
+                inflight=sds((n, P), jnp.int8),
+                acc_count=sds((n,), jnp.int32),
+                step=sds((), jnp.int32),
+                gw_scale=sds((n, t), jnp.float32),
+                infl_scale=sds((n, t), jnp.float32),
+                ef=sds((P,), jnp.float32),
+            )
         return EngineState(
             g_bar=sds((P,), jnp.float32),
             g_workers=sds((n, P), self.buffer_dtype),
@@ -282,7 +359,16 @@ class DuDeEngine:
         O(P) work regardless of backend — there is nothing to fuse or index,
         so all three backends share this implementation.  Elementwise on P,
         so the sharded path is communication-free.
+
+        Compressed formats quantize ``g + ef`` with error feedback and store
+        the quantized row itself (payload + per-tile scales), so
+        ``g_bar == mean_i dec(g_workers[i])`` holds exactly and
+        ``dec + ef' == g + ef`` holds bitwise (core/compression.py).
+        Per-shard encoding equals global encoding because scale tiles align
+        with P-shard boundaries, so the sharded commit stays collective-free.
         """
+        if self.compressed:
+            return self._commit_q(state, worker, grad)
 
         def body(g_bar, g_workers, w, g):
             g = g.astype(jnp.float32)
@@ -300,6 +386,32 @@ class DuDeEngine:
         g_bar, g_workers = body(state.g_bar, state.g_workers, worker, grad)
         st = state._replace(g_bar=g_bar, g_workers=g_workers,
                             step=state.step + 1)
+        return st, g_bar
+
+    def _commit_q(self, state: EngineState, worker: jnp.ndarray,
+                  grad: jnp.ndarray) -> tuple[EngineState, jnp.ndarray]:
+        codec = self.codec
+
+        def body(g_bar, gw_q, gw_s, ef, w, g):
+            q, s, dec, ef_new = codec.encode_commit(g.astype(jnp.float32), ef)
+            old_q = jax.lax.dynamic_index_in_dim(gw_q, w, axis=0,
+                                                 keepdims=False)
+            old_s = jax.lax.dynamic_index_in_dim(gw_s, w, axis=0,
+                                                 keepdims=False)
+            dec_old = codec.decode(old_q, old_s)
+            g_bar = g_bar + (dec - dec_old) / self.n_workers
+            gw_q = jax.lax.dynamic_update_index_in_dim(gw_q, q, w, axis=0)
+            gw_s = jax.lax.dynamic_update_index_in_dim(gw_s, s, w, axis=0)
+            return g_bar, gw_q, gw_s, ef_new
+
+        if self.mesh is not None:
+            vec, row, repl, _ = self._pspecs()
+            body = self._shmap(body, in_specs=(vec, row, row, vec, repl, vec),
+                               out_specs=(vec, row, row, vec))
+        g_bar, gw_q, gw_s, ef = body(state.g_bar, state.g_workers,
+                                     state.gw_scale, state.ef, worker, grad)
+        st = state._replace(g_bar=g_bar, g_workers=gw_q, gw_scale=gw_s,
+                            ef=ef, step=state.step + 1)
         return st, g_bar
 
     # -------------------------------------------------------------- round
@@ -320,13 +432,15 @@ class DuDeEngine:
         sm = start_mask.astype(bool)
         cm = commit_mask.astype(bool)
         self._index_overflow_check(sm, cm)
-        g_bar, gw, infl, new_params = self._run_backend(
+        g_bar, gw, infl, scales, new_params = self._run_backend(
             state, fresh, sm, cm, params, eta)
-        st = EngineState(
+        st = state._replace(
             g_bar=g_bar, g_workers=gw, inflight=infl,
             acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
             step=state.step + 1,
         )
+        if scales is not None:
+            st = st._replace(gw_scale=scales[0], infl_scale=scales[1])
         if params is None:
             return st, g_bar
         return st, g_bar, new_params
@@ -341,23 +455,34 @@ class DuDeEngine:
                 "round_indexed cannot express the accumulate running-mean "
                 "latch; use round() with the reference backend")
 
-        def body(st, f, si, ci):
-            return self._round_indexed(st, f, si, ci)
+        if self.compressed:
+            def body(st, f, si, ci):
+                return self._round_indexed_q(st, f, si, ci)
+            out_arity = 5
+        else:
+            def body(st, f, si, ci):
+                return self._round_indexed(st, f, si, ci)
+            out_arity = 3
 
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
+            out_specs = (vec, row, row) + ((row, row) if out_arity == 5
+                                           else ())
             body = self._shmap(body, in_specs=(sspec, row, repl, repl),
-                               out_specs=(vec, row, row))
-        g_bar, gw, infl = body(state, fresh, start_idx, commit_idx)
+                               out_specs=out_specs)
+        out = body(state, fresh, start_idx, commit_idx)
+        g_bar, gw, infl = out[:3]
         # acc_count follows the same rule as round(): a worker starting a job
         # this round resets its counter, everyone else accumulates.
         sm = jnp.zeros((self.n_workers,), bool).at[start_idx].set(
             True, mode="drop")
-        st = EngineState(
+        st = state._replace(
             g_bar=g_bar, g_workers=gw, inflight=infl,
             acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
             step=state.step + 1,
         )
+        if out_arity == 5:
+            st = st._replace(gw_scale=out[3], infl_scale=out[4])
         return st, g_bar
 
     # -------------------------------------------------- fused round+apply
@@ -387,6 +512,7 @@ class DuDeEngine:
         t_new = opt_state.step + 1
         slots = opt_state.slots
         fused = self.backend == "pallas" and opt.name in SLOT_STREAMS
+        codec = self.codec
 
         def body(st, f, a, b, w, t, sl):
             if fused:
@@ -396,31 +522,52 @@ class DuDeEngine:
                     t32 = t.astype(jnp.float32)
                     bc = jnp.stack([1 - hp["b1"] ** t32, 1 - hp["b2"] ** t32])
                 leaves, sdef = jax.tree_util.tree_flatten(sl)
-                gw, infl, g_bar, w_new, new_leaves = dude_round_apply_pallas(
-                    b, a, f.astype(jnp.float32), st.g_workers, st.inflight,
-                    st.g_bar, w, tuple(leaves), bc, kind=opt.name,
-                    hp=opt.hparams, tile=self.tile,
-                    interpret=self._interpret())
+                if self.compressed:
+                    (gw, gw_s, infl, infl_s, g_bar, w_new,
+                     new_leaves) = dude_round_apply_q_pallas(
+                        b, a, f.astype(jnp.float32), st.g_workers,
+                        st.gw_scale, st.inflight, st.infl_scale, st.g_bar,
+                        w, tuple(leaves), bc, kind=opt.name, hp=opt.hparams,
+                        fmt=codec.format, topk=codec.topk, tile=self.tile,
+                        interpret=self._interpret())
+                    scales = (gw_s, infl_s)
+                else:
+                    gw, infl, g_bar, w_new, new_leaves = \
+                        dude_round_apply_pallas(
+                            b, a, f.astype(jnp.float32), st.g_workers,
+                            st.inflight, st.g_bar, w, tuple(leaves), bc,
+                            kind=opt.name, hp=opt.hparams, tile=self.tile,
+                            interpret=self._interpret())
+                    scales = ()
                 sl_new = jax.tree_util.tree_unflatten(sdef, list(new_leaves))
             else:
-                g_bar, gw, infl = self._round_plain(st, f, a, b)
+                if self.compressed:
+                    g_bar, gw, infl, gw_s, infl_s = self._round_plain_q(
+                        st, f, a, b)
+                    scales = (gw_s, infl_s)
+                else:
+                    g_bar, gw, infl = self._round_plain(st, f, a, b)
+                    scales = ()
                 w_new, sl_new = opt.update(w, g_bar, sl, t)
-            return g_bar, gw, infl, w_new, sl_new
+            return (g_bar, gw, infl, w_new, sl_new) + scales
 
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
             slot_specs = jax.tree.map(lambda _: vec, slots)
+            scale_specs = (row, row) if self.compressed else ()
             body = self._shmap(
                 body,
                 in_specs=(sspec, row, repl, repl, vec, repl, slot_specs),
-                out_specs=(vec, row, row, vec, slot_specs))
-        g_bar, gw, infl, w_new, sl_new = body(
-            state, fresh, sm, cm, params, t_new, slots)
-        st = EngineState(
+                out_specs=(vec, row, row, vec, slot_specs) + scale_specs)
+        out = body(state, fresh, sm, cm, params, t_new, slots)
+        g_bar, gw, infl, w_new, sl_new = out[:5]
+        st = state._replace(
             g_bar=g_bar, g_workers=gw, inflight=infl,
             acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
             step=state.step + 1,
         )
+        if self.compressed:
+            st = st._replace(gw_scale=out[5], infl_scale=out[6])
         return st, g_bar, w_new, FlatOptState(t_new, sl_new)
 
     # ----------------------------------------------------- backend driver
@@ -438,37 +585,70 @@ class DuDeEngine:
                                        masks_to_indices_jnp(b, n)[:k])
         return self._round_reference(st, f, a, b)
 
+    def _round_plain_q(self, st, f, a, b):
+        """Compressed-slab twin of ``_round_plain``; returns
+        ``(g_bar, gw_q, infl_q, gw_scale, infl_scale)``."""
+        if self.backend == "pallas":
+            out = self._round_pallas_q(st, f, a, b, None, None)
+            return out[:5]
+        if self.backend == "indexed":
+            n = self.n_workers
+            k = self.index_width or n
+            return self._round_indexed_q(
+                st, f, masks_to_indices_jnp(a, n)[:k],
+                masks_to_indices_jnp(b, n)[:k])
+        return self._round_reference_q(st, f, a, b)
+
     def _run_backend(self, state, fresh, sm, cm, params, eta):
         """Dispatch one round to the backend, under shard_map when meshed.
 
         The body is elementwise on P (masks/indices are replicated and the
-        worker-axis reduction stays inside each P-shard), so the sharded
-        round needs no collective at all.
+        worker-axis reduction stays inside each P-shard; scale tiles align
+        with shard boundaries), so the sharded round needs no collective at
+        all.  Returns ``(g_bar, gw, infl, scales_or_None, params_or_None)``
+        with ``scales = (gw_scale, infl_scale)`` under compressed formats.
         """
         has_params = params is not None
+        compressed = self.compressed
 
         def body(st, f, a, b, *wargs):
             w = wargs[0] if wargs else None
             if self.backend == "pallas":
-                g_bar, gw, infl, w_new = self._round_pallas(
-                    st, f, a, b, w, eta)
+                if compressed:
+                    g_bar, gw, infl, gw_s, infl_s, w_new = \
+                        self._round_pallas_q(st, f, a, b, w, eta)
+                    scales = (gw_s, infl_s)
+                else:
+                    g_bar, gw, infl, w_new = self._round_pallas(
+                        st, f, a, b, w, eta)
+                    scales = ()
             else:
-                g_bar, gw, infl = self._round_plain(st, f, a, b)
+                if compressed:
+                    g_bar, gw, infl, gw_s, infl_s = self._round_plain_q(
+                        st, f, a, b)
+                    scales = (gw_s, infl_s)
+                else:
+                    g_bar, gw, infl = self._round_plain(st, f, a, b)
+                    scales = ()
                 w_new = None
                 if w is not None:
                     w_new = (w.astype(jnp.float32)
                              - jnp.float32(eta) * g_bar).astype(w.dtype)
-            return (g_bar, gw, infl) + ((w_new,) if wargs else ())
+            return (g_bar, gw, infl) + scales + ((w_new,) if wargs else ())
 
         wargs = (params,) if has_params else ()
+        n_scales = 2 if compressed else 0
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
             body = self._shmap(
                 body,
                 in_specs=(sspec, row, repl, repl) + (vec,) * len(wargs),
-                out_specs=(vec, row, row) + (vec,) * len(wargs))
+                out_specs=(vec, row, row) + (row,) * n_scales
+                + (vec,) * len(wargs))
         out = body(state, fresh, sm, cm, *wargs)
-        return out[0], out[1], out[2], (out[3] if has_params else None)
+        scales = (out[3], out[4]) if compressed else None
+        w_new = out[3 + n_scales] if has_params else None
+        return out[0], out[1], out[2], scales, w_new
 
     def _index_overflow_check(self, sm, cm):
         """Satellite of the indexed backend: |C_t| > index_width silently
@@ -546,3 +726,63 @@ class DuDeEngine:
             tile=self.tile, interpret=self._interpret(),
         )
         return g_bar, gw, infl, (w_new if params is not None else None)
+
+    # ------------------------------------------------ compressed backends
+
+    def _round_reference_q(self, state, fresh, sm, cm):
+        """Masked full sweep over quantized slabs: dequantize both slabs,
+        fold the delta in f32, copy committed rows quantized (payload +
+        scales, no re-quantization), latch fresh rows through the codec."""
+        codec = self.codec
+        infl32 = codec.decode(state.inflight, state.infl_scale)
+        gw32 = codec.decode(state.g_workers, state.gw_scale)
+        delta = cm.astype(jnp.float32)[:, None] * (infl32 - gw32)
+        g_bar = state.g_bar + jnp.sum(delta, axis=0) / self.n_workers
+        gw_q = jnp.where(cm[:, None], state.inflight, state.g_workers)
+        gw_s = jnp.where(cm[:, None], state.infl_scale, state.gw_scale)
+        q_f, s_f = codec.encode(fresh.astype(jnp.float32))
+        infl_q = jnp.where(sm[:, None], q_f, state.inflight)
+        infl_s = jnp.where(sm[:, None], s_f, state.infl_scale)
+        return g_bar, gw_q, infl_q, gw_s, infl_s
+
+    def _round_indexed_q(self, state, fresh, start_idx, commit_idx):
+        """Gather/scatter twin on the k selected quantized rows only."""
+        n = self.n_workers
+        codec = self.codec
+        rows_in_q = jnp.take(state.inflight, commit_idx, axis=0,
+                             mode="fill", fill_value=0)
+        rows_in_s = jnp.take(state.infl_scale, commit_idx, axis=0,
+                             mode="fill", fill_value=0)
+        rows_gw_q = jnp.take(state.g_workers, commit_idx, axis=0,
+                             mode="fill", fill_value=0)
+        rows_gw_s = jnp.take(state.gw_scale, commit_idx, axis=0,
+                             mode="fill", fill_value=0)
+        rows_in = codec.decode(rows_in_q, rows_in_s)
+        rows_gw = codec.decode(rows_gw_q, rows_gw_s)
+        valid = (commit_idx < n).astype(jnp.float32)[:, None]
+        g_bar = state.g_bar + jnp.sum((rows_in - rows_gw) * valid, axis=0) / n
+        gw_q = state.g_workers.at[commit_idx].set(rows_in_q, mode="drop")
+        gw_s = state.gw_scale.at[commit_idx].set(rows_in_s, mode="drop")
+        fresh_rows = jnp.take(fresh.astype(jnp.float32), start_idx, axis=0,
+                              mode="fill", fill_value=0)
+        q_f, s_f = codec.encode(fresh_rows)
+        infl_q = state.inflight.at[start_idx].set(q_f, mode="drop")
+        infl_s = state.infl_scale.at[start_idx].set(s_f, mode="drop")
+        return g_bar, gw_q, infl_q, gw_s, infl_s
+
+    def _round_pallas_q(self, state, fresh, sm, cm, params, eta):
+        """Fused quantized kernel; optional in-pass SGD apply.  Returns
+        ``(g_bar, gw_q, infl_q, gw_scale, infl_scale, params')``."""
+        codec = self.codec
+        w = params if params is not None else jnp.zeros_like(state.g_bar)
+        gw_q, gw_s, infl_q, infl_s, g_bar, w_new, _ = \
+            dude_round_apply_q_pallas(
+                cm, sm, fresh.astype(jnp.float32), state.g_workers,
+                state.gw_scale, state.inflight, state.infl_scale,
+                state.g_bar, w, kind="sgd",
+                hp=(("lr", float(eta) if eta is not None else 0.0),),
+                fmt=codec.format, topk=codec.topk, tile=self.tile,
+                interpret=self._interpret(),
+            )
+        return g_bar, gw_q, infl_q, gw_s, infl_s, \
+            (w_new if params is not None else None)

@@ -23,6 +23,14 @@ instance owns a [n_workers, TILE] slab of the stacked buffers and a [TILE]
 slice of g_bar/params/slots in VMEM.  TILE defaults to 2048 lanes x 8
 sublanes f32 = 64 KiB per stream — all streams resident fit easily in VMEM
 while keeping the DMA pipeline deep.
+
+Compressed slabs (``dude_round_apply_q_pallas``): when the engine's
+``commit_format`` is ``int8_ef``/``topk_ef`` the worker slabs are stored as
+int8 payloads + per-128-lane-tile f32 scale rows (``core/compression.py``).
+The quantized kernel streams q-rows and scale rows through the same single
+pass, dequantizing both slabs in VMEM, folding the commit delta in f32,
+copying committed rows quantized (no re-quantization), and quantizing the
+fresh latch rows in-kernel — cutting the dominant slab traffic ~4x.
 """
 
 from __future__ import annotations
@@ -37,6 +45,38 @@ DEFAULT_TILE = 16384  # f32 elements per program instance per stream row
 
 # slot streams per optimizer kind: () | ("m",) | ("m", "v")
 SLOT_STREAMS = {"sgd": 0, "momentum": 1, "adamw": 2}
+
+
+def _opt_apply(g, w_ref, slot_refs, bc_ref, w_out, slot_outs,
+               kind: str, hp: dict):
+    """Fused optimizer tail shared by the f32 and quantized round kernels.
+
+    Mirrors ``optim.transforms.FlatOptimizer.update`` op-for-op so the fused
+    path stays bit-exact against the unfused flat apply.
+    """
+    w = w_ref[...]
+    if kind == "sgd":
+        w_out[...] = w - hp["lr"] * g
+    elif kind == "momentum":
+        (m_ref,) = slot_refs
+        m = hp["beta"] * m_ref[...] + g
+        d = hp["beta"] * m + g if hp["nesterov"] else m
+        w_out[...] = w - hp["lr"] * d
+        slot_outs[0][...] = m
+    elif kind == "adamw":
+        m_ref, v_ref = slot_refs
+        b1, b2 = hp["b1"], hp["b2"]
+        m = b1 * m_ref[...] + (1 - b1) * g
+        v = b2 * v_ref[...] + (1 - b2) * jnp.square(g)
+        bc = bc_ref[...]
+        bc1, bc2 = bc[0], bc[1]
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + hp["eps"]) \
+            + hp["weight_decay"] * w
+        w_out[...] = w - hp["lr"] * step
+        slot_outs[0][...] = m
+        slot_outs[1][...] = v
+    else:
+        raise ValueError(f"unknown optimizer kind {kind!r}")
 
 
 def _round_apply_kernel(*refs, n_workers: int, kind: str, hp: tuple):
@@ -68,30 +108,63 @@ def _round_apply_kernel(*refs, n_workers: int, kind: str, hp: tuple):
     infl_out[...] = infl_new.astype(infl_out.dtype)
     gbar_out[...] = g
 
-    # ------- fused optimizer apply (mirrors FlatOptimizer.update) -------
-    w = w_ref[...]
-    if kind == "sgd":
-        w_out[...] = w - hp["lr"] * g
-    elif kind == "momentum":
-        (m_ref,) = rest_in
-        m = hp["beta"] * m_ref[...] + g
-        d = hp["beta"] * m + g if hp["nesterov"] else m
-        w_out[...] = w - hp["lr"] * d
-        slot_outs[0][...] = m
-    elif kind == "adamw":
-        m_ref, v_ref, bc_ref = rest_in
-        b1, b2 = hp["b1"], hp["b2"]
-        m = b1 * m_ref[...] + (1 - b1) * g
-        v = b2 * v_ref[...] + (1 - b2) * jnp.square(g)
-        bc = bc_ref[...]
-        bc1, bc2 = bc[0], bc[1]
-        step = (m / bc1) / (jnp.sqrt(v / bc2) + hp["eps"]) \
-            + hp["weight_decay"] * w
-        w_out[...] = w - hp["lr"] * step
-        slot_outs[0][...] = m
-        slot_outs[1][...] = v
-    else:
-        raise ValueError(f"unknown optimizer kind {kind!r}")
+    slot_refs = rest_in[:n_slots]
+    bc_ref = rest_in[n_slots] if kind == "adamw" else None
+    _opt_apply(g, w_ref, slot_refs, bc_ref, w_out, slot_outs, kind, hp)
+
+
+def _round_apply_q_kernel(*refs, n_workers: int, kind: str, hp: tuple,
+                          fmt: str, topk: int):
+    """Quantized-slab twin of ``_round_apply_kernel``.
+
+    The ``[n, T]`` worker slabs arrive as int8 payloads plus per-128-lane-tile
+    f32 scale rows ``[n, T/128]``; dequantization of both slabs and the int8
+    latch quantization of the fresh rows are fused into the same single pass.
+    Committed rows copy the *quantized* in-flight payload (q + scale) verbatim
+    — no re-quantization — so the incremental invariant
+    ``g_bar == mean_i dec(g_workers[i])`` is preserved exactly.  The codec
+    math is the shared ``core.compression`` ops, so this kernel is
+    bit-identical to the plain-jnp reference/indexed twins.
+
+    refs layout (in): cm[n], sm[n], fresh[n,T], gw_q[n,T]i8, gw_s[n,T/128],
+    in_q[n,T]i8, in_s[n,T/128], gbar[T], w[T], slots*[T], (bc[2] for adamw);
+    (out): gw_q, gw_s, in_q, in_s, gbar, w, slots*.
+    """
+    from ..core.compression import dequantize, quantize, topk_mask
+
+    hp = dict(hp)
+    n_slots = SLOT_STREAMS[kind]
+    n_in = 9 + n_slots + (1 if kind == "adamw" else 0)
+    (cm_ref, sm_ref, fresh_ref, gwq_ref, gws_ref, inq_ref, ins_ref,
+     gbar_ref, w_ref, *rest_in) = refs[:n_in]
+    (gwq_out, gws_out, inq_out, ins_out, gbar_out, w_out,
+     *slot_outs) = refs[n_in:]
+
+    cm = cm_ref[...].astype(jnp.float32)  # [n]
+    sm = sm_ref[...]                       # [n] bool
+    fresh = fresh_ref[...].astype(jnp.float32)   # [n, T]
+    gwq, gws = gwq_ref[...], gws_ref[...]
+    inq, ins = inq_ref[...], ins_ref[...]
+    gbar = gbar_ref[...]                          # [T] f32
+
+    gw = dequantize(gwq, gws)
+    infl = dequantize(inq, ins)
+    delta = cm[:, None] * (infl - gw)
+    g = gbar + jnp.sum(delta, axis=0) / n_workers
+
+    commit = cm[:, None] > 0
+    gwq_out[...] = jnp.where(commit, inq, gwq)
+    gws_out[...] = jnp.where(commit, ins, gws)
+
+    latch = topk_mask(fresh, topk) if fmt == "topk_ef" else fresh
+    qf, sf = quantize(latch)
+    inq_out[...] = jnp.where(sm[:, None], qf, inq)
+    ins_out[...] = jnp.where(sm[:, None], sf, ins)
+    gbar_out[...] = g
+
+    slot_refs = rest_in[:n_slots]
+    bc_ref = rest_in[n_slots] if kind == "adamw" else None
+    _opt_apply(g, w_ref, slot_refs, bc_ref, w_out, slot_outs, kind, hp)
 
 
 def dude_round_apply_pallas(
@@ -152,6 +225,83 @@ def dude_round_apply_pallas(
     )(*args)
     gw_new, infl_new, gbar_new, w_new = out[:4]
     return gw_new, infl_new, gbar_new, w_new, tuple(out[4:])
+
+
+def dude_round_apply_q_pallas(
+    commit_mask: jnp.ndarray,   # [n] bool
+    start_mask: jnp.ndarray,    # [n] bool
+    fresh: jnp.ndarray,         # [n, P] f32 fresh gradients (live model)
+    gw_q: jnp.ndarray,          # [n, P] int8 committed-gradient payload
+    gw_scale: jnp.ndarray,      # [n, P/128] f32 per-tile scales
+    in_q: jnp.ndarray,          # [n, P] int8 in-flight payload
+    in_scale: jnp.ndarray,      # [n, P/128] f32
+    g_bar: jnp.ndarray,         # [P] f32
+    w: jnp.ndarray,             # [P] f32 flat master params
+    slots: tuple = (),          # optimizer slot slabs, each [P] f32
+    bias_corr: jnp.ndarray | None = None,  # [2] f32 (adamw only)
+    *,
+    kind: str = "sgd",
+    hp: tuple = (("lr", 0.0),),
+    fmt: str = "int8_ef",
+    topk: int = 16,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+):
+    """Fused round + apply over quantized slabs.  Returns
+    ``(gw_q', gw_scale', in_q', in_scale', g_bar', w', slots')``.
+
+    Streams the int8 q-rows and their f32 scale rows through the same 1-D
+    tile grid as the f32 kernel; each program instance additionally owns a
+    ``[n, tile/128]`` slice of both scale slabs.  ``tile`` must be a multiple
+    of the 128-lane scale granularity (engine tiles always are).
+    """
+    from ..core.compression import TILE as QTILE
+
+    n, P = fresh.shape
+    t = P // QTILE
+    assert gw_q.shape == (n, P) and in_q.shape == (n, P)
+    assert gw_scale.shape == (n, t) and in_scale.shape == (n, t)
+    assert g_bar.shape == (P,) and w.shape == (P,)
+    n_slots = SLOT_STREAMS[kind]
+    assert len(slots) == n_slots, (kind, len(slots))
+    assert (bias_corr is not None) == (kind == "adamw")
+    tile = min(tile, P)
+    assert P % tile == 0 and tile % QTILE == 0, f"P={P} tile={tile}"
+    grid = (P // tile,)
+
+    row = pl.BlockSpec((n, tile), lambda i: (0, i))
+    srow = pl.BlockSpec((n, tile // QTILE), lambda i: (0, i))
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    mask = pl.BlockSpec((n,), lambda i: (0,))
+    sc2 = pl.BlockSpec((2,), lambda i: (0,))
+
+    in_specs = [mask, mask, row, row, srow, row, srow, vec, vec] \
+        + [vec] * n_slots
+    args = [commit_mask.astype(jnp.float32), start_mask,
+            fresh.astype(jnp.float32), gw_q, gw_scale, in_q, in_scale,
+            g_bar, w] + list(slots)
+    if kind == "adamw":
+        in_specs.append(sc2)
+        args.append(bias_corr.astype(jnp.float32))
+
+    kernel = functools.partial(_round_apply_q_kernel, n_workers=n, kind=kind,
+                               hp=tuple(hp), fmt=fmt, topk=topk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[row, srow, row, srow, vec, vec] + [vec] * n_slots,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, P), jnp.int8),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, P), jnp.int8),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), w.dtype),
+        ] + [jax.ShapeDtypeStruct((P,), jnp.float32)] * n_slots,
+        interpret=interpret,
+    )(*args)
+    return out[0], out[1], out[2], out[3], out[4], out[5], tuple(out[6:])
 
 
 def dude_update_pallas(

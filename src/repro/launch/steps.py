@@ -114,6 +114,10 @@ class TrainOptions:
                                    # from the P-shards into the Megatron-TP
                                    # leaf layout, no full [P] anywhere
                                    # (needs a mesh-native engine)
+    commit_format: str = "f32"     # slab storage / commit wire format:
+                                   # "f32" | "int8_ef" | "topk_ef"
+                                   # (core/compression.py; docs/engine.md
+                                   # "Compressed slabs")
 
     def __post_init__(self):
         if self.params_layout not in PARAMS_LAYOUTS:
@@ -144,6 +148,7 @@ def make_engine(cfg: ModelConfig, mesh=None,
         buffer_dtype=dude_cfg.buffer_dtype or jnp.float32,
         accumulate=dude_cfg.accumulate, backend=options.backend,
         mesh=engine_mesh, axis_name=paxes,
+        commit_format=options.commit_format,
     )
 
 

@@ -37,7 +37,8 @@ import numpy as np
 from repro.api import CheckpointPolicy, ConfigError, Trainer, TrainerConfig
 from repro.api.config import OPTIMIZERS
 from repro.core import (
-    ASYNC_ALGOS, BACKENDS, ROUND_ALGOS, delay_stats, make_round_schedule,
+    ASYNC_ALGOS, BACKENDS, COMMIT_FORMATS, ROUND_ALGOS, delay_stats,
+    make_round_schedule,
     truncated_normal_speeds,
 )
 from repro.data import make_token_sampler
@@ -77,6 +78,12 @@ def main():
                     choices=list(BACKENDS),
                     help="ServerEngine update path for the DuDe round "
                          "(pallas = fused kernel; interpret mode on CPU)")
+    ap.add_argument("--commit-format", default="f32",
+                    choices=list(COMMIT_FORMATS),
+                    help="engine slab storage / commit wire format: f32, "
+                         "int8_ef (tiled int8 + error feedback) or topk_ef "
+                         "(per-tile magnitude top-k before int8) — "
+                         "docs/engine.md 'Compressed slabs'")
     ap.add_argument("--mesh", default="none",
                     help='"DxM" (data x model) host mesh, or "none"')
     ap.add_argument("--params-layout", default="replicated",
@@ -123,6 +130,7 @@ def main():
             arch=args.arch, smoke=args.smoke, algo=args.algo,
             optimizer=args.opt, lr=args.lr,
             server_backend=args.server_backend,
+            commit_format=args.commit_format,
             mesh=parse_mesh(args.mesh),
             params_layout=args.params_layout,
             fedbuff_buffer_size=args.fedbuff_buffer_size,

@@ -20,7 +20,11 @@ Differences from the simulator, by design:
 * worker model snapshots are flat ``[P]`` vectors (n of them — the price of
   physical staleness), handed out by the loop's ``deliver`` hook.  The
   arrival step therefore does NOT donate its state: the freshest snapshot
-  aliases ``state.params``.
+  aliases ``state.params``.  Under a compressed ``commit_format`` the n
+  snapshots are delta-encoded (tiled int8, ``core/compression.py``) against
+  the run-start master instead of stored as full copies — ~3.9x less
+  snapshot memory; commits themselves are compressed inside
+  ``DuDeEngine.commit`` (int8 payload + per-tile scales + EF residual).
 
 Documented in docs/async.md ("The AsyncRunner" / "In-flight depth and the
 device queue").
@@ -134,6 +138,21 @@ class AsyncRunner:
                               **ravel_kw)
         # NOT donated: the freshest worker snapshot aliases state.params
         self._step = jax.jit(self._arrival_step)
+        # Compressed commit formats also delta-encode the n worker model
+        # snapshots against a fixed master base (run() start) instead of
+        # keeping n full [P] f32 copies: snapshot w is stored as the tiled
+        # int8 encoding of (master - base), reconstructed lazily at gradient
+        # time.  Physical-staleness memory drops from 4nP to
+        # ~nP(1 + 4/128) + 4P bytes.  The f32 format keeps the exact
+        # aliasing path (trace replays stay bit-for-bit).
+        codec = engine.codec
+        self._compressed = codec.compressed
+        if self._compressed:
+            self._snap_encode = jax.jit(
+                lambda params, base: codec.encode(
+                    params.astype(jnp.float32) - base))
+            self._snap_unravel = jax.jit(
+                lambda base, q, s: spec.unravel(base + codec.decode(q, s)))
 
     def _arrival_step(self, state: FlatTrainState, worker, grad):
         """One server iteration: algo rule (commit for DuDe) + flat apply,
@@ -182,15 +201,28 @@ class AsyncRunner:
         queue = DeviceQueue(self.queue_depth)
 
         # every worker starts on the initial model (version 0)
-        worker_params = [state.params for _ in range(n)]
+        if self._compressed:
+            # delta-encoded snapshots against the run-start master; the
+            # zero delta (q=0 decodes to exactly 0) is shared across workers
+            base = state.params
+            zero_delta = self._snap_encode(base, base)
+            worker_snaps = [zero_delta for _ in range(n)]
+            worker_params = None
+        else:
+            worker_params = [state.params for _ in range(n)]
         box = {"state": state, "key": key, "running": None, "n_grads": 0}
         times, iters, losses, gnorms = [], [], [], []
+
+        def worker_model(w: int) -> Pytree:
+            if self._compressed:
+                q, s = worker_snaps[w]
+                return self._snap_unravel(base, q, s)
+            return self._unravel(worker_params[w])
 
         def on_arrival(view) -> bool:
             box["key"], k1 = jax.random.split(box["key"])
             batch = sample_fn(view.worker, rng)
-            loss, g = self._grad(self._unravel(worker_params[view.worker]),
-                                 batch, k1)
+            loss, g = self._grad(worker_model(view.worker), batch, k1)
             gflat = self._ravel(g)
             box["n_grads"] += 1
             box["state"], g_dir = self._step(box["state"],
@@ -216,7 +248,11 @@ class AsyncRunner:
             return True  # every async rule applies every arrival
 
         def deliver(worker: int) -> None:
-            worker_params[worker] = box["state"].params
+            if self._compressed:
+                worker_snaps[worker] = self._snap_encode(
+                    box["state"].params, base)
+            else:
+                worker_params[worker] = box["state"].params
 
         stats = drive_arrivals(
             process, total_iters, on_arrival, deliver,

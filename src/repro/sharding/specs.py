@@ -184,8 +184,8 @@ def dude_state_shardings(params: Pytree, mesh: Mesh, n_workers: int) -> dict:
     }
 
 
-def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
-                           axes: Any = None) -> EngineState:
+def engine_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
+                           like: Any = None) -> EngineState:
     """NamedShardings for the flat ``EngineState`` of a ServerEngine.
 
     The P axis is split into the contiguous segment ranges of the spec's
@@ -197,6 +197,15 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
     Following the module's convention, an axis product that does not divide
     ``spec.padded_size`` drops to replication (build the spec with
     ``make_flat_spec(tree, mesh_axis_size=k)`` to guarantee divisibility).
+
+    ``like`` — an ``EngineState`` of arrays/ShapeDtypeStructs whose
+    None-ness the result mirrors.  Compressed commit formats
+    (``core/compression.py``) populate the trailing slots: the ``[n, P/128]``
+    scale slabs shard their trailing dim like the ``[n, P]`` rows (tile
+    boundaries align with shard boundaries because ``P/k`` is a multiple of
+    128) and the ``[P]`` EF residual shards like ``g_bar``.  With ``like``
+    omitted (or an f32 state) those fields stay ``None``, preserving the
+    historical 5-field structure exactly.
     """
     if axes is None:
         axes = tuple(mesh.axis_names)
@@ -208,12 +217,16 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh,
         vec, row = P(), P()
     else:
         vec, row = P(axes), P(None, axes)
+    compressed = like is not None and like.ef is not None
     return EngineState(
         g_bar=NamedSharding(mesh, vec),
         g_workers=NamedSharding(mesh, row),
         inflight=NamedSharding(mesh, row),
         acc_count=NamedSharding(mesh, P()),
         step=NamedSharding(mesh, P()),
+        gw_scale=NamedSharding(mesh, row) if compressed else None,
+        infl_scale=NamedSharding(mesh, row) if compressed else None,
+        ef=NamedSharding(mesh, vec) if compressed else None,
     )
 
 
@@ -270,7 +283,7 @@ def flat_train_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
     other ``RoundAlgo`` state).  ``opt_state_like`` supplies the slot tree
     structure (arrays or ShapeDtypeStructs; ``None`` means no slots)."""
     if server_like is None or isinstance(server_like, EngineState):
-        srv_sh = engine_state_shardings(spec, mesh, axes)
+        srv_sh = engine_state_shardings(spec, mesh, axes, like=server_like)
         vec = srv_sh.g_bar
     else:
         srv_sh = flat_slab_shardings(server_like, spec, mesh, axes)

@@ -16,7 +16,9 @@ from repro.core import (
     DuDeConfig, dude_commit, dude_init, dude_round,
     make_round_schedule, truncated_normal_speeds,
 )
-from repro.core.compression import ef_encode, dequantize, quantize
+from repro.core.compression import (
+    CommitCodec, dequantize, quantize, topk_mask,
+)
 from repro.data import dirichlet_partition, label_distribution
 
 SET = settings(max_examples=25, deadline=None)
@@ -92,37 +94,83 @@ def test_dirichlet_partition_valid(n, alpha, seed):
 
 @SET
 @given(
-    shape=st.sampled_from([(8,), (4, 8), (16, 3)]),
+    tiles=st.integers(1, 4),
     scale=st.floats(1e-3, 1e3),
     seed=st.integers(0, 1000),
 )
-def test_quantize_bounded_error(shape, scale, seed):
+def test_quantize_bounded_error(tiles, scale, seed):
+    """Tiled int8 quantization error is bounded PER 128-lane TILE: each
+    lane's error <= its own tile's scale/2 (plus rounding slack), so a
+    large-magnitude tile cannot degrade a small-magnitude one."""
+    P = tiles * 128
     x = jnp.asarray(
-        np.random.default_rng(seed).normal(size=shape) * scale, jnp.float32
+        np.random.default_rng(seed).normal(size=P) * scale, jnp.float32
     )
-    q = quantize(x)
-    err = jnp.max(jnp.abs(dequantize(q) - x))
-    bound = jnp.max(jnp.abs(x)) / 127.0 + 1e-9
-    assert float(err) <= float(bound) * 1.01
+    q, s = quantize(x)
+    assert q.dtype == jnp.int8 and s.shape == (tiles,)
+    err = jnp.abs(dequantize(q, s) - x).reshape(tiles, 128)
+    codec = CommitCodec(format="int8_ef")
+    bound = codec.quant_bound(x)            # per-tile [T] bound
+    assert bound.shape == (tiles,)
+    assert bool(jnp.all(jnp.max(err, axis=-1) <= bound))
+    # the bound is genuinely per-tile: the pow2 scale sits in
+    # [max/127, 2*max/127), so the bound tracks each tile's own max
+    raw = np.maximum(np.max(np.abs(np.asarray(x)).reshape(tiles, 128),
+                            axis=-1), 1e-12) / 127.0
+    b = np.asarray(bound)
+    assert (b >= 0.5 * raw).all() and (b <= raw * 1.001).all()
+    # scales are exact powers of two (the exactness ingredient)
+    assert (np.asarray(s) == np.exp2(np.round(np.log2(np.asarray(s))))).all()
 
 
 @SET
 @given(seed=st.integers(0, 1000), steps=st.integers(1, 20))
 def test_error_feedback_telescopes(seed, steps):
-    """Sum of EF-decoded commits == sum of true values minus final residual
-    (the EF-SGD unbiasedness-in-the-limit identity)."""
+    """Sum of EF-decoded commits + final residual == sum of true values
+    BITWISE (the Sterbenz-exactness identity dec + ef' == x + ef holds per
+    step, so the telescoped sums match to f32 accumulation roundoff)."""
+    codec = CommitCodec(format="int8_ef")
     rng = np.random.default_rng(seed)
-    err = jnp.zeros(6)
-    total_true = jnp.zeros(6)
-    total_sent = jnp.zeros(6)
+    ef = jnp.zeros(128)
+    total_true = jnp.zeros(128)
+    total_sent = jnp.zeros(128)
     for _ in range(steps):
-        x = jnp.asarray(rng.normal(size=6), jnp.float32)
-        q, err = ef_encode(x, err)
+        x = jnp.asarray(rng.normal(size=128), jnp.float32)
+        q, s, dec, ef_new = codec.encode_commit(x, ef)
+        # per-step bitwise identity: dec + ef' == x + ef
+        np.testing.assert_array_equal(
+            np.asarray(dec + ef_new), np.asarray(x + ef))
+        ef = ef_new
         total_true = total_true + x
-        total_sent = total_sent + dequantize(q)
+        total_sent = total_sent + dec
     np.testing.assert_allclose(
-        np.asarray(total_sent + err), np.asarray(total_true), atol=1e-4
+        np.asarray(total_sent + ef), np.asarray(total_true), atol=1e-4
     )
+
+
+@SET
+@given(
+    tiles=st.integers(1, 3),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_topk_mask_keeps_largest(tiles, k, seed):
+    """Per-tile top-k mask keeps at least k lanes per tile, every kept lane
+    is >= every dropped lane in magnitude, and kept lanes pass through
+    unchanged."""
+    P = tiles * 128
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=P), jnp.float32)
+    m = topk_mask(x, k)
+    xt = np.asarray(x).reshape(tiles, 128)
+    mt = np.asarray(m).reshape(tiles, 128)
+    for t in range(tiles):
+        kept = np.abs(xt[t])[mt[t] != 0]
+        dropped = np.abs(xt[t])[mt[t] == 0]
+        assert len(kept) >= k  # ties may keep extras (threshold-based)
+        if len(dropped):
+            assert kept.min() >= dropped.max()
+        np.testing.assert_array_equal(mt[t][mt[t] != 0],
+                                      xt[t][mt[t] != 0])
 
 
 @SET
@@ -271,48 +319,51 @@ def test_dude_round_masks_arbitrary(n, seed):
 
 @SET
 @given(seed=st.integers(0, 300))
-def test_compressed_dude_preserves_invariant(seed):
-    """Compressed-delta DuDe: g_bar must equal the mean of the (decoded)
-    stored buffers at every step — the incremental invariant survives
-    quantization exactly because server and worker apply the same decoded
-    delta."""
-    from repro.core.compression import compressed_commit
-    from repro.core.dude import DuDeConfig, dude_init
-    import jax
-    import jax.numpy as jnp
+def test_compressed_engine_preserves_invariant(seed):
+    """Compressed-slab DuDe engine: g_bar must track the mean of the DECODED
+    stored rows at every commit — the incremental invariant survives
+    quantization because the server folds decoded-new minus decoded-old."""
+    from repro.core.engine import DuDeEngine
     rng = np.random.default_rng(seed)
     n = 3
-    cfg = DuDeConfig(n_workers=n)
-    like = {"w": jnp.zeros(5)}
-    stt = dude_init(like, cfg)
-    err = {"w": jnp.zeros((5,))}
+    eng = DuDeEngine.for_tree({"w": jnp.zeros(130)}, n_workers=n,
+                              commit_format="int8_ef")
+    stt = eng.init()
+    codec = eng.codec
     for t in range(12):
         i = int(rng.integers(n))
-        g = {"w": jnp.asarray(rng.normal(size=5), jnp.float32)}
-        stt, gbar, err = compressed_commit(stt, jnp.int32(i), g, err, cfg)
-        mean_buf = np.asarray(stt.g_workers["w"]).astype(np.float32).mean(axis=0)
-        np.testing.assert_allclose(np.asarray(gbar["w"]), mean_buf, atol=1e-4)
+        g = eng.spec.ravel(
+            {"w": jnp.asarray(rng.normal(size=130), jnp.float32)})
+        stt, gbar = eng.commit(stt, jnp.int32(i), g)
+        decoded = codec.decode(stt.g_workers, stt.gw_scale)
+        mean_buf = np.asarray(decoded).mean(axis=0)
+        np.testing.assert_allclose(np.asarray(gbar), mean_buf, atol=1e-4)
 
 
-def test_compressed_dude_converges_quadratic():
-    """int8+EF compressed DuDe still reaches the true optimum (EF telescopes);
-    the wire payload is 4x smaller than f32 deltas."""
-    from repro.core.compression import compressed_commit
-    from repro.core.dude import DuDeConfig, dude_init
-    import jax
-    import jax.numpy as jnp
+def test_compressed_engine_converges_quadratic():
+    """int8+EF compressed commits still reach the true optimum of a
+    heterogeneous quadratic (EF telescopes); the wire payload is ~3.9x
+    smaller than f32 commits."""
+    from repro.core.engine import DuDeEngine
     rng = np.random.default_rng(0)
-    n, P = 4, 6
+    n, P = 4, 128
     A = [np.diag(rng.uniform(0.5, 2.0, P)) for _ in range(n)]
     b = [rng.normal(size=P) * 3 for _ in range(n)]
     wstar = np.linalg.solve(sum(A) / n, sum(b) / n)
-    cfg = DuDeConfig(n_workers=n)
-    stt = dude_init(jnp.zeros(P), cfg)
-    errs = [jnp.zeros(P) for _ in range(n)]
+    eng = DuDeEngine.for_tree(jnp.zeros(P), n_workers=n,
+                              commit_format="int8_ef")
+    stt = eng.init()
     w = jnp.zeros(P)
+    commit = jax.jit(eng.commit)
     for t in range(600):
         i = t % n
         g = jnp.asarray(A[i] @ np.asarray(w) - b[i], jnp.float32)
-        stt, gbar, errs[i] = compressed_commit(stt, jnp.int32(i), g, errs[i], cfg)
-        w = w - 0.05 * gbar
+        stt, gbar = commit(stt, jnp.int32(i), g)
+        w = w - 0.05 * gbar[:P]
     assert np.linalg.norm(np.asarray(w) - wstar) < 0.05
+    # the headline byte accounting: >= 3x reduction on wire and in the slab
+    codec = eng.codec
+    assert codec.commit_wire_bytes(eng.spec.padded_size) * 3 \
+        <= 4 * eng.spec.padded_size
+    assert codec.slab_bytes(n, eng.spec.padded_size) * 3 \
+        <= 4 * n * eng.spec.padded_size
