@@ -52,11 +52,19 @@ resident ``[n, P]`` slab bytes (the HBM win), measured arrivals/sec (the
 quantize/dequantize cost), and the max |g_bar| error vs. the f32 engine
 checked against the tile-wise quantization bound.
 
-``--json-out`` (default ``benchmarks/BENCH_7.json``) writes every row as
+The sparse-transport sweep (docs/engine.md "Sparse commit transport")
+prices the ``topk_ef`` SparseRow wire format against the dense topk_ef row
+on structurally sparse gradients (a fixed number of touched 128-lane
+tiles): actual wire bytes per commit (O(k * tiles_touched) vs O(P)),
+measured server-side fold and worker-side encode throughput, and a bitwise
+|g_bar| pulse — the sparse scatter-fold must equal the dense commit
+bit-for-bit.
+
+``--json-out`` (default ``benchmarks/BENCH_8.json``) writes every row as
 machine-readable JSON — backend x (n, P) x sharded/unsharded, the
 round+apply grid, the session-dispatch rows, the arrival-throughput rows,
-the commit-format rows, and the unravel rows — so the perf trajectory is
-tracked across PRs.
+the commit-format rows, the sparse-transport rows, and the unravel rows —
+so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -399,6 +407,161 @@ def arrival_throughput_rows(points=((8, 1 << 14), (64, 1 << 16)),
         "derived": 1.0 / t_loop,        # arrivals/sec, loop included
         "extra": {"arrivals_per_s": 1.0 / t_loop, "iters": loop_iters},
     })
+
+    # sparse-transport loop: the same end-to-end run over SparseRow commits.
+    # The counters make the transport accountable: wire_bytes is what the
+    # arrivals actually shipped, snap_encodes/snap_reuses expose the
+    # delivery-side encode cache (the init zero-delta is encoded once and
+    # shared by all n workers; every applying delivery re-encodes).
+    eng_s = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef",
+                       sparse_meta=True)
+    runner_s = AsyncRunner(eng_s, "dude", FLAT_OPTS["sgd"],
+                           lambda p, b, k: (jnp.sum(p * b), p - b))
+    st_s = runner_s.init_state(tree)
+
+    def loop_sparse():
+        return runner_s.run(FixedArrivals(np.ones(n)), loop_iters, sample,
+                            st_s, record_every=10 ** 9)
+
+    jax.block_until_ready(loop_sparse().state.params)  # compile/warm
+    t0 = time.perf_counter()
+    res = loop_sparse()
+    jax.block_until_ready(res.state.params)
+    t_sloop = (time.perf_counter() - t0) / loop_iters
+    rows.append({
+        "name": f"runtime/arrival_throughput/runner_loop_sparse/n{n}_P{P0}",
+        "n": n, "P": spec.padded_size,
+        "us_per_call": 1e6 * t_sloop,
+        "derived": 1.0 / t_sloop,       # arrivals/sec, loop included
+        "extra": {"arrivals_per_s": 1.0 / t_sloop, "iters": loop_iters,
+                  "wire_rows": res.wire_rows, "wire_bytes": res.wire_bytes,
+                  "wire_bytes_per_arrival":
+                      res.wire_bytes / max(1, res.wire_rows),
+                  "snap_encodes": res.snap_encodes,
+                  "snap_reuses": res.snap_reuses},
+    })
+    return rows
+
+
+def sparse_transport_sweep(points=((8, 1 << 14), (64, 1 << 16)),
+                           tiles_touched: int = 32) -> list[dict]:
+    """SparseRow vs dense topk_ef commit transport on structurally sparse
+    gradients (docs/engine.md "Sparse commit transport").
+
+    Per (n, P), every worker's gradient touches the SAME ``tiles_touched``
+    of the ``P/128`` tiles (a stable hot set — structured sparsity).  The
+    shared set matters: the commit stream's error-feedback residual is one
+    ``[P]`` vector, so each encode target touches the UNION of all
+    previously committed tiles; a per-worker random set would grow that
+    union past any fixed cap within a few commits.  The sparse engine's
+    cap is ``2 * tiles_touched`` (headroom for the clear-set re-listing of
+    previously touched tiles), which the shared hot set never overflows —
+    keeping the pulse bitwise.
+
+    * ``wire_bytes_sparse`` / ``wire_bytes_dense`` — actual bytes of one
+      commit on the wire: ``sparse_wire_nbytes`` of the encoded row
+      (``cap * (2k + 8) + 4``, O(k * tiles_touched)) vs the dense topk_ef
+      row (``(2k + 4) * P/128``, O(P)); ``derived`` is the reduction;
+    * ``fold_arrivals_per_s`` — the server-side hot path (``sparse_fold`` +
+      flat sgd apply, touched tiles only) vs ``dense_arrivals_per_s``
+      (dense ``commit`` + apply, streaming the whole row);
+    * ``encode_us`` — the worker-side ``encode_sparse_commit`` cost;
+    * ``gbar_err_vs_dense`` — max |g_bar| difference after one commit per
+      worker, lockstep sparse vs dense.  MUST be exactly 0.0: the sparse
+      fold runs the identical elementwise update on gathered lanes and
+      scatter-sets the result, so it is bitwise equal to the dense commit.
+    """
+    from repro.core.algos import make_async_algo
+    from repro.core.compression import sparse_wire_nbytes
+    from repro.optim import FlatOptState
+
+    rows = []
+    key = jax.random.PRNGKey(31)
+    fopt = FLAT_OPTS["sgd"]
+    rng = np.random.default_rng(5)
+    for n, P in points:
+        spec = make_flat_spec(jnp.zeros((P,)))
+        Pp = spec.padded_size
+        dense = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef")
+        T = dense.codec.n_tiles(Pp)
+        touch = min(tiles_touched, T)
+        cap = min(2 * touch, T)
+        sparse = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef",
+                            sparse_meta=True, sparse_cap=cap)
+        # structurally sparse gradients: one shared hot-tile set (see above)
+        k_commit = min(n, 8)
+        ks = jax.random.split(jax.random.fold_in(key, n * P), 2)
+        g_full = np.asarray(jax.random.normal(ks[0], (k_commit, Pp)))
+        mask = np.zeros((T,), bool)
+        mask[rng.choice(T, touch, replace=False)] = True
+        gs = jnp.asarray(g_full * np.repeat(mask, dense.codec.tile))
+
+        # dense hot path: commit + flat sgd apply (the runner's step)
+        algo = make_async_algo("dude", dense)
+        w0 = jax.random.normal(ks[1], (Pp,))
+        ost = fopt.init(w0)
+
+        @jax.jit
+        def dstep(srv, w, o, wk, g, algo=algo, fopt=fopt):
+            srv, d = algo.arrival(srv, wk, g)
+            t = o.step + 1
+            w, sl = fopt.update(w, d, o.slots, t)
+            return srv, w, FlatOptState(t, sl)
+
+        dst = dense.init()
+        t_dense = _time(lambda s, w, o, wk, g: dstep(s, w, o, wk, g)[1],
+                        dst, w0, ost, jnp.int32(1), gs[1 % k_commit],
+                        reps=10)
+
+        # sparse split: worker-side encode, server-side fold + apply
+        enc = jax.jit(sparse.encode_sparse_commit)
+        sst = sparse.init()
+        t_enc = _time(lambda s, wk, g: enc(s, wk, g)[1].vals,
+                      sst, jnp.int32(1), gs[1 % k_commit], reps=10)
+        sst1, wire = enc(sst, jnp.int32(1), gs[1 % k_commit])
+
+        @jax.jit
+        def sstep(srv, w, o, wk, row, sparse=sparse, fopt=fopt):
+            srv, d = sparse.sparse_fold(srv, wk, row)
+            t = o.step + 1
+            w, sl = fopt.update(w, d, o.slots, t)
+            return srv, w, FlatOptState(t, sl)
+
+        t_fold = _time(lambda s, w, o, wk, r: sstep(s, w, o, wk, r)[1],
+                       sst1, w0, ost, jnp.int32(1), wire, reps=10)
+
+        # bitwise pulse: one commit per worker, lockstep dense vs sparse
+        dcommit = jax.jit(dense.commit)
+        sfold = jax.jit(sparse.sparse_fold)
+        d_st, s_st = dense.init(), sparse.init()
+        err = 0.0
+        for i in range(k_commit):
+            d_st, g_d = dcommit(d_st, jnp.int32(i), gs[i])
+            s_st, row = enc(s_st, jnp.int32(i), gs[i])
+            s_st, g_s = sfold(s_st, jnp.int32(i), row)
+            err = max(err, float(jnp.max(jnp.abs(g_d - g_s))))
+
+        wire_sparse = sparse_wire_nbytes(row)
+        wire_dense = dense.codec.commit_wire_bytes(Pp)
+        rows.append({
+            "name": f"compression/sparse_transport/n{n}_P{Pp}"
+                    f"_touch{touch}_cap{cap}",
+            "n": n, "P": Pp, "tiles": T,
+            "tiles_touched": touch, "cap": cap,
+            "us_per_call": 1e6 * t_fold,
+            "derived": wire_dense / wire_sparse,   # wire-byte reduction
+            "extra": {
+                "wire_bytes_sparse": wire_sparse,
+                "wire_bytes_dense": wire_dense,
+                "wire_bytes_sparse_analytic":
+                    sparse.codec.commit_wire_bytes(Pp, tiles_touched=cap),
+                "fold_arrivals_per_s": 1.0 / t_fold,
+                "dense_arrivals_per_s": 1.0 / t_dense,
+                "fold_vs_dense": t_dense / t_fold,
+                "encode_us": 1e6 * t_enc,
+                "gbar_err_vs_dense": err,
+            },
+        })
     return rows
 
 
@@ -614,6 +777,7 @@ def run(backend: str = "all") -> list[dict]:
     rows += session_dispatch_rows()
     rows += arrival_throughput_rows()
     rows += commit_format_sweep()
+    rows += sparse_transport_sweep()
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
@@ -689,7 +853,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_7.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_8.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -702,7 +866,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 7,
+                "pr": 8,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

@@ -118,6 +118,13 @@ class TrainerConfig:
                                         # "topk_ef" (per-tile magnitude
                                         # top-k before int8) — docs/engine.md
                                         # "Compressed slabs"
+    sparse_transport: bool = False      # topk_ef only: SparseRow commit
+                                        # transport + touched-tile engine
+                                        # metadata (docs/engine.md "Sparse
+                                        # commit transport")
+    sparse_cap: Optional[int] = None    # static touched-tile slots per
+                                        # SparseRow commit (None = all
+                                        # tiles; overflow re-enters via EF)
     fedbuff_buffer_size: int = 4        # fedbuff only: gradients per flush
     max_in_flight: Optional[int] = None  # async runs: bound on CONCURRENT
                                          # dispatched-but-unarrived jobs
@@ -154,6 +161,17 @@ class TrainerConfig:
                 "algo 'dude_accum' requires commit_format 'f32' (the "
                 "accumulate running-mean latch cannot keep quantized slabs "
                 f"exact); got commit_format={self.commit_format!r}")
+        if self.sparse_transport and self.commit_format != "topk_ef":
+            raise ConfigError(
+                "sparse_transport requires commit_format 'topk_ef' (the "
+                "SparseRow wire format carries per-tile top-k survivors; "
+                "f32/int8_ef payloads are dense); got "
+                f"commit_format={self.commit_format!r}")
+        if self.sparse_cap is not None:
+            if not self.sparse_transport:
+                raise ConfigError("sparse_cap requires sparse_transport=True")
+            if self.sparse_cap < 1:
+                raise ConfigError(f"sparse_cap={self.sparse_cap} < 1")
         if isinstance(self.optimizer, str) \
                 and self.optimizer not in OPTIMIZERS:
             raise ConfigError(
@@ -217,6 +235,8 @@ class TrainerConfig:
             shard_engine=self.shard_engine,
             params_layout=self.params_layout,
             commit_format=self.commit_format,
+            sparse_transport=self.sparse_transport,
+            sparse_cap=self.sparse_cap,
         )
 
     def make_optimizer(self) -> Optimizer:

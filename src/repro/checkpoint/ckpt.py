@@ -157,17 +157,57 @@ def checkpoint_format(directory: str, step: Optional[int] = None) -> str:
     return manifest.get("format", "pytree")
 
 
+# EngineState leaves that may be absent from an older checkpoint and are
+# derivable from what IS stored: the sparse-transport touched-tile bitmaps
+# (recomputed from the int8 payload slabs — the engine invariant is exactly
+# "bitmap == touched_tiles(q row)") and the indexed backend's drop counter
+# (restarts from zero).  Leaf name -> name of the payload slab it derives
+# from (None = zeros).
+_SYNTHESIZABLE = {"gw_touched": "g_workers", "in_touched": "inflight",
+                  "drops": None}
+
+
+def _leaf_name(path: str) -> str:
+    """Last path component, without the NamedTuple-field dot prefix
+    (``".engine/.gw_touched" -> "gw_touched"``)."""
+    return path.rsplit("/", 1)[-1].lstrip(".")
+
+
+def _synthesize(path: str, ref, by_path: dict) -> np.ndarray:
+    """Build a missing synthesizable leaf from its restored source slab."""
+    name = _leaf_name(path)
+    src_name = _SYNTHESIZABLE[name]
+    if src_name is None:
+        return np.zeros(ref.shape, np.dtype(ref.dtype))
+    tail = path.rsplit("/", 1)[-1]
+    src_path = (path[: len(path) - len(tail)]
+                + tail[: len(tail) - len(name)] + src_name)
+    src = by_path.get(src_path)
+    if src is None:
+        raise ValueError(
+            f"cannot synthesize {path}: {src_path} not in checkpoint")
+    t = ref.shape[-1]
+    tiles = src.reshape(src.shape[:-1] + (t, src.shape[-1] // t))
+    return np.any(tiles != 0, axis=-1).astype(np.int8)
+
+
 def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
                        flat_spec=None) -> Pytree:
     """Restore into the structure of ``like`` (validates paths/shapes).
 
     With ``flat_spec`` given and a flat checkpoint whose segment table
     matches, padded ``[..., P]`` slabs saved under a different
-    ``mesh_axis_size`` are refitted to the current padded size.
+    ``mesh_axis_size`` are refitted to the current padded size.  Leaves of
+    ``like`` missing from an older checkpoint are tolerated when derivable
+    (``_SYNTHESIZABLE``): sparse-transport touched bitmaps are recomputed
+    from the restored payload slabs, the drop counter restarts at zero.
     """
     manifest, data = _load(directory, step)
     paths, leaves = _paths_and_leaves(like)
-    if paths != manifest["paths"]:
+    stored = {p: i for i, p in enumerate(manifest["paths"])}
+    missing = [p for p in paths if p not in stored]
+    if list(stored) != [p for p in paths if p in stored] or any(
+            _leaf_name(p) not in _SYNTHESIZABLE for p in missing):
         raise ValueError("checkpoint structure mismatch")
     stored_spec = manifest.get("flat_spec")
     refits = []
@@ -185,9 +225,13 @@ def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
             refits.append((old_p // PAD_MULTIPLE, new_p // PAD_MULTIPLE,
                            -(-size // PAD_MULTIPLE)))
     flat, treedef = jax.tree_util.tree_flatten(like)
-    out = []
+    by_path = {}
     for i, ref in enumerate(flat):
-        arr = _decode_array(data[f"a{i}"], manifest["dtypes"][i])
+        p = paths[i]
+        if p not in stored:
+            continue
+        j = stored[p]
+        arr = _decode_array(data[f"a{j}"], manifest["dtypes"][j])
         for refit in refits:
             if (arr.ndim >= 1 and arr.shape[-1] == refit[0]
                     and tuple(ref.shape[:-1]) == arr.shape[:-1]
@@ -195,8 +239,12 @@ def restore_checkpoint(directory: str, step: Optional[int], like: Pytree,
                 arr = _refit_flat(arr, *refit)
                 break
         if list(arr.shape) != list(ref.shape):
-            raise ValueError(f"shape mismatch at {paths[i]}: {arr.shape} vs {ref.shape}")
-        out.append(jnp.asarray(arr, dtype=ref.dtype))
+            raise ValueError(f"shape mismatch at {p}: {arr.shape} vs {ref.shape}")
+        by_path[p] = arr
+    out = [jnp.asarray(_synthesize(paths[i], ref, by_path)
+                       if paths[i] not in stored else by_path[paths[i]],
+                       dtype=ref.dtype)
+           for i, ref in enumerate(flat)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -19,7 +19,20 @@ the dual-delay protocol exactly intact:
   exact product the contraction is value-identical).
 * ``topk_mask`` — per-tile magnitude top-k sparsifier, applied *before*
   quantization so the top-k format shares all int8 storage and kernel
-  machinery (dropped values re-enter through error feedback).
+  machinery (dropped values re-enter through error feedback).  Selection is
+  DETERMINISTIC: exactly ``k`` lanes survive per tile, magnitude ties broken
+  toward the lower lane index — the same op sequence lowers identically
+  under XLA and inside the Pallas kernel, so every backend picks the same
+  survivors bit-for-bit.
+* ``SparseRow`` — the index-carrying wire format of one ``topk_ef`` row:
+  per-touched-tile survivor lane indices (uint8) + int8 values + f32
+  power-of-two scales + an i32 touched-tile index list with a live count.
+  A commit or snapshot delta then costs O(k * tiles_touched) bytes on the
+  wire and in slab writes instead of O(P) — ``sparse_encode`` /
+  ``sparse_decode`` round-trip bit-exactly against the dense ``(q, scale)``
+  pair, and ``CommitCodec.sparse_encode_commit`` preserves the EF invariant
+  by decoding *what the row actually carries* (tiles dropped by the static
+  capacity re-enter through error feedback, like top-k dropped lanes).
 * ``CommitCodec`` — the format object carried by ``DuDeEngine``.  Its
   ``encode_commit`` implements the error-feedback commit: the codec quantizes
   ``target = g + ef`` and stores the *quantized row itself* in the slab, so
@@ -44,6 +57,7 @@ with no float slop.  Tested in ``tests/test_compression.py``.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Optional
 
 from jax import lax
 import jax.numpy as jnp
@@ -51,8 +65,10 @@ import jax.numpy as jnp
 from .flatten import PAD_MULTIPLE
 
 __all__ = [
-    "COMMIT_FORMATS", "TILE", "CommitCodec",
+    "COMMIT_FORMATS", "TILE", "CommitCodec", "SparseRow",
     "quantize", "dequantize", "topk_mask", "ef_encode", "ef_decode",
+    "touched_tiles", "sparse_encode", "sparse_decode_q", "sparse_decode",
+    "sparse_wire_nbytes", "zero_tile_scale",
 ]
 
 TILE = PAD_MULTIPLE  # 128 lanes per scale tile — the engine pad granularity
@@ -123,21 +139,31 @@ def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
 def topk_mask(x: jnp.ndarray, k: int, tile: int = TILE) -> jnp.ndarray:
     """Zero all but the ``k`` largest-|x| lanes of each 128-lane tile.
 
-    Threshold-based: lanes with ``|x| >= (k-th largest |x| in tile)`` survive,
-    so exact-magnitude ties may keep a few extra lanes (measure-zero for
-    continuous gradients).  Implemented as k-1 vectorized max-suppression
-    sweeps instead of a sort so the identical op sequence lowers inside the
-    Pallas kernel and the plain-jnp oracle.
+    Deterministic selection rule: EXACTLY ``k`` lanes survive per tile — the
+    ``k`` largest by ``|x|``, with equal-magnitude ties broken toward the
+    LOWER lane index.  The historical threshold sweep (``|x| >= k-th
+    largest``) could keep extra lanes on exact ties and, worse, pick
+    different survivors under XLA vs the Pallas lowering; this version runs
+    ``k`` max-then-lowest-index selection sweeps built only from
+    max/min/compare/where — ops that lower bit-identically everywhere — so
+    the survivor set is a pure function of the tile values on every backend.
+    The exact-k invariant is also what lets ``SparseRow`` carry a fixed
+    ``k``-slot survivor list per touched tile with no overflow.
     """
     if not 1 <= k <= tile:
         raise ValueError(f"topk k={k} must be in [1, {tile}]")
     a = jnp.abs(_tiles(x.astype(jnp.float32), tile))
+    lane = lax.broadcasted_iota(jnp.int32, a.shape, a.ndim - 1)
     cur = a
-    for _ in range(k - 1):
+    keep = jnp.zeros(a.shape, bool)
+    for _ in range(k):
         m = jnp.max(cur, axis=-1, keepdims=True)
-        cur = jnp.where(cur >= m, -jnp.inf, cur)
-    thresh = jnp.max(cur, axis=-1, keepdims=True)
-    keep = (a >= thresh).reshape(x.shape)
+        cand = jnp.where(cur == m, lane, tile)   # lowest lane among maxima
+        sel = jnp.min(cand, axis=-1, keepdims=True)
+        hit = lane == sel
+        keep = keep | hit
+        cur = jnp.where(hit, -jnp.inf, cur)
+    keep = keep.reshape(x.shape)
     return jnp.where(keep, x, jnp.zeros_like(x))
 
 
@@ -153,6 +179,128 @@ def ef_encode(x: jnp.ndarray, err: jnp.ndarray,
 def ef_decode(q: jnp.ndarray, scale: jnp.ndarray,
               tile: int = TILE) -> jnp.ndarray:
     return dequantize(q, scale, tile)
+
+
+# --------------------------------------------------- sparse wire transport
+
+def zero_tile_scale() -> jnp.ndarray:
+    """The scale every all-zero tile quantizes to: ``pow2_ceil(1e-12/127)``.
+
+    ``quantize`` floors ``max|tile|`` at ``_SCALE_FLOOR``, so a zero tile
+    always encodes to ``(q=0, scale=zero_tile_scale())`` — deterministic,
+    which is what lets ``sparse_decode_q`` reconstruct the dense scale row
+    bit-exactly without shipping scales for untouched tiles.
+    """
+    return _pow2_ceil(jnp.float32(_SCALE_FLOOR / 127.0))
+
+
+class SparseRow(NamedTuple):
+    """Index-carrying wire encoding of ONE ``topk_ef`` row.
+
+    Static capacity ``cap`` touched-tile slots (the leading dim of every
+    field), each carrying up to ``k`` survivors.  Live slots list their
+    128-lane tile id in ascending order; pad slots use the out-of-range
+    sentinel ``tiles == n_tiles(P)`` and pad survivor entries inside a live
+    tile use ``lanes == 128`` — both are dropped by ``mode="drop"``
+    scatters, so decode never needs the live count (it rides along for byte
+    accounting and tests).  Wire cost is ``cap * (2k + 8) + 4`` bytes —
+    O(k * tiles_touched) once ``cap`` is sized to the touched set, vs
+    O(P) for the dense ``(q, scale)`` pair.
+    """
+
+    tiles: jnp.ndarray   # i32 [cap]     touched tile ids, ascending; pad = T
+    lanes: jnp.ndarray   # u8  [cap, k]  in-tile survivor lane; pad = 128
+    vals: jnp.ndarray    # i8  [cap, k]  survivor int8 payload; pad = 0
+    scales: jnp.ndarray  # f32 [cap]     per-touched-tile pow-2 scale; pad = 0
+    count: jnp.ndarray   # i32 []        live slots (<= cap)
+
+
+def sparse_wire_nbytes(row: SparseRow) -> int:
+    """Actual bytes of one ``SparseRow`` on the wire (static, cap-sized)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in row)
+
+
+def touched_tiles(q: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """Per-tile any-nonzero bitmap: ``q [..., P] -> bool [..., P//tile]``."""
+    return jnp.any(_tiles(q, tile) != 0, axis=-1)
+
+
+def sparse_encode(q: jnp.ndarray, scale: jnp.ndarray, cap: int, k: int,
+                  include: Optional[jnp.ndarray] = None,
+                  tile: int = TILE) -> SparseRow:
+    """Dense ``(q int8 [P], scale f32 [P//tile])`` -> ``SparseRow``.
+
+    A tile is listed iff it has any nonzero payload lane, or ``include``
+    (an optional ``[P//tile]`` bool) marks it — the caller's "clear set":
+    tiles the receiver currently holds nonzero for this row and that must
+    be explicitly overwritten with zeros.  Tiles beyond the static ``cap``
+    are dropped lowest-tile-id-first-kept; callers recover the loss through
+    error feedback (``CommitCodec.sparse_encode_commit`` decodes what the
+    row actually carries).  Requires <= ``k`` nonzero lanes per tile
+    (``topk_mask``'s exact-k rule guarantees it); extra lanes are dropped.
+    """
+    t = q.shape[-1] // tile
+    if not 1 <= cap <= t:
+        raise ValueError(f"sparse cap={cap} outside [1, {t}]")
+    qt = _tiles(q, tile)                                    # [T, tile]
+    touched = jnp.any(qt != 0, axis=-1)
+    if include is not None:
+        touched = touched | include.astype(bool)
+    slot = jnp.where(touched, jnp.cumsum(touched.astype(jnp.int32)) - 1, cap)
+    slot = jnp.minimum(slot, cap)              # overflow tiles -> dropped
+    tids = jnp.arange(t, dtype=jnp.int32)
+    tiles = jnp.full((cap,), t, jnp.int32).at[slot].set(tids, mode="drop")
+    count = jnp.minimum(jnp.sum(touched.astype(jnp.int32)), cap)
+
+    live = tiles < t
+    src = jnp.minimum(tiles, t - 1)            # clamp pads for a safe gather
+    qrow = jnp.where(live[:, None], qt[src], jnp.int8(0))   # [cap, tile]
+    srow = jnp.where(live, scale[src], jnp.float32(0.0))    # [cap]
+
+    nz = qrow != 0
+    lidx = lax.broadcasted_iota(jnp.int32, nz.shape, 1)
+    rows = lax.broadcasted_iota(jnp.int32, nz.shape, 0)
+    lslot = jnp.where(nz, jnp.cumsum(nz.astype(jnp.int32), axis=-1) - 1, k)
+    lanes = jnp.full((cap, k), tile, jnp.uint8).at[rows, lslot].set(
+        lidx.astype(jnp.uint8), mode="drop")
+    vals = jnp.zeros((cap, k), jnp.int8).at[rows, lslot].set(
+        qrow, mode="drop")
+    return SparseRow(tiles, lanes, vals, srow, count)
+
+
+def sparse_decode_q(row: SparseRow, p: int,
+                    tile: int = TILE) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``SparseRow -> (q int8 [P], scale f32 [P//tile])`` — the dense pair.
+
+    Bit-exact inverse of ``sparse_encode`` whenever the touched set fit in
+    ``cap`` and each tile had <= k survivors: unlisted tiles come back as
+    ``(q=0, scale=zero_tile_scale())``, exactly what ``quantize`` emits for
+    a zero tile.  Oracle/test path — the engine's slab fold scatters the
+    row directly instead (``DuDeEngine.sparse_fold``).
+    """
+    t = p // tile
+    cap, k = row.lanes.shape
+    rows = lax.broadcasted_iota(jnp.int32, (cap, k), 0)
+    tile_img = jnp.zeros((cap, tile), jnp.int8).at[
+        rows, row.lanes.astype(jnp.int32)].set(row.vals, mode="drop")
+    qt = jnp.zeros((t, tile), jnp.int8).at[row.tiles].set(
+        tile_img, mode="drop")
+    scale = jnp.full((t,), zero_tile_scale(), jnp.float32).at[row.tiles].set(
+        row.scales, mode="drop")
+    return qt.reshape(p), scale
+
+
+def sparse_decode(row: SparseRow, p: int, tile: int = TILE) -> jnp.ndarray:
+    """``SparseRow -> f32 [P]`` decoded values, via a direct survivor
+    scatter (``val * scale`` is exact — power-of-two scales), with no dense
+    int8 intermediate."""
+    t = p // tile
+    dec = (row.vals.astype(jnp.float32)
+           * row.scales[:, None].astype(jnp.float32))          # [cap, k]
+    lanes = row.lanes.astype(jnp.int32)
+    pos = row.tiles[:, None] * tile + lanes
+    pos = jnp.where((lanes < tile) & (row.tiles[:, None] < t), pos, p)
+    return jnp.zeros((p,), jnp.float32).at[pos].set(dec, mode="drop")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +364,53 @@ class CommitCodec:
         dec = self.decode(q, scale)
         return q, scale, dec, target - dec
 
+    # ------------------------------------------------------ sparse transport
+
+    def _require_sparse(self):
+        if self.format != "topk_ef":
+            raise ValueError(
+                f"SparseRow transport needs commit_format='topk_ef', "
+                f"not {self.format!r} (other formats have dense payloads)")
+
+    def sparse_cap(self, p: int, cap: Optional[int] = None) -> int:
+        """Resolve a static touched-tile capacity (None = all tiles)."""
+        self._require_sparse()
+        t = self.n_tiles(p)
+        if cap is None:
+            return t
+        if not 1 <= cap <= t:
+            raise ValueError(f"sparse cap={cap} outside [1, {t}]")
+        return cap
+
+    def encode_sparse(self, x: jnp.ndarray, cap: Optional[int] = None,
+                      include: Optional[jnp.ndarray] = None) -> SparseRow:
+        """``[P] -> SparseRow`` (topk sparsify, tiled int8, index-carrying)."""
+        cap = self.sparse_cap(x.shape[-1], cap)
+        q, s = self.encode(x)
+        return sparse_encode(q, s, cap, self.topk, include=include,
+                             tile=self.tile)
+
+    def sparse_encode_commit(
+        self, g: jnp.ndarray, ef: jnp.ndarray, cap: Optional[int] = None,
+        include: Optional[jnp.ndarray] = None,
+    ) -> tuple[SparseRow, jnp.ndarray]:
+        """Error-feedback commit encode of one ``[P]`` gradient row into a
+        ``SparseRow``.  Returns ``(row, ef_new)``.
+
+        The residual is computed against the decode of WHAT THE ROW
+        CARRIES — so the bitwise EF invariant ``dec(row) + ef_new == g + ef``
+        holds even when the static ``cap`` drops touched tiles (their full
+        target re-enters EF, exactly like top-k dropped lanes).  When
+        nothing is dropped this matches ``encode_commit`` bit-for-bit.
+        """
+        cap = self.sparse_cap(g.shape[-1], cap)
+        target = g.astype(jnp.float32) + ef
+        q, scale = self.encode(target)
+        row = sparse_encode(q, scale, cap, self.topk, include=include,
+                            tile=self.tile)
+        dec = sparse_decode(row, target.shape[-1], self.tile)
+        return row, target - dec
+
     def quant_bound(self, x: jnp.ndarray) -> jnp.ndarray:
         """Per-tile worst-case |dequantize(quantize(x)) - x| bound: scale/2 + slop.
 
@@ -234,14 +429,29 @@ class CommitCodec:
 
     # ----------------------------------------------------------- byte models
 
-    def commit_wire_bytes(self, p: int) -> int:
-        """Bytes one per-arrival commit moves over the (future) wire."""
+    def commit_wire_bytes(self, p: int,
+                          tiles_touched: Optional[int] = None) -> int:
+        """Bytes one per-arrival commit moves over the wire.
+
+        ``tiles_touched`` (topk_ef only) switches to the real ``SparseRow``
+        payload: per listed tile, k int8 values + k uint8 lane indices + one
+        f32 scale + one i32 tile id, plus the i32 live count — O(k *
+        tiles_touched) instead of the dense row's O(P).  ``None`` keeps the
+        historical dense-row model (every tile shipped, positions implicit).
+        """
         t = self.n_tiles(p)
         if self.format == "f32":
             return 4 * p
         if self.format == "int8_ef":
             return p + 4 * t               # int8 payload + f32 scale per tile
-        # topk_ef: k (value int8 + in-tile index uint8) per tile + scales
+        if tiles_touched is not None:
+            self._require_sparse()
+            if not 0 <= tiles_touched <= t:
+                raise ValueError(
+                    f"tiles_touched={tiles_touched} outside [0, {t}]")
+            return tiles_touched * (2 * self.topk + 8) + 4
+        # dense topk_ef row: k (value int8 + in-tile index uint8) per tile
+        # + scales
         return t * 2 * self.topk + 4 * t
 
     def slab_bytes(self, n: int, p: int) -> int:

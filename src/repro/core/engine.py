@@ -60,11 +60,14 @@ from jax.experimental import checkify
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
-from .compression import COMMIT_FORMATS, CommitCodec
+from .compression import (
+    COMMIT_FORMATS, CommitCodec, SparseRow, touched_tiles,
+)
 from .flatten import FlatSpec, make_flat_spec
 from ..kernels.dude_update import (
     DEFAULT_TILE, SLOT_STREAMS, dude_round_apply_pallas,
-    dude_round_apply_q_pallas, dude_update_pallas,
+    dude_round_apply_q_pallas, dude_round_apply_sparse_pallas,
+    dude_update_pallas,
 )
 from ..optim.transforms import FlatOptState, FlatOptimizer
 
@@ -97,6 +100,16 @@ class EngineState(NamedTuple):
     gw_scale: Any = None    # [n, P/128] f32 scales of g_workers (compressed)
     infl_scale: Any = None  # [n, P/128] f32 scales of inflight (compressed)
     ef: Any = None          # [P] f32 commit-stream EF residual (compressed)
+    # sparse_meta engines (topk_ef + SparseRow transport) additionally track
+    # which 128-lane tiles of each slab row hold any nonzero payload — the
+    # invariant "bitmap == touched_tiles(q row)" holds after every entry
+    # point, so sparse commits/rounds may skip the untouched tiles exactly.
+    gw_touched: Any = None  # [n, P/128] int8 touched-tile bitmap, g_workers
+    in_touched: Any = None  # [n, P/128] int8 touched-tile bitmap, inflight
+    # indexed backend: running count of commits/latches dropped because a
+    # round's active set exceeded index_width (satellite of index_check;
+    # surfaced in Trainer.step metrics as "engine_drops").
+    drops: Any = None       # [] i32
 
 
 def masks_to_indices_jnp(mask: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -147,6 +160,16 @@ class DuDeEngine:
     # add a [P] error-feedback residual on the commit stream.  The configured
     # buffer_dtype only applies to the f32 format.
     commit_format: str = "f32"
+    # Sparse commit transport (topk_ef only): EngineState carries per-row
+    # touched-tile bitmaps, commits may arrive as index-carrying SparseRows
+    # scatter-decoded straight into the slab (commit_sparse /
+    # encode_sparse_commit + sparse_fold), and the round backends fold only
+    # the touched tiles of the committed rows into g_bar.  sparse_cap bounds
+    # the static touched-tile slots of a SparseRow commit (None = all tiles
+    # — always correct; smaller caps bound the wire bytes, overflow re-enters
+    # through error feedback).  docs/engine.md "Sparse commit transport".
+    sparse_meta: bool = False
+    sparse_cap: Optional[int] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -173,6 +196,17 @@ class DuDeEngine:
             raise ValueError(
                 f"unknown index_check {self.index_check!r}; "
                 f"options: {INDEX_CHECKS}")
+        if self.sparse_meta and self.commit_format != "topk_ef":
+            raise ValueError(
+                "sparse_meta (SparseRow commit transport) requires "
+                f"commit_format='topk_ef', not {self.commit_format!r}")
+        if self.sparse_cap is not None:
+            if not self.sparse_meta:
+                raise ValueError("sparse_cap requires sparse_meta=True")
+            if not 1 <= self.sparse_cap <= self.n_tiles:
+                raise ValueError(
+                    f"sparse_cap={self.sparse_cap} outside "
+                    f"[1, {self.n_tiles}]")
         if self.mesh is not None:
             missing = [a for a in self.paxes if a not in self.mesh.shape]
             if missing:
@@ -218,6 +252,12 @@ class DuDeEngine:
     def n_tiles(self) -> int:
         """Scale tiles per row (P / 128; the scale-slab trailing dim)."""
         return self.codec.n_tiles(self.P)
+
+    @property
+    def cap_tiles(self) -> int:
+        """Static touched-tile capacity of one ``SparseRow`` commit
+        (``sparse_cap``, defaulting to all tiles)."""
+        return self.codec.sparse_cap(self.P, self.sparse_cap)
 
     @property
     def paxes(self) -> tuple:
@@ -288,10 +328,14 @@ class DuDeEngine:
         vec = PartitionSpec(self.paxes)
         row = PartitionSpec(None, self.paxes)
         repl = PartitionSpec()
+        kw = {}
         if self.compressed:
-            st = EngineState(vec, row, row, repl, repl, row, row, vec)
-        else:
-            st = EngineState(vec, row, row, repl, repl)
+            kw.update(gw_scale=row, infl_scale=row, ef=vec)
+        if self.sparse_meta:
+            kw.update(gw_touched=row, in_touched=row)
+        if self.backend == "indexed":
+            kw.update(drops=repl)
+        st = EngineState(vec, row, row, repl, repl, **kw)
         return vec, row, repl, st
 
     def _shmap(self, body, in_specs, out_specs):
@@ -299,6 +343,17 @@ class DuDeEngine:
                          out_specs=out_specs, check_rep=False)
 
     # --------------------------------------------------------------- init
+
+    def _extra_fields(self, n: int, t: int, make) -> dict:
+        """The optional trailing ``EngineState`` fields this engine carries
+        (``make(shape, dtype)`` builds each leaf — zeros or SDS)."""
+        kw = {}
+        if self.sparse_meta:
+            kw.update(gw_touched=make((n, t), jnp.int8),
+                      in_touched=make((n, t), jnp.int8))
+        if self.backend == "indexed":
+            kw.update(drops=make((), jnp.int32))
+        return kw
 
     def init(self) -> EngineState:
         n, P = self.n_workers, self.P
@@ -313,6 +368,7 @@ class DuDeEngine:
                 gw_scale=jnp.zeros((n, t), jnp.float32),
                 infl_scale=jnp.zeros((n, t), jnp.float32),
                 ef=jnp.zeros((P,), jnp.float32),
+                **self._extra_fields(n, t, jnp.zeros),
             )
         else:
             state = EngineState(
@@ -321,6 +377,7 @@ class DuDeEngine:
                 inflight=jnp.zeros((n, P), self.buffer_dtype),
                 acc_count=jnp.zeros((n,), jnp.int32),
                 step=jnp.zeros((), jnp.int32),
+                **self._extra_fields(n, self.n_tiles, jnp.zeros),
             )
         if self.mesh is not None:
             state = jax.device_put(state, self.shardings())
@@ -341,6 +398,7 @@ class DuDeEngine:
                 gw_scale=sds((n, t), jnp.float32),
                 infl_scale=sds((n, t), jnp.float32),
                 ef=sds((P,), jnp.float32),
+                **self._extra_fields(n, t, sds),
             )
         return EngineState(
             g_bar=sds((P,), jnp.float32),
@@ -348,6 +406,7 @@ class DuDeEngine:
             inflight=sds((n, P), self.buffer_dtype),
             acc_count=sds((n,), jnp.int32),
             step=sds((), jnp.int32),
+            **self._extra_fields(n, self.n_tiles, sds),
         )
 
     # ------------------------------------------------------------- commit
@@ -391,8 +450,9 @@ class DuDeEngine:
     def _commit_q(self, state: EngineState, worker: jnp.ndarray,
                   grad: jnp.ndarray) -> tuple[EngineState, jnp.ndarray]:
         codec = self.codec
+        sparse = state.gw_touched is not None
 
-        def body(g_bar, gw_q, gw_s, ef, w, g):
+        def body(g_bar, gw_q, gw_s, ef, w, g, *targs):
             q, s, dec, ef_new = codec.encode_commit(g.astype(jnp.float32), ef)
             old_q = jax.lax.dynamic_index_in_dim(gw_q, w, axis=0,
                                                  keepdims=False)
@@ -402,17 +462,134 @@ class DuDeEngine:
             g_bar = g_bar + (dec - dec_old) / self.n_workers
             gw_q = jax.lax.dynamic_update_index_in_dim(gw_q, q, w, axis=0)
             gw_s = jax.lax.dynamic_update_index_in_dim(gw_s, s, w, axis=0)
-            return g_bar, gw_q, gw_s, ef_new
+            out = (g_bar, gw_q, gw_s, ef_new)
+            if sparse:
+                # keep the invariant "bitmap == touched_tiles(q row)"
+                gw_t = jax.lax.dynamic_update_index_in_dim(
+                    targs[0], touched_tiles(q).astype(jnp.int8), w, axis=0)
+                out += (gw_t,)
+            return out
 
+        targs = (state.gw_touched,) if sparse else ()
         if self.mesh is not None:
             vec, row, repl, _ = self._pspecs()
-            body = self._shmap(body, in_specs=(vec, row, row, vec, repl, vec),
-                               out_specs=(vec, row, row, vec))
-        g_bar, gw_q, gw_s, ef = body(state.g_bar, state.g_workers,
-                                     state.gw_scale, state.ef, worker, grad)
+            body = self._shmap(
+                body,
+                in_specs=(vec, row, row, vec, repl, vec)
+                + (row,) * len(targs),
+                out_specs=(vec, row, row, vec) + (row,) * len(targs))
+        out = body(state.g_bar, state.g_workers, state.gw_scale, state.ef,
+                   worker, grad, *targs)
+        st = state._replace(g_bar=out[0], g_workers=out[1], gw_scale=out[2],
+                            ef=out[3], step=state.step + 1)
+        if sparse:
+            st = st._replace(gw_touched=out[4])
+        return st, out[0]
+
+    # -------------------------------------------- sparse commit transport
+
+    def _require_sparse(self, state: EngineState):
+        if not self.sparse_meta or state.gw_touched is None:
+            raise ValueError(
+                "SparseRow transport needs an engine built with "
+                "sparse_meta=True (and a state initialized by it)")
+
+    def encode_sparse_commit(self, state: EngineState, worker: jnp.ndarray,
+                             grad: jnp.ndarray
+                             ) -> tuple[EngineState, SparseRow]:
+        """Sender half of the sparse commit: encode one worker's gradient as
+        a ``SparseRow`` and advance the error-feedback residual.
+
+        The row's "clear set" is the worker's current touched bitmap — every
+        tile the slab holds nonzero for this worker is listed (possibly with
+        an all-zero payload), so ``sparse_fold`` can overwrite it and the
+        row-replace semantics of ``commit`` are preserved.  Dense O(P) math
+        (it reads the full gradient), but the OUTPUT is the O(k * cap) wire
+        row; pair with ``sparse_fold`` on the receiver.  ``step`` advances in
+        the fold, not here.
+        """
+        self._require_sparse(state)
+        prev = jax.lax.dynamic_index_in_dim(
+            state.gw_touched, worker, axis=0, keepdims=False) != 0
+        row, ef_new = self.codec.sparse_encode_commit(
+            grad.astype(jnp.float32), state.ef, cap=self.cap_tiles,
+            include=prev)
+        return state._replace(ef=ef_new), row
+
+    def sparse_fold(self, state: EngineState, worker: jnp.ndarray,
+                    row: SparseRow) -> tuple[EngineState, jnp.ndarray]:
+        """Receiver half: scatter-decode a ``SparseRow`` straight into the
+        stored int8 slab row — zero dense ``[P]`` intermediates.
+
+        Work is O(cap * 128): gather the old payload of exactly the listed
+        tiles, scatter-add ``(dec_new - dec_old) / n`` into ``g_bar``, and
+        scatter payload + scales + bitmap back.  ``g_bar`` matches the dense
+        ``commit`` bit-for-bit (untouched tiles would contribute exact +0.0
+        there); slab scales of never-listed tiles may go stale vs a dense
+        commit, which is decode-invisible (their payload is zero).  Under a
+        mesh the row is replicated — it IS the wire format, a few KB — and
+        each P-shard folds only its own tiles via a global->local id shift.
+        """
+        self._require_sparse(state)
+        n = self.n_workers
+        qtile = self.codec.tile
+
+        def body(g_bar, gw_q, gw_s, gw_t, w, tiles, lanes, vals, scales):
+            p_loc = g_bar.shape[0]
+            t_loc = p_loc // qtile
+            off = jnp.int32(0)
+            for a in self.paxes:
+                off = off * self.mesh.shape[a] + jax.lax.axis_index(a)
+            loc = tiles - off * t_loc
+            live = (loc >= 0) & (loc < t_loc)   # pad sentinel (== T) too
+            loc = jnp.where(live, loc, t_loc)
+            cap, k = lanes.shape
+            rows_i = jax.lax.broadcasted_iota(jnp.int32, (cap, k), 0)
+            # new tile images [cap, 128]: pad lanes (== 128) are dropped
+            img = jnp.zeros((cap, qtile), jnp.int8).at[
+                rows_i, lanes.astype(jnp.int32)].set(vals, mode="drop")
+            lpos = loc[:, None] * qtile + jax.lax.broadcasted_iota(
+                jnp.int32, (cap, qtile), 1)
+            lpos = jnp.where(live[:, None], lpos, p_loc)
+            old = gw_q.at[w, lpos].get(mode="fill", fill_value=0)
+            old_s = gw_s.at[w, loc].get(mode="fill", fill_value=0.0)
+            dec_new = img.astype(jnp.float32) * scales[:, None]
+            dec_old = old.astype(jnp.float32) * old_s[:, None]
+            # gather / elementwise / scatter-SET — NOT a scatter-add: the
+            # fold expression must be the exact elementwise graph the dense
+            # commit runs (`g_bar + (dec - dec_old) / n`) so XLA gives both
+            # the same fused lowering; an add-combining scatter rounds the
+            # update separately and can differ in the last bit
+            gb_old = g_bar.at[lpos].get(mode="fill", fill_value=0.0)
+            g_bar = g_bar.at[lpos].set(gb_old + (dec_new - dec_old) / n,
+                                       mode="drop")
+            gw_q = gw_q.at[w, lpos].set(img, mode="drop")
+            gw_s = gw_s.at[w, loc].set(scales, mode="drop")
+            gw_t = gw_t.at[w, loc].set(
+                jnp.any(img != 0, axis=-1).astype(jnp.int8), mode="drop")
+            return g_bar, gw_q, gw_s, gw_t
+
+        if self.mesh is not None:
+            vec, rsp, repl, _ = self._pspecs()
+            body = self._shmap(
+                body,
+                in_specs=(vec, rsp, rsp, rsp, repl, repl, repl, repl, repl),
+                out_specs=(vec, rsp, rsp, rsp))
+        g_bar, gw_q, gw_s, gw_t = body(
+            state.g_bar, state.g_workers, state.gw_scale, state.gw_touched,
+            worker, row.tiles, row.lanes, row.vals, row.scales)
         st = state._replace(g_bar=g_bar, g_workers=gw_q, gw_scale=gw_s,
-                            ef=ef, step=state.step + 1)
+                            gw_touched=gw_t, step=state.step + 1)
         return st, g_bar
+
+    def commit_sparse(self, state: EngineState, worker: jnp.ndarray,
+                      grad: jnp.ndarray) -> tuple[EngineState, jnp.ndarray]:
+        """Sparse-transport twin of ``commit``: encode then fold.  ``g_bar``
+        and the EF residual match the dense commit bit-for-bit whenever the
+        touched set fits ``sparse_cap`` (overflow degrades gracefully — the
+        dropped tiles' targets re-enter through error feedback)."""
+        state, row = self.encode_sparse_commit(state, worker, grad)
+        return self.sparse_fold(state, worker, row)
 
     # -------------------------------------------------------------- round
 
@@ -432,7 +609,7 @@ class DuDeEngine:
         sm = start_mask.astype(bool)
         cm = commit_mask.astype(bool)
         self._index_overflow_check(sm, cm)
-        g_bar, gw, infl, scales, new_params = self._run_backend(
+        g_bar, gw, infl, scales, touched, new_params = self._run_backend(
             state, fresh, sm, cm, params, eta)
         st = state._replace(
             g_bar=g_bar, g_workers=gw, inflight=infl,
@@ -441,6 +618,9 @@ class DuDeEngine:
         )
         if scales is not None:
             st = st._replace(gw_scale=scales[0], infl_scale=scales[1])
+        if touched is not None:
+            st = st._replace(gw_touched=touched[0], in_touched=touched[1])
+        st = self._count_drops(st, sm, cm)
         if params is None:
             return st, g_bar
         return st, g_bar, new_params
@@ -455,7 +635,11 @@ class DuDeEngine:
                 "round_indexed cannot express the accumulate running-mean "
                 "latch; use round() with the reference backend")
 
-        if self.compressed:
+        if self.sparse_meta:
+            def body(st, f, si, ci):
+                return self._round_sparse_indexed(st, f, si, ci)
+            out_arity = 7
+        elif self.compressed:
             def body(st, f, si, ci):
                 return self._round_indexed_q(st, f, si, ci)
             out_arity = 5
@@ -466,8 +650,7 @@ class DuDeEngine:
 
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
-            out_specs = (vec, row, row) + ((row, row) if out_arity == 5
-                                           else ())
+            out_specs = (vec, row, row) + (row,) * (out_arity - 3)
             body = self._shmap(body, in_specs=(sspec, row, repl, repl),
                                out_specs=out_specs)
         out = body(state, fresh, start_idx, commit_idx)
@@ -481,8 +664,10 @@ class DuDeEngine:
             acc_count=jnp.where(sm, 1, state.acc_count + 1).astype(jnp.int32),
             step=state.step + 1,
         )
-        if out_arity == 5:
+        if out_arity >= 5:
             st = st._replace(gw_scale=out[3], infl_scale=out[4])
+        if out_arity == 7:
+            st = st._replace(gw_touched=out[5], in_touched=out[6])
         return st, g_bar
 
     # -------------------------------------------------- fused round+apply
@@ -515,6 +700,7 @@ class DuDeEngine:
         codec = self.codec
 
         def body(st, f, a, b, w, t, sl):
+            touched = ()
             if fused:
                 bc = None
                 if opt.name == "adamw":
@@ -522,7 +708,18 @@ class DuDeEngine:
                     t32 = t.astype(jnp.float32)
                     bc = jnp.stack([1 - hp["b1"] ** t32, 1 - hp["b2"] ** t32])
                 leaves, sdef = jax.tree_util.tree_flatten(sl)
-                if self.compressed:
+                if self.sparse_meta:
+                    (gw, gw_s, gw_t, infl, infl_s, in_t, g_bar, w_new,
+                     new_leaves) = dude_round_apply_sparse_pallas(
+                        b, a, self._sparse_blk(st, b),
+                        f.astype(jnp.float32), st.g_workers, st.gw_scale,
+                        st.gw_touched, st.inflight, st.infl_scale,
+                        st.in_touched, st.g_bar, w, tuple(leaves), bc,
+                        kind=opt.name, hp=opt.hparams, topk=codec.topk,
+                        tile=self.tile, interpret=self._interpret())
+                    scales = (gw_s, infl_s)
+                    touched = (gw_t, in_t)
+                elif self.compressed:
                     (gw, gw_s, infl, infl_s, g_bar, w_new,
                      new_leaves) = dude_round_apply_q_pallas(
                         b, a, f.astype(jnp.float32), st.g_workers,
@@ -542,15 +739,17 @@ class DuDeEngine:
                 sl_new = jax.tree_util.tree_unflatten(sdef, list(new_leaves))
             else:
                 if self.compressed:
-                    g_bar, gw, infl, gw_s, infl_s = self._round_plain_q(
-                        st, f, a, b)
-                    scales = (gw_s, infl_s)
+                    out = self._round_plain_q(st, f, a, b)
+                    g_bar, gw, infl = out[:3]
+                    scales = out[3:5]
+                    touched = out[5:7]   # () unless sparse_meta
                 else:
                     g_bar, gw, infl = self._round_plain(st, f, a, b)
                     scales = ()
                 w_new, sl_new = opt.update(w, g_bar, sl, t)
-            return (g_bar, gw, infl, w_new, sl_new) + scales
+            return (g_bar, gw, infl, w_new, sl_new) + scales + touched
 
+        n_touch = 2 if self.sparse_meta else 0
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
             slot_specs = jax.tree.map(lambda _: vec, slots)
@@ -558,7 +757,8 @@ class DuDeEngine:
             body = self._shmap(
                 body,
                 in_specs=(sspec, row, repl, repl, vec, repl, slot_specs),
-                out_specs=(vec, row, row, vec, slot_specs) + scale_specs)
+                out_specs=(vec, row, row, vec, slot_specs) + scale_specs
+                + (row,) * n_touch)
         out = body(state, fresh, sm, cm, params, t_new, slots)
         g_bar, gw, infl, w_new, sl_new = out[:5]
         st = state._replace(
@@ -568,6 +768,9 @@ class DuDeEngine:
         )
         if self.compressed:
             st = st._replace(gw_scale=out[5], infl_scale=out[6])
+        if n_touch:
+            st = st._replace(gw_touched=out[7], in_touched=out[8])
+        st = self._count_drops(st, sm, cm)
         return st, g_bar, w_new, FlatOptState(t_new, sl_new)
 
     # ----------------------------------------------------- backend driver
@@ -587,16 +790,23 @@ class DuDeEngine:
 
     def _round_plain_q(self, st, f, a, b):
         """Compressed-slab twin of ``_round_plain``; returns
-        ``(g_bar, gw_q, infl_q, gw_scale, infl_scale)``."""
+        ``(g_bar, gw_q, infl_q, gw_scale, infl_scale)``, extended with
+        ``(gw_touched, in_touched)`` on sparse_meta engines."""
         if self.backend == "pallas":
+            if self.sparse_meta:
+                return self._round_pallas_sparse(st, f, a, b, None, None)[:7]
             out = self._round_pallas_q(st, f, a, b, None, None)
             return out[:5]
         if self.backend == "indexed":
             n = self.n_workers
             k = self.index_width or n
-            return self._round_indexed_q(
-                st, f, masks_to_indices_jnp(a, n)[:k],
-                masks_to_indices_jnp(b, n)[:k])
+            si = masks_to_indices_jnp(a, n)[:k]
+            ci = masks_to_indices_jnp(b, n)[:k]
+            if self.sparse_meta:
+                return self._round_sparse_indexed(st, f, si, ci)
+            return self._round_indexed_q(st, f, si, ci)
+        if self.sparse_meta:
+            return self._round_sparse_reference(st, f, a, b)
         return self._round_reference_q(st, f, a, b)
 
     def _run_backend(self, state, fresh, sm, cm, params, eta):
@@ -605,50 +815,52 @@ class DuDeEngine:
         The body is elementwise on P (masks/indices are replicated and the
         worker-axis reduction stays inside each P-shard; scale tiles align
         with shard boundaries), so the sharded round needs no collective at
-        all.  Returns ``(g_bar, gw, infl, scales_or_None, params_or_None)``
-        with ``scales = (gw_scale, infl_scale)`` under compressed formats.
+        all.  Returns ``(g_bar, gw, infl, scales_or_None, touched_or_None,
+        params_or_None)`` with ``scales = (gw_scale, infl_scale)`` under
+        compressed formats and ``touched = (gw_touched, in_touched)`` on
+        sparse_meta engines.
         """
         has_params = params is not None
         compressed = self.compressed
+        sparse = self.sparse_meta
 
         def body(st, f, a, b, *wargs):
             w = wargs[0] if wargs else None
             if self.backend == "pallas":
-                if compressed:
-                    g_bar, gw, infl, gw_s, infl_s, w_new = \
-                        self._round_pallas_q(st, f, a, b, w, eta)
-                    scales = (gw_s, infl_s)
+                if sparse:
+                    out = self._round_pallas_sparse(st, f, a, b, w, eta)
+                    core, w_new = out[:7], out[7]
+                elif compressed:
+                    out = self._round_pallas_q(st, f, a, b, w, eta)
+                    core, w_new = out[:5], out[5]
                 else:
                     g_bar, gw, infl, w_new = self._round_pallas(
                         st, f, a, b, w, eta)
-                    scales = ()
+                    core = (g_bar, gw, infl)
             else:
-                if compressed:
-                    g_bar, gw, infl, gw_s, infl_s = self._round_plain_q(
-                        st, f, a, b)
-                    scales = (gw_s, infl_s)
-                else:
-                    g_bar, gw, infl = self._round_plain(st, f, a, b)
-                    scales = ()
+                core = (self._round_plain_q(st, f, a, b) if compressed
+                        else self._round_plain(st, f, a, b))
                 w_new = None
                 if w is not None:
                     w_new = (w.astype(jnp.float32)
-                             - jnp.float32(eta) * g_bar).astype(w.dtype)
-            return (g_bar, gw, infl) + scales + ((w_new,) if wargs else ())
+                             - jnp.float32(eta) * core[0]).astype(w.dtype)
+            return tuple(core) + ((w_new,) if wargs else ())
 
         wargs = (params,) if has_params else ()
         n_scales = 2 if compressed else 0
+        n_touch = 2 if sparse else 0
         if self.mesh is not None:
             vec, row, repl, sspec = self._pspecs()
             body = self._shmap(
                 body,
                 in_specs=(sspec, row, repl, repl) + (vec,) * len(wargs),
-                out_specs=(vec, row, row) + (row,) * n_scales
+                out_specs=(vec, row, row) + (row,) * (n_scales + n_touch)
                 + (vec,) * len(wargs))
         out = body(state, fresh, sm, cm, *wargs)
         scales = (out[3], out[4]) if compressed else None
-        w_new = out[3 + n_scales] if has_params else None
-        return out[0], out[1], out[2], scales, w_new
+        touched = (out[5], out[6]) if sparse else None
+        w_new = out[3 + n_scales + n_touch] if has_params else None
+        return out[0], out[1], out[2], scales, touched, w_new
 
     def _index_overflow_check(self, sm, cm):
         """Satellite of the indexed backend: |C_t| > index_width silently
@@ -675,6 +887,19 @@ class DuDeEngine:
                 na=na)
 
         jax.lax.cond(n_active > width, warn, lambda na: None, n_active)
+
+    def _count_drops(self, st: EngineState, sm, cm) -> EngineState:
+        """Indexed backend: accumulate how many active workers exceeded
+        ``index_width`` this round (their latches/commits were dropped) into
+        the structured ``drops`` counter — the queryable twin of
+        ``_index_overflow_check``'s debug print, surfaced by the train step
+        as the ``engine_drops`` metric."""
+        if st.drops is None:
+            return st
+        width = self.index_width or self.n_workers
+        over = (jnp.maximum(jnp.sum(sm.astype(jnp.int32)) - width, 0)
+                + jnp.maximum(jnp.sum(cm.astype(jnp.int32)) - width, 0))
+        return st._replace(drops=st.drops + over)
 
     # ----------------------------------------------------------- backends
 
@@ -786,3 +1011,100 @@ class DuDeEngine:
             )
         return g_bar, gw_q, infl_q, gw_s, infl_s, \
             (w_new if params is not None else None)
+
+    # --------------------------------------------------- sparse backends
+
+    def _sparse_blk(self, st: EngineState, cm) -> jnp.ndarray:
+        """Per-Pallas-block activity flags ``[P/tile] i32``: does any
+        committing row touch any scale tile of the block in either slab?
+        Computed OUTSIDE the kernel from the ``[n, P/128]`` bitmaps, so the
+        gate costs O(n * P/128) metadata reads, never payload."""
+        act = cm[:, None] & ((st.gw_touched | st.in_touched) != 0)
+        any_t = jnp.any(act, axis=0)                     # [t_local]
+        return jnp.any(any_t.reshape(-1, self.tile // self.codec.tile),
+                       axis=-1).astype(jnp.int32)
+
+    def _round_sparse_reference(self, state, fresh, sm, cm):
+        """Tile-gated masked sweep — the plain-jnp oracle of the sparse
+        round.  The fold touches only tiles live in either bitmap of a
+        committing row; this is bit-for-bit the dense ``topk_ef`` sweep
+        because untouched tiles hold zero payload and decode to exact +0.0
+        (and ``g_bar`` is never -0.0).  Scale slabs copy densely — they are
+        1/128 of the payload and keeping them bitwise-identical to the dense
+        path removes the stale-scale caveat from the round entirely.
+        Returns the 5-tuple plus ``(gw_touched, in_touched)``."""
+        codec = self.codec
+        n = self.n_workers
+        qtile = codec.tile
+        infl32 = codec.decode(state.inflight, state.infl_scale)
+        gw32 = codec.decode(state.g_workers, state.gw_scale)
+        act = cm[:, None] & ((state.gw_touched | state.in_touched) != 0)
+        gate = jnp.broadcast_to(
+            act[:, :, None], act.shape + (qtile,)).reshape(infl32.shape)
+        delta = jnp.where(gate, infl32 - gw32, 0.0)
+        g_bar = state.g_bar + jnp.sum(delta, axis=0) / n
+        gw_q = jnp.where(cm[:, None], state.inflight, state.g_workers)
+        gw_s = jnp.where(cm[:, None], state.infl_scale, state.gw_scale)
+        gw_t = jnp.where(cm[:, None], state.in_touched, state.gw_touched)
+        q_f, s_f = codec.encode(fresh.astype(jnp.float32))
+        infl_q = jnp.where(sm[:, None], q_f, state.inflight)
+        infl_s = jnp.where(sm[:, None], s_f, state.infl_scale)
+        in_t = jnp.where(sm[:, None], touched_tiles(q_f).astype(jnp.int8),
+                         state.in_touched)
+        return g_bar, gw_q, infl_q, gw_s, infl_s, gw_t, in_t
+
+    def _round_sparse_indexed(self, state, fresh, start_idx, commit_idx):
+        """Gather/scatter sparse twin: gathers the k selected rows AND their
+        bitmaps, gating the fold per gathered tile.  Bitwise equal to
+        ``_round_indexed_q`` (same +0.0 argument as the reference twin)."""
+        n = self.n_workers
+        codec = self.codec
+        qtile = codec.tile
+        take = lambda a, i: jnp.take(a, i, axis=0, mode="fill", fill_value=0)
+        rows_in_q = take(state.inflight, commit_idx)
+        rows_in_s = take(state.infl_scale, commit_idx)
+        rows_gw_q = take(state.g_workers, commit_idx)
+        rows_gw_s = take(state.gw_scale, commit_idx)
+        rows_in_t = take(state.in_touched, commit_idx)
+        rows_gw_t = take(state.gw_touched, commit_idx)
+        act = (rows_in_t | rows_gw_t) != 0
+        gate = jnp.broadcast_to(
+            act[:, :, None], act.shape + (qtile,)).reshape(rows_in_q.shape)
+        diff = jnp.where(gate,
+                         codec.decode(rows_in_q, rows_in_s)
+                         - codec.decode(rows_gw_q, rows_gw_s), 0.0)
+        valid = (commit_idx < n).astype(jnp.float32)[:, None]
+        g_bar = state.g_bar + jnp.sum(diff * valid, axis=0) / n
+        gw_q = state.g_workers.at[commit_idx].set(rows_in_q, mode="drop")
+        gw_s = state.gw_scale.at[commit_idx].set(rows_in_s, mode="drop")
+        gw_t = state.gw_touched.at[commit_idx].set(rows_in_t, mode="drop")
+        fresh_rows = jnp.take(fresh.astype(jnp.float32), start_idx, axis=0,
+                              mode="fill", fill_value=0)
+        q_f, s_f = codec.encode(fresh_rows)
+        infl_q = state.inflight.at[start_idx].set(q_f, mode="drop")
+        infl_s = state.infl_scale.at[start_idx].set(s_f, mode="drop")
+        in_t = state.in_touched.at[start_idx].set(
+            touched_tiles(q_f).astype(jnp.int8), mode="drop")
+        return g_bar, gw_q, infl_q, gw_s, infl_s, gw_t, in_t
+
+    def _round_pallas_sparse(self, state, fresh, sm, cm, params, eta):
+        """Touched-tile-gated fused kernel: the precomputed block activity
+        array lets the kernel skip the dequant+fold of every block no
+        committing row touches; the fresh latch, scale copies, bitmaps, and
+        optimizer tail stay dense, so the result is bit-for-bit the dense
+        ``topk_ef`` round.  Returns ``(g_bar, gw_q, infl_q, gw_scale,
+        infl_scale, gw_touched, in_touched, params')``."""
+        codec = self.codec
+        w = params if params is not None else jnp.zeros_like(state.g_bar)
+        (gw_q, gw_s, gw_t, infl_q, infl_s, in_t, g_bar, w_new, _) = \
+            dude_round_apply_sparse_pallas(
+                cm, sm, self._sparse_blk(state, cm),
+                fresh.astype(jnp.float32), state.g_workers, state.gw_scale,
+                state.gw_touched, state.inflight, state.infl_scale,
+                state.in_touched, state.g_bar, w, kind="sgd",
+                hp=(("lr", float(eta) if eta is not None else 0.0),),
+                topk=codec.topk, tile=self.tile,
+                interpret=self._interpret(),
+            )
+        return (g_bar, gw_q, infl_q, gw_s, infl_s, gw_t, in_t,
+                w_new if params is not None else None)

@@ -304,6 +304,161 @@ def dude_round_apply_q_pallas(
     return out[0], out[1], out[2], out[3], out[4], out[5], tuple(out[6:])
 
 
+def _round_apply_sparse_kernel(*refs, n_workers: int, kind: str, hp: tuple,
+                               topk: int):
+    """Touched-tile-gated twin of ``_round_apply_q_kernel`` (topk_ef only).
+
+    A precomputed per-block activity flag (``blk``, from the engine's
+    touched-tile bitmaps: does any committing row hold nonzero payload in
+    any 128-lane tile of this block?) gates the expensive part — the dual
+    dequantization and the commit fold — behind ``lax.cond``.  Inactive
+    blocks pass ``g_bar`` and the committed payload through untouched, which
+    is value-identical to the dense kernel: untouched tiles decode to exact
+    +0.0 (and ``g_bar`` entries are never -0.0 — they are only ever produced
+    by ``x + delta`` chains from a +0.0 init).  Everything whose result is
+    NOT recoverable from the bitmaps stays dense: the fresh latch (arbitrary
+    new values), the scale-row copies (stale scales are decode-invisible but
+    not bitwise-invisible, and they are 1/128 of the payload), the bitmap
+    updates, and the optimizer tail.
+
+    refs layout (in): cm[n], sm[n], blk[1], fresh[n,T], gw_q[n,T]i8,
+    gw_s[n,T/128], gw_t[n,T/128]i8, in_q[n,T]i8, in_s[n,T/128],
+    in_t[n,T/128]i8, gbar[T], w[T], slots*[T], (bc[2] for adamw);
+    (out): gw_q, gw_s, gw_t, in_q, in_s, in_t, gbar, w, slots*.
+    """
+    from ..core.compression import (
+        dequantize, quantize, topk_mask, touched_tiles,
+    )
+
+    hp = dict(hp)
+    n_slots = SLOT_STREAMS[kind]
+    n_in = 12 + n_slots + (1 if kind == "adamw" else 0)
+    (cm_ref, sm_ref, blk_ref, fresh_ref, gwq_ref, gws_ref, gwt_ref,
+     inq_ref, ins_ref, int_ref, gbar_ref, w_ref, *rest_in) = refs[:n_in]
+    (gwq_out, gws_out, gwt_out, inq_out, ins_out, int_out, gbar_out,
+     w_out, *slot_outs) = refs[n_in:]
+
+    cm = cm_ref[...].astype(jnp.float32)  # [n]
+    sm = sm_ref[...]                       # [n] bool
+    active = blk_ref[...][0] != 0
+    fresh = fresh_ref[...].astype(jnp.float32)   # [n, T]
+    gwq, gws, gwt = gwq_ref[...], gws_ref[...], gwt_ref[...]
+    inq, ins, int_ = inq_ref[...], ins_ref[...], int_ref[...]
+    gbar = gbar_ref[...]                          # [T] f32
+    commit = cm[:, None] > 0
+
+    def fold(_):
+        gw = dequantize(gwq, gws)
+        infl = dequantize(inq, ins)
+        g = gbar + jnp.sum(cm[:, None] * (infl - gw), axis=0) / n_workers
+        return g, jnp.where(commit, inq, gwq)
+
+    def skip(_):
+        return gbar, gwq
+
+    g, gwq_new = jax.lax.cond(active, fold, skip, None)
+
+    gwq_out[...] = gwq_new
+    gws_out[...] = jnp.where(commit, ins, gws)
+    gwt_out[...] = jnp.where(commit, int_, gwt)
+
+    latch = topk_mask(fresh, topk)
+    qf, sf = quantize(latch)
+    inq_out[...] = jnp.where(sm[:, None], qf, inq)
+    ins_out[...] = jnp.where(sm[:, None], sf, ins)
+    int_out[...] = jnp.where(sm[:, None],
+                             touched_tiles(qf).astype(int_.dtype), int_)
+    gbar_out[...] = g
+
+    slot_refs = rest_in[:n_slots]
+    bc_ref = rest_in[n_slots] if kind == "adamw" else None
+    _opt_apply(g, w_ref, slot_refs, bc_ref, w_out, slot_outs, kind, hp)
+
+
+def dude_round_apply_sparse_pallas(
+    commit_mask: jnp.ndarray,   # [n] bool
+    start_mask: jnp.ndarray,    # [n] bool
+    blk: jnp.ndarray,           # [P/tile] i32 per-block commit activity
+    fresh: jnp.ndarray,         # [n, P] f32 fresh gradients (live model)
+    gw_q: jnp.ndarray,          # [n, P] int8 committed-gradient payload
+    gw_scale: jnp.ndarray,      # [n, P/128] f32 per-tile scales
+    gw_touched: jnp.ndarray,    # [n, P/128] int8 touched-tile bitmap
+    in_q: jnp.ndarray,          # [n, P] int8 in-flight payload
+    in_scale: jnp.ndarray,      # [n, P/128] f32
+    in_touched: jnp.ndarray,    # [n, P/128] int8
+    g_bar: jnp.ndarray,         # [P] f32
+    w: jnp.ndarray,             # [P] f32 flat master params
+    slots: tuple = (),          # optimizer slot slabs, each [P] f32
+    bias_corr: jnp.ndarray | None = None,  # [2] f32 (adamw only)
+    *,
+    kind: str = "sgd",
+    hp: tuple = (("lr", 0.0),),
+    topk: int = 16,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = False,
+):
+    """Fused round + apply over quantized slabs, folding ONLY the blocks a
+    committing row touches (``topk_ef`` + touched-tile bitmaps).  Returns
+    ``(gw_q', gw_scale', gw_touched', in_q', in_scale', in_touched',
+    g_bar', w', slots')`` — bit-for-bit ``dude_round_apply_q_pallas`` with
+    ``fmt="topk_ef"`` on the shared streams."""
+    from ..core.compression import TILE as QTILE
+
+    n, P = fresh.shape
+    t = P // QTILE
+    assert gw_q.shape == (n, P) and in_q.shape == (n, P)
+    assert gw_scale.shape == (n, t) and in_scale.shape == (n, t)
+    assert gw_touched.shape == (n, t) and in_touched.shape == (n, t)
+    assert g_bar.shape == (P,) and w.shape == (P,)
+    n_slots = SLOT_STREAMS[kind]
+    assert len(slots) == n_slots, (kind, len(slots))
+    assert (bias_corr is not None) == (kind == "adamw")
+    tile = min(tile, P)
+    assert P % tile == 0 and tile % QTILE == 0, f"P={P} tile={tile}"
+    grid = (P // tile,)
+    assert blk.shape == (P // tile,), (blk.shape, grid)
+
+    row = pl.BlockSpec((n, tile), lambda i: (0, i))
+    srow = pl.BlockSpec((n, tile // QTILE), lambda i: (0, i))
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    mask = pl.BlockSpec((n,), lambda i: (0,))
+    one = pl.BlockSpec((1,), lambda i: (i,))
+    sc2 = pl.BlockSpec((2,), lambda i: (0,))
+
+    in_specs = [mask, mask, one, row, row, srow, srow, row, srow, srow,
+                vec, vec] + [vec] * n_slots
+    args = [commit_mask.astype(jnp.float32), start_mask,
+            blk.astype(jnp.int32), fresh.astype(jnp.float32),
+            gw_q, gw_scale, gw_touched, in_q, in_scale, in_touched,
+            g_bar, w] + list(slots)
+    if kind == "adamw":
+        in_specs.append(sc2)
+        args.append(bias_corr.astype(jnp.float32))
+
+    kernel = functools.partial(_round_apply_sparse_kernel, n_workers=n,
+                               kind=kind, hp=tuple(hp), topk=topk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[row, srow, srow, row, srow, srow, vec, vec]
+        + [vec] * n_slots,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, P), jnp.int8),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, t), gw_touched.dtype),
+            jax.ShapeDtypeStruct((n, P), jnp.int8),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, t), in_touched.dtype),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), w.dtype),
+        ] + [jax.ShapeDtypeStruct((P,), jnp.float32)] * n_slots,
+        interpret=interpret,
+    )(*args)
+    return (out[0], out[1], out[2], out[3], out[4], out[5], out[6], out[7],
+            tuple(out[8:]))
+
+
 def dude_update_pallas(
     commit_mask: jnp.ndarray,   # [n] bool
     start_mask: jnp.ndarray,    # [n] bool

@@ -186,6 +186,75 @@ def full_p_tensors(hlo: str, p: int, exclude_dims: tuple = ()) -> list:
     return sorted(bad)
 
 
+# ops that legitimately carry a >= P-element buffer without COMPUTING a
+# dense [P] value: plumbing (parameter/tuple/gte/copy/bitcast), state
+# threading (while/conditional/call), and in-place writes into state slabs
+# (scatter / dynamic-update-slice).
+_P_CARRY_OPS = (
+    "parameter", "tuple", "get-tuple-element", "copy", "copy-start",
+    "copy-done", "bitcast", "while", "conditional", "call",
+    "scatter", "dynamic-update-slice",
+)
+
+_INSTR_RE = re.compile(r"=\s*(\([^)]*\)|[\w\[\],{}\.]+)\s+([\w\-]+)\(")
+
+
+def _max_array_elems(shape_text: str) -> int:
+    """Largest single-array element count in a (possibly tuple) shape."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES or _DTYPE_BYTES[dt] == 0:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n)
+    return best
+
+
+def dense_p_compute_ops(hlo: str, p: int,
+                        allow: tuple = _P_CARRY_OPS) -> list:
+    """Instructions that COMPUTE a dense >= ``p``-element array — the test
+    for "no dense [P] intermediates" on sparse-transport programs, which
+    (unlike ``full_p_tensors``) must keep carrying the [P]/[n, P] STATE
+    slabs through parameters, tuples and scatters.
+
+    An instruction offends when its output holds >= ``p`` elements and its
+    op is not in ``allow`` (plumbing / state threading / in-place scatter
+    writes).  Fusions are classified by their fused computation's ROOT op —
+    a scatter-rooted fusion is a slab write, a loop fusion producing [P] is
+    a dense compute.  Returns ``"op(root):shape"`` strings, deduplicated and
+    sorted; empty means every >= p-element buffer is carried, never
+    computed."""
+    comps = _split_computations(hlo)
+    roots: dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if line.startswith("ROOT"):
+                mo = _INSTR_RE.search(line)
+                if mo:
+                    roots[name] = mo.group(2)
+    offenders = set()
+    for name, lines in comps.items():
+        for line in lines:
+            mo = _INSTR_RE.search(line)
+            if not mo:
+                continue
+            out_shape, op = mo.groups()
+            if _max_array_elems(out_shape) < p:
+                continue
+            if op == "fusion":
+                called = re.search(r"calls=%?([\w\.\-_]+)", line)
+                root = roots.get(called.group(1), "") if called else ""
+                if root in allow:
+                    continue
+                offenders.add(f"fusion({root}):{out_shape.strip()}")
+            elif op not in allow:
+                offenders.add(f"{op}:{out_shape.strip()}")
+    return sorted(offenders)
+
+
 def cost_analysis_dict(compiled) -> dict:
     """``compiled.cost_analysis()`` normalized to one flat dict (newer jax
     returns a list with one dict per device)."""

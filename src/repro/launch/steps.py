@@ -118,12 +118,30 @@ class TrainOptions:
                                    # "f32" | "int8_ef" | "topk_ef"
                                    # (core/compression.py; docs/engine.md
                                    # "Compressed slabs")
+    sparse_transport: bool = False  # topk_ef only: carry commits as
+                                   # index-carrying SparseRows and keep
+                                   # touched-tile bitmaps on the engine
+                                   # state, so commit ingress and the round
+                                   # fold scale O(k * tiles_touched) instead
+                                   # of O(P) (docs/engine.md "Sparse commit
+                                   # transport")
+    sparse_cap: Optional[int] = None  # static touched-tile slots per
+                                   # SparseRow (None = all tiles; smaller
+                                   # caps bound wire bytes, overflow
+                                   # re-enters through error feedback)
 
     def __post_init__(self):
         if self.params_layout not in PARAMS_LAYOUTS:
             raise ValueError(
                 f"unknown params_layout {self.params_layout!r}; "
                 f"options: {PARAMS_LAYOUTS}")
+        if self.sparse_transport and self.commit_format != "topk_ef":
+            raise ValueError(
+                "sparse_transport requires commit_format='topk_ef' (the "
+                f"other formats have dense payloads), got "
+                f"{self.commit_format!r}")
+        if self.sparse_cap is not None and not self.sparse_transport:
+            raise ValueError("sparse_cap requires sparse_transport=True")
 
 
 def make_engine(cfg: ModelConfig, mesh=None,
@@ -149,6 +167,8 @@ def make_engine(cfg: ModelConfig, mesh=None,
         accumulate=dude_cfg.accumulate, backend=options.backend,
         mesh=engine_mesh, axis_name=paxes,
         commit_format=options.commit_format,
+        sparse_meta=options.sparse_transport,
+        sparse_cap=options.sparse_cap,
     )
 
 
@@ -301,9 +321,14 @@ def make_train_step(cfg: ModelConfig, mesh=None, opt=None,
                 lambda u, o: jnp.where(applied, u, o),
                 slots_up, state.opt.slots)
             opt_new = FlatOptState(t_new, slots_new)
-        return (FlatTrainState(pf_new, opt_new, srv_state),
-                {"loss": jnp.mean(losses),
-                 "applied": applied.astype(jnp.float32)})
+        metrics = {"loss": jnp.mean(losses),
+                   "applied": applied.astype(jnp.float32)}
+        # indexed backend: cumulative commits/latches dropped by the static
+        # index_width bound — the in-graph jax.debug warning's structured
+        # twin, so drops show up in every step's metrics, not just stderr
+        if getattr(srv_state, "drops", None) is not None:
+            metrics["engine_drops"] = srv_state.drops.astype(jnp.float32)
+        return FlatTrainState(pf_new, opt_new, srv_state), metrics
 
     return flat_train_step
 

@@ -84,6 +84,15 @@ def main():
                          "int8_ef (tiled int8 + error feedback) or topk_ef "
                          "(per-tile magnitude top-k before int8) — "
                          "docs/engine.md 'Compressed slabs'")
+    ap.add_argument("--sparse-transport", action="store_true",
+                    help="topk_ef only: ship commits as index-carrying "
+                         "SparseRows and fold only touched tiles — "
+                         "O(k * tiles_touched) ingress instead of O(P) "
+                         "(docs/engine.md 'Sparse commit transport')")
+    ap.add_argument("--sparse-cap", type=int, default=None,
+                    help="static touched-tile slots per SparseRow commit "
+                         "(default: all tiles; smaller caps bound wire "
+                         "bytes, overflow re-enters via error feedback)")
     ap.add_argument("--mesh", default="none",
                     help='"DxM" (data x model) host mesh, or "none"')
     ap.add_argument("--params-layout", default="replicated",
@@ -131,6 +140,8 @@ def main():
             optimizer=args.opt, lr=args.lr,
             server_backend=args.server_backend,
             commit_format=args.commit_format,
+            sparse_transport=args.sparse_transport,
+            sparse_cap=args.sparse_cap,
             mesh=parse_mesh(args.mesh),
             params_layout=args.params_layout,
             fedbuff_buffer_size=args.fedbuff_buffer_size,

@@ -96,6 +96,14 @@ class AsyncResult:
     tau_max: int
     n_grads: int             # stochastic gradients computed
     stats: LoopStats
+    # sparse commit transport (engines with sparse_meta): SparseRow commits
+    # shipped host->device and their actual wire bytes (0 on dense runs)
+    wire_rows: int = 0
+    wire_bytes: int = 0
+    # snapshot-encode cache: encodes actually run vs deliveries served from
+    # the cache because params were unchanged since the last delivery
+    snap_encodes: int = 0
+    snap_reuses: int = 0
 
     @property
     def trace(self) -> ArrivalTrace:
@@ -147,12 +155,46 @@ class AsyncRunner:
         # aliasing path (trace replays stay bit-for-bit).
         codec = engine.codec
         self._compressed = codec.compressed
+        # Sparse commit transport: when the engine carries touched-tile
+        # metadata and the algo is the plain DuDe commit, the arrival step
+        # splits into the sender encode (dense math, produces the O(k * cap)
+        # SparseRow and advances EF) and the receiver fold (scatter-decode
+        # straight into the slab) — the state crossing between them is the
+        # wire row, whose bytes the run counts (AsyncResult.wire_bytes).
+        self._sparse = engine.sparse_meta and self.algo.name == "dude"
+        if self._sparse:
+            from ..core.compression import sparse_wire_nbytes
+            self._wire_nbytes = sparse_wire_nbytes
+            self._encode = jax.jit(engine.encode_sparse_commit)
+
+            def _fold_step(state, worker, row):
+                srv, g = engine.sparse_fold(state.engine, worker, row)
+                t_new = state.opt.step + 1
+                pf, slots = self.fopt.update(state.params, g,
+                                             state.opt.slots, t_new)
+                return FlatTrainState(pf, FlatOptState(t_new, slots), srv), g
+
+            self._step_sparse = jax.jit(_fold_step)
         if self._compressed:
-            self._snap_encode = jax.jit(
-                lambda params, base: codec.encode(
-                    params.astype(jnp.float32) - base))
-            self._snap_unravel = jax.jit(
-                lambda base, q, s: spec.unravel(base + codec.decode(q, s)))
+            if self._sparse:
+                # snapshots ride the same wire format (full tile capacity —
+                # a whole-model delta touches most tiles); decode-identical
+                # to the dense (q, scale) snapshot pair
+                from ..core.compression import sparse_decode
+                P = engine.P
+                self._snap_encode = jax.jit(
+                    lambda params, base: codec.encode_sparse(
+                        params.astype(jnp.float32) - base))
+                self._snap_unravel = jax.jit(
+                    lambda base, row: spec.unravel(
+                        base + sparse_decode(row, P)))
+            else:
+                self._snap_encode = jax.jit(
+                    lambda params, base: codec.encode(
+                        params.astype(jnp.float32) - base))
+                self._snap_unravel = jax.jit(
+                    lambda base, q, s: spec.unravel(
+                        base + codec.decode(q, s)))
 
     def _arrival_step(self, state: FlatTrainState, worker, grad):
         """One server iteration: algo rule (commit for DuDe) + flat apply,
@@ -200,24 +242,50 @@ class AsyncRunner:
         key = jax.random.PRNGKey(seed)
         queue = DeviceQueue(self.queue_depth)
 
+        box = {"state": state, "key": key, "running": None, "n_grads": 0,
+               "wire_rows": 0, "wire_bytes": 0,
+               "snap_encodes": 0, "snap_reuses": 0}
+        # deliver() cache: the params object the last snapshot encode ran
+        # on, and its encoding.  Identity (`is`) comparison — the arrival
+        # step returns a NEW params array whenever anything committed, so an
+        # unchanged object means an unchanged snapshot; a delivery between
+        # two commits (or before the first) reuses the last encode instead
+        # of re-running it.  The object itself is held (not id()) so a GC'd
+        # array can never alias a stale id.
+        snap_cache = {"params": None, "enc": None}
         # every worker starts on the initial model (version 0)
         if self._compressed:
             # delta-encoded snapshots against the run-start master; the
-            # zero delta (q=0 decodes to exactly 0) is shared across workers
+            # zero delta (q=0 decodes to exactly 0) is ONE encode delivered
+            # n ways — the first n cache reuses
             base = state.params
             zero_delta = self._snap_encode(base, base)
+            box["snap_encodes"] = 1
+            box["snap_reuses"] = n - 1
+            snap_cache.update(params=base, enc=zero_delta)
             worker_snaps = [zero_delta for _ in range(n)]
             worker_params = None
         else:
             worker_params = [state.params for _ in range(n)]
-        box = {"state": state, "key": key, "running": None, "n_grads": 0}
         times, iters, losses, gnorms = [], [], [], []
 
         def worker_model(w: int) -> Pytree:
+            if self._sparse:
+                return self._snap_unravel(base, worker_snaps[w])
             if self._compressed:
                 q, s = worker_snaps[w]
                 return self._snap_unravel(base, q, s)
             return self._unravel(worker_params[w])
+
+        def commit_arrival(worker, gflat):
+            if not self._sparse:
+                return self._step(box["state"], worker, gflat)
+            st = box["state"]
+            srv, wire = self._encode(st.engine, worker, gflat)
+            box["wire_rows"] += 1
+            box["wire_bytes"] += self._wire_nbytes(wire)
+            return self._step_sparse(FlatTrainState(st.params, st.opt, srv),
+                                     worker, wire)
 
         def on_arrival(view) -> bool:
             box["key"], k1 = jax.random.split(box["key"])
@@ -225,8 +293,8 @@ class AsyncRunner:
             loss, g = self._grad(worker_model(view.worker), batch, k1)
             gflat = self._ravel(g)
             box["n_grads"] += 1
-            box["state"], g_dir = self._step(box["state"],
-                                             jnp.int32(view.worker), gflat)
+            box["state"], g_dir = commit_arrival(jnp.int32(view.worker),
+                                                 gflat)
             # device-side EMA; the queue keeps the host <= depth steps ahead
             # (g_dir comes out of the arrival step, so waiting on it bounds
             # the whole grad+commit+apply chain of that arrival)
@@ -249,8 +317,14 @@ class AsyncRunner:
 
         def deliver(worker: int) -> None:
             if self._compressed:
-                worker_snaps[worker] = self._snap_encode(
-                    box["state"].params, base)
+                params = box["state"].params
+                if snap_cache["params"] is not params:
+                    snap_cache["params"] = params
+                    snap_cache["enc"] = self._snap_encode(params, base)
+                    box["snap_encodes"] += 1
+                else:
+                    box["snap_reuses"] += 1
+                worker_snaps[worker] = snap_cache["enc"]
             else:
                 worker_params[worker] = box["state"].params
 
@@ -265,4 +339,6 @@ class AsyncRunner:
             losses=np.asarray(losses), gnorms=np.asarray(gnorms),
             state=box["state"], tau_max=stats.tau_max,
             n_grads=box["n_grads"], stats=stats,
+            wire_rows=box["wire_rows"], wire_bytes=box["wire_bytes"],
+            snap_encodes=box["snap_encodes"], snap_reuses=box["snap_reuses"],
         )

@@ -203,9 +203,12 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
     (``core/compression.py``) populate the trailing slots: the ``[n, P/128]``
     scale slabs shard their trailing dim like the ``[n, P]`` rows (tile
     boundaries align with shard boundaries because ``P/k`` is a multiple of
-    128) and the ``[P]`` EF residual shards like ``g_bar``.  With ``like``
-    omitted (or an f32 state) those fields stay ``None``, preserving the
-    historical 5-field structure exactly.
+    128) and the ``[P]`` EF residual shards like ``g_bar``.  Sparse-transport
+    engines (``sparse_meta``) add the ``[n, P/128]`` touched-tile bitmaps —
+    sharded exactly like the scale slabs, so every P-shard owns the metadata
+    of its own tiles — and the indexed backend adds the replicated scalar
+    ``drops`` counter.  With ``like`` omitted (or an f32 state) those fields
+    stay ``None``, preserving the historical 5-field structure exactly.
     """
     if axes is None:
         axes = tuple(mesh.axis_names)
@@ -218,6 +221,7 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
     else:
         vec, row = P(axes), P(None, axes)
     compressed = like is not None and like.ef is not None
+    has = lambda f: like is not None and getattr(like, f, None) is not None
     return EngineState(
         g_bar=NamedSharding(mesh, vec),
         g_workers=NamedSharding(mesh, row),
@@ -227,6 +231,9 @@ def engine_state_shardings(spec: FlatSpec, mesh: Mesh, axes: Any = None,
         gw_scale=NamedSharding(mesh, row) if compressed else None,
         infl_scale=NamedSharding(mesh, row) if compressed else None,
         ef=NamedSharding(mesh, vec) if compressed else None,
+        gw_touched=NamedSharding(mesh, row) if has("gw_touched") else None,
+        in_touched=NamedSharding(mesh, row) if has("in_touched") else None,
+        drops=NamedSharding(mesh, P()) if has("drops") else None,
     )
 
 

@@ -1,0 +1,582 @@
+"""Sparse commit transport (docs/engine.md "Sparse commit transport").
+
+* ``topk_mask`` determinism: exactly k survivors per 128-lane tile, ties
+  broken toward the LOWER lane index, identical under jit — the regression
+  suite for the documented selection rule;
+* a hypothesis property: ``SparseRow`` encode/decode round-trips the dense
+  ``(q, scale)`` pair bit-exactly for random touched-tile patterns, pad
+  tails and caps (overflow keeps the lowest tile ids and drops the rest);
+* bitwise equivalence: ``commit_sparse`` (encode -> SparseRow -> fold) ==
+  the dense ``commit`` on g_bar / EF / payload slabs / decoded rows, and
+  the sparse_meta round == the plain topk_ef round on all three backends,
+  sharded and unsharded;
+* the acceptance-criterion HLO check: the compiled ``sparse_fold`` contains
+  ZERO dense >= P-element compute ops (state slabs only pass through
+  parameters/tuples/scatters), while the dense commit contains many;
+* the indexed backend's structured ``drops`` counter and its
+  ``engine_drops`` surfacing in ``Trainer.step`` metrics;
+* AsyncRunner sparse transport: bitwise equal to the dense topk_ef run on
+  the same arrival schedule, with wire/snapshot-cache counters accounted;
+* checkpoint back-compat: touched-tile bitmaps synthesized from the stored
+  payload slabs when restoring a pre-sparse checkpoint.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import NDEV, multidevice, p_mesh
+from repro.core.compression import (
+    CommitCodec, sparse_decode, sparse_decode_q, sparse_encode,
+    sparse_wire_nbytes, topk_mask, touched_tiles,
+)
+from repro.core.engine import BACKENDS, DuDeEngine
+from repro.core.flatten import make_flat_spec
+from repro.optim import adamw, flat_twin, sgd
+
+
+def _tree(rng):
+    return {
+        "w": jnp.asarray(rng.normal(size=(13, 17)), jnp.float32),
+        "emb": jnp.asarray(rng.normal(size=(4, 3, 9)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=5), jnp.float32),
+    }
+
+
+def _zpad(spec, x):
+    return x.at[..., spec.size:].set(0)
+
+
+# --------------------------------------------- topk_mask determinism rule
+
+
+def test_topk_mask_tie_break_lowest_lane():
+    """Equal-magnitude ties keep the LOWER lane index — the documented rule,
+    on full-tile ties, threshold ties, and sign-mixed ties."""
+    # all 128 lanes tie: survivors are exactly lanes 0..k-1
+    out = np.asarray(topk_mask(jnp.ones(128), 4))
+    assert (out[:4] == 1).all() and not out[4:].any()
+    # ties at the k-th threshold: 5 wins, then the first two 4s
+    x = jnp.zeros(128).at[0].set(5.0).at[jnp.arange(1, 7)].set(4.0)
+    out = np.asarray(topk_mask(x, 3))
+    assert set(np.flatnonzero(out)) == {0, 1, 2}
+    # |x| decides, sign does not: -1/+1 alternating all tie
+    x = jnp.where(jnp.arange(128) % 2 == 0, -1.0, 1.0)
+    out = np.asarray(topk_mask(x, 5))
+    assert list(np.flatnonzero(out)) == [0, 1, 2, 3, 4]
+    np.testing.assert_array_equal(out[:5], np.asarray(x[:5]))
+    # per-tile independence: a second tile with its own tie set
+    x2 = jnp.concatenate([x, jnp.zeros(128).at[120:].set(2.0)])
+    out2 = np.asarray(topk_mask(x2, 5))
+    np.testing.assert_array_equal(out2[:128], out)
+    assert list(np.flatnonzero(out2[128:])) == [120, 121, 122, 123, 124]
+
+
+def test_topk_mask_exact_k_and_jit_eager_agree():
+    """EXACTLY k survivors per tile on dense inputs, and the jitted lowering
+    picks the identical survivor set as eager (both bit-pure max/min/where
+    sweeps)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.sign(rng.normal(size=512))
+                    * (0.5 + rng.random(512)), jnp.float32)
+    for k in (1, 7, 16):
+        out = np.asarray(topk_mask(x, k))
+        assert ((out != 0).reshape(4, 128).sum(-1) == k).all()
+        np.testing.assert_array_equal(
+            out, np.asarray(jax.jit(topk_mask, static_argnums=(1,))(x, k)))
+    # an all-zero tile stays all-zero (the k kept lanes hold zeros)
+    assert not np.asarray(topk_mask(jnp.zeros(128), 8)).any()
+
+
+# ------------------------------------------ SparseRow roundtrip property
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        tiles=st.integers(1, 6),
+        k=st.sampled_from([4, 8, 16]),
+        cap=st.integers(1, 6),
+        frac=st.floats(0.0, 1.0),
+        pad=st.integers(0, 100),
+        mag=st.floats(1e-4, 1e4),
+        seed=st.integers(0, 10_000),
+    )
+    def test_sparse_row_roundtrip_property(tiles, k, cap, frac, pad, mag,
+                                           seed):
+        """``sparse_encode`` / ``sparse_decode_q`` round-trip the dense
+        ``(q, scale)`` pair bit-exactly whenever the touched set fits
+        ``cap``; on overflow the lowest tile ids are kept and the rest
+        dropped.  Random touched patterns, spec-style zero pad tails, and
+        every cap, including cap < tiles."""
+        cap = min(cap, tiles)
+        rng = np.random.default_rng(seed)
+        P = tiles * 128
+        x = np.asarray(rng.normal(size=P) * mag, np.float32)
+        keep = rng.random(tiles) < frac
+        x *= np.repeat(keep, 128)
+        if pad:  # flat-spec pad tail: trailing lanes are structurally zero
+            x[P - min(pad, P):] = 0.0
+        codec = CommitCodec(format="topk_ef", topk=k)
+        q, s = codec.encode(jnp.asarray(x))
+        row = sparse_encode(q, s, cap, k)
+        t_ids = np.flatnonzero(np.asarray(touched_tiles(q)))
+        assert int(row.count) == min(len(t_ids), cap)
+        live = np.asarray(row.tiles)[: int(row.count)]
+        np.testing.assert_array_equal(live, t_ids[:cap])   # ascending ids
+        assert (np.asarray(row.tiles)[int(row.count):] == tiles).all()
+        q2, s2 = sparse_decode_q(row, P)
+        dec2 = np.asarray(sparse_decode(row, P))
+        if len(t_ids) <= cap:   # full fidelity: bitwise inverse
+            np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+            np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+            np.testing.assert_array_equal(
+                dec2, np.asarray(codec.decode(q, s)))
+        else:                   # overflow: carried tiles exact, rest zero
+            m = np.repeat(np.isin(np.arange(tiles), live), 128)
+            np.testing.assert_array_equal(np.asarray(q2)[m],
+                                          np.asarray(q)[m])
+            assert not np.asarray(q2)[~m].any()
+            np.testing.assert_array_equal(
+                dec2[m], np.asarray(codec.decode(q, s))[m])
+            assert not dec2[~m].any()
+
+
+# ------------------------------------- bitwise sparse == dense equivalence
+
+
+def test_commit_sparse_matches_dense_commit_bitwise():
+    """Lockstep over 24 commits: encode -> SparseRow -> scatter-fold equals
+    the dense ``commit`` BITWISE on g_bar, the EF residual, the int8 payload
+    slab, and the decoded rows (stale scales on never-listed tiles are
+    decode-invisible)."""
+    rng = np.random.default_rng(0)
+    n = 4
+    tree = {"w": jnp.zeros(700)}
+    dense = DuDeEngine.for_tree(tree, n_workers=n, commit_format="topk_ef",
+                                interpret=True)
+    sparse = DuDeEngine.for_tree(tree, n_workers=n, commit_format="topk_ef",
+                                 interpret=True, sparse_meta=True)
+    d_st, s_st = dense.init(), sparse.init()
+    dcommit = jax.jit(dense.commit)
+    scommit = jax.jit(sparse.commit_sparse)
+    decode = jax.jit(dense.codec.decode)
+    for t in range(24):
+        w = int(rng.integers(n))
+        g = _zpad(dense.spec,
+                  jnp.asarray(rng.normal(size=dense.P) * 2.0, jnp.float32))
+        d_st, g_d = dcommit(d_st, jnp.int32(w), g)
+        s_st, g_s = scommit(s_st, jnp.int32(w), g)
+        np.testing.assert_array_equal(np.asarray(g_d), np.asarray(g_s))
+        np.testing.assert_array_equal(np.asarray(d_st.ef),
+                                      np.asarray(s_st.ef))
+        np.testing.assert_array_equal(np.asarray(d_st.g_workers),
+                                      np.asarray(s_st.g_workers))
+        np.testing.assert_array_equal(
+            np.asarray(decode(d_st.g_workers, d_st.gw_scale)),
+            np.asarray(decode(s_st.g_workers, s_st.gw_scale)))
+        # the sparse invariant: bitmap == touched tiles of the payload rows
+        np.testing.assert_array_equal(
+            np.asarray(s_st.gw_touched, bool),
+            np.asarray(touched_tiles(s_st.g_workers)))
+
+
+def test_cap_overflow_reenters_ef_bitwise():
+    """A cap smaller than the touched set degrades gracefully: the EF
+    invariant ``dec(row) + ef' == g + ef`` holds BITWISE per commit (dropped
+    tiles re-enter whole), and the slab row always equals the row's own
+    decode."""
+    rng = np.random.default_rng(5)
+    n = 3
+    eng = DuDeEngine.for_tree({"w": jnp.zeros(900)}, n_workers=n,
+                              commit_format="topk_ef", interpret=True,
+                              sparse_meta=True, sparse_cap=2)
+    assert eng.cap_tiles == 2 < eng.n_tiles
+    st = eng.init()
+    enc = jax.jit(eng.encode_sparse_commit)
+    fold = jax.jit(eng.sparse_fold)
+    for t in range(9):
+        w = jnp.int32(t % n)
+        g = _zpad(eng.spec,
+                  jnp.asarray(rng.normal(size=eng.P), jnp.float32))
+        ef_old = st.ef
+        st, row = enc(st, w, g)
+        assert int(row.count) <= 2
+        dec = sparse_decode(row, eng.P)
+        np.testing.assert_array_equal(np.asarray(dec + st.ef),
+                                      np.asarray(g + ef_old))
+        st, _ = fold(st, w, row)
+        q2, _ = sparse_decode_q(row, eng.P)
+        np.testing.assert_array_equal(np.asarray(st.g_workers[t % n]),
+                                      np.asarray(q2))
+
+
+def _engines(backend, n, spec, mesh=None, sparse=False):
+    kw = dict(spec=spec, n_workers=n, backend=backend, interpret=True,
+              commit_format="topk_ef")
+    if sparse:
+        kw.update(sparse_meta=True)
+    if mesh is not None:
+        kw.update(mesh=mesh, axis_name="p")
+    return DuDeEngine(**kw)
+
+
+def _run_rounds(eng, fopt, spec, steps=4, seed=3, shardings=None):
+    rng = np.random.default_rng(seed)
+    n, P = eng.n_workers, spec.padded_size
+    st = eng.init()
+    w = jnp.zeros(P, jnp.float32).at[:spec.size].set(
+        jnp.asarray(rng.normal(size=spec.size), jnp.float32))
+    ost = fopt.init(w)
+    if shardings is not None:
+        sh_state, sh_w, sh_opt = shardings
+        st = jax.device_put(st, sh_state)
+        w = jax.device_put(w, sh_w)
+        ost = jax.device_put(ost, sh_opt)
+    step = jax.jit(lambda s, f, a, b, w, o:
+                   eng.round_apply(s, f, a, b, w, o, fopt))
+    outs = []
+    for t in range(steps):
+        fresh = _zpad(spec, jnp.asarray(rng.normal(size=(n, P)) * 2.0,
+                                        jnp.float32))
+        sm = jnp.asarray(rng.random(n) < 0.6)
+        cm = jnp.asarray(rng.random(n) < 0.5)
+        st, gbar, w, ost = step(st, fresh, sm, cm, w, ost)
+        outs.append((st, gbar, w, ost))
+    return outs
+
+
+def _assert_outs_equal(a, b):
+    for (sa, ga, wa, oa), (sb, gb, wb, ob) in zip(a, b):
+        da, db = sa._asdict(), sb._asdict()
+        assert set(da) == set(db)
+        for k in da:  # fields absent (None) on either side don't compare
+            if da[k] is None or db[k] is None:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(da[k], np.float32), np.asarray(db[k], np.float32),
+                err_msg=f"EngineState.{k}")
+        for la, lb in zip(jax.tree.leaves((ga, wa, oa)),
+                          jax.tree.leaves((gb, wb, ob))):
+            np.testing.assert_array_equal(
+                np.asarray(la, np.float32), np.asarray(lb, np.float32))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sparse_round_matches_plain_topk_round(backend):
+    """The touched-tile round of a sparse_meta engine reproduces the plain
+    topk_ef round BITWISE on every shared leaf (g_bar, slabs, scales, EF,
+    params, adamw slots) on all three backends, and maintains the
+    bitmap == touched_tiles(slab) invariant."""
+    spec = make_flat_spec(_tree(np.random.default_rng(0)))
+    fopt = flat_twin(adamw(0.01, weight_decay=0.1))
+    plain = _run_rounds(_engines(backend, 4, spec), fopt, spec)
+    got = _run_rounds(_engines(backend, 4, spec, sparse=True), fopt, spec)
+    _assert_outs_equal(plain, got)
+    for stt, _, _, _ in got:
+        np.testing.assert_array_equal(
+            np.asarray(stt.gw_touched, bool),
+            np.asarray(touched_tiles(stt.g_workers)))
+        np.testing.assert_array_equal(
+            np.asarray(stt.in_touched, bool),
+            np.asarray(touched_tiles(stt.inflight)))
+
+
+@multidevice
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sparse_round_sharded_matches_unsharded(backend):
+    """P-axis sharded sparse_meta round_apply == single-device, bit-for-bit
+    including the ``[n, P/128]`` touched-tile bitmaps."""
+    from repro.sharding import flat_train_state_shardings
+
+    spec = make_flat_spec(_tree(np.random.default_rng(0)),
+                          mesh_axis_size=NDEV)
+    mesh = p_mesh()
+    fopt = flat_twin(adamw(0.01, weight_decay=0.1))
+    eng_u = _engines(backend, 4, spec, sparse=True)
+    eng_s = _engines(backend, 4, spec, mesh=mesh, sparse=True)
+    sh = flat_train_state_shardings(spec, mesh, ("p",), fopt.init(
+        jnp.zeros(spec.padded_size)), server_like=eng_s.state_shapes())
+    outs_u = _run_rounds(eng_u, fopt, spec)
+    outs_s = _run_rounds(eng_s, fopt, spec,
+                         shardings=(eng_s.shardings(), sh.params, sh.opt))
+    _assert_outs_equal(outs_u, outs_s)
+
+
+@multidevice
+def test_sparse_fold_sharded_matches_unsharded():
+    """The mesh-native fold (replicated wire row, each P-shard folds only
+    its own tiles via the global->local id shift) == the single-device fold
+    bitwise, across shard-boundary-straddling touched sets."""
+    rng = np.random.default_rng(2)
+    n = 4
+    tree = {"w": jnp.zeros(NDEV * 256)}
+    spec = make_flat_spec(tree, mesh_axis_size=NDEV)
+    eng_u = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef",
+                       interpret=True, sparse_meta=True)
+    eng_s = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef",
+                       interpret=True, sparse_meta=True,
+                       mesh=p_mesh(), axis_name="p")
+    st_u, st_s = eng_u.init(), jax.device_put(eng_s.init(),
+                                              eng_s.shardings())
+    enc = jax.jit(eng_u.encode_sparse_commit)
+    fold_u, fold_s = jax.jit(eng_u.sparse_fold), jax.jit(eng_s.sparse_fold)
+    for t in range(2 * n):
+        w = jnp.int32(t % n)
+        g = _zpad(spec, jnp.asarray(rng.normal(size=spec.padded_size),
+                                    jnp.float32))
+        st_u, row = enc(st_u, w, g)
+        st_s = st_s._replace(ef=jnp.asarray(st_u.ef))  # sender-side state
+        st_u, gb_u = fold_u(st_u, w, row)
+        st_s, gb_s = fold_s(st_s, w, row)
+        np.testing.assert_array_equal(np.asarray(gb_u), np.asarray(gb_s))
+        for k in ("g_workers", "gw_scale", "gw_touched"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_u, k), np.float32),
+                np.asarray(getattr(st_s, k), np.float32), err_msg=k)
+
+
+# --------------------------------------- acceptance: no dense [P] compute
+
+
+def test_sparse_fold_hlo_zero_dense_p_compute():
+    """The compiled ``sparse_fold`` computes NO dense >= P-element array:
+    the [P]/[n, P] state slabs only pass through parameters, tuples, copies
+    and scatter writes.  The dense ``commit`` on the same engine shape is
+    the positive control — it computes dozens."""
+    from repro.launch.hlo_analysis import dense_p_compute_ops
+
+    tree = {"w": jnp.zeros((64, 128)), "b": jnp.zeros(320)}
+    eng = DuDeEngine.for_tree(tree, 4, commit_format="topk_ef",
+                              sparse_meta=True, sparse_cap=8)
+    dense = DuDeEngine.for_tree(tree, 4, commit_format="topk_ef")
+    st = eng.init()
+    g = jnp.zeros((eng.P,), jnp.float32)
+    _, row = jax.jit(eng.encode_sparse_commit)(st, jnp.int32(0), g)
+    hlo = jax.jit(eng.sparse_fold).lower(st, jnp.int32(0), row
+                                         ).compile().as_text()
+    assert dense_p_compute_ops(hlo, eng.P) == []
+    hlo_d = jax.jit(dense.commit).lower(dense.init(), jnp.int32(0), g
+                                        ).compile().as_text()
+    assert len(dense_p_compute_ops(hlo_d, eng.P)) > 5  # the check has teeth
+
+
+# ------------------------------------------- indexed drops counter surface
+
+
+def test_indexed_drops_counter_accumulates():
+    """|C_t| or |S_t| beyond ``index_width`` increments the structured
+    ``drops`` counter by the exact overflow, accumulating across rounds."""
+    spec = make_flat_spec({"w": jnp.zeros(300)})
+    eng = DuDeEngine(spec=spec, n_workers=4, backend="indexed",
+                     index_width=1, index_check="off", interpret=True)
+    st = eng.init()
+    assert int(st.drops) == 0
+    fresh = jnp.ones((4, eng.P), jnp.float32)
+    step = jax.jit(eng.round)
+    sm = jnp.asarray([True, True, False, False])   # 2 starts  -> +1
+    cm = jnp.asarray([True, True, True, False])    # 3 commits -> +2
+    st, _ = step(st, fresh, sm, cm)
+    assert int(st.drops) == 3
+    st, _ = step(st, fresh, jnp.zeros(4, bool), cm)
+    assert int(st.drops) == 5
+    # reference backend carries no counter at all
+    ref = DuDeEngine(spec=spec, n_workers=4, interpret=True)
+    assert ref.init().drops is None
+
+
+def test_trainer_step_surfaces_engine_drops_metric():
+    """``Trainer.step`` metrics expose ``engine_drops`` on indexed-backend
+    sessions (and omit it elsewhere) — the structured twin of the in-graph
+    debug warning."""
+    from repro.api import Trainer, TrainerConfig
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="drops-lm", arch_type="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=32,
+        dtype=jnp.float32, remat=False, attn_chunk=16, n_workers=3,
+    )
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (3, 1, 16), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (3, 1, 16), 0, cfg.vocab_size),
+    }
+    ones = jnp.ones(3, bool)
+    t = Trainer.create(TrainerConfig(arch=cfg, lr=0.01,
+                                     server_backend="indexed"))
+    m = t.step(batch, ones, ones)
+    assert float(m["engine_drops"]) == 0.0  # full width never drops
+    t2 = Trainer.create(TrainerConfig(arch=cfg, lr=0.01))
+    assert "engine_drops" not in t2.step(batch, ones, ones)
+
+
+# --------------------------------------------------- config validation
+
+
+def test_sparse_transport_config_validation():
+    from repro.api import ConfigError, TrainerConfig
+
+    with pytest.raises(ConfigError, match="topk_ef"):
+        TrainerConfig(arch="qwen2_0_5b", smoke=True, sparse_transport=True)
+    with pytest.raises(ConfigError, match="sparse_transport"):
+        TrainerConfig(arch="qwen2_0_5b", smoke=True,
+                      commit_format="topk_ef", sparse_cap=4)
+    with pytest.raises(ValueError, match="topk_ef"):
+        DuDeEngine(spec=make_flat_spec({"w": jnp.zeros(300)}), n_workers=2,
+                   commit_format="int8_ef", sparse_meta=True)
+    TrainerConfig(arch="qwen2_0_5b", smoke=True, commit_format="topk_ef",
+                  sparse_transport=True, sparse_cap=2)  # valid combination
+
+
+# ------------------------------------------- AsyncRunner sparse transport
+
+
+def test_runner_sparse_transport_bitwise_and_counters():
+    """The sparse-transport AsyncRunner run is BITWISE identical to the
+    dense topk_ef run on the same arrival schedule — params, engine slabs,
+    losses — and its counters account the transport: one SparseRow per
+    arrival at the engine-cap wire size, one snapshot encode per applying
+    delivery plus the init zero-delta shared by all n workers."""
+    from repro.runtime import ExponentialArrivals
+    from repro.runtime.runner import AsyncRunner
+
+    rng = np.random.default_rng(0)
+    n, total = 4, 60
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)}
+    targets = jnp.asarray(rng.normal(size=(n, 8, 16)), jnp.float32)
+
+    def sample_fn(i, host_rng):
+        return {"i": jnp.int32(i),
+                "noise": jnp.asarray(host_rng.normal(size=(8, 16)),
+                                     jnp.float32)}
+
+    def grad_fn(params, batch, key):
+        def loss(p):
+            t = targets[batch["i"]] + 0.05 * batch["noise"]
+            return 0.5 * jnp.sum((p["w"] - t) ** 2)
+        return jax.value_and_grad(loss)(params)
+
+    outs = {}
+    for name, sparse in (("dense", False), ("sparse", True)):
+        eng = DuDeEngine.for_tree(tree, n_workers=n,
+                                  commit_format="topk_ef", interpret=True,
+                                  sparse_meta=sparse)
+        runner = AsyncRunner(eng, "dude", sgd(0.05), grad_fn)
+        assert runner._sparse == sparse
+        outs[name] = (eng, runner.run(
+            ExponentialArrivals(n, seed=1), total, sample_fn,
+            runner.init_state(tree), seed=0, record_every=10))
+    eng_s, res_s = outs["sparse"]
+    _, res_d = outs["dense"]
+    np.testing.assert_array_equal(np.asarray(res_s.state.params),
+                                  np.asarray(res_d.state.params))
+    np.testing.assert_array_equal(np.asarray(res_s.state.engine.g_bar),
+                                  np.asarray(res_d.state.engine.g_bar))
+    np.testing.assert_array_equal(np.asarray(res_s.state.engine.g_workers),
+                                  np.asarray(res_d.state.engine.g_workers))
+    np.testing.assert_array_equal(res_s.losses, res_d.losses)
+    # transport accounting
+    assert res_d.wire_rows == res_d.wire_bytes == 0
+    assert res_s.wire_rows == total
+    cap, k = eng_s.cap_tiles, eng_s.codec.topk
+    assert res_s.wire_bytes == total * (cap * (2 * k + 8) + 4)
+    st0 = eng_s.init()
+    _, row = jax.jit(eng_s.encode_sparse_commit)(
+        st0, jnp.int32(0), jnp.zeros(eng_s.P))
+    assert res_s.wire_bytes == total * sparse_wire_nbytes(row)
+    # snapshot-encode cache: the init zero-delta is encoded once and shared
+    # n ways; every applying delivery afterwards sees fresh params
+    assert res_s.snap_encodes >= 1
+    assert res_s.snap_reuses >= n - 1
+    assert res_s.snap_encodes + res_s.snap_reuses == total + n
+
+
+# -------------------------------------------- checkpoint touched synthesis
+
+
+def test_ckpt_sparse_state_roundtrip_and_synthesis(tmp_path):
+    """A sparse_meta FlatTrainState checkpoints bit-exactly; restoring a
+    PRE-SPARSE checkpoint (dense topk_ef state, no bitmap leaves) into a
+    sparse_meta structure synthesizes the touched bitmaps from the stored
+    payload slabs — exactly the engine invariant."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.launch.steps import init_flat_train_state
+
+    rng = np.random.default_rng(4)
+    tree = {"w": jnp.asarray(rng.normal(size=(20, 20)), jnp.float32)}
+    spec = make_flat_spec(tree)
+
+    def populated(sparse):
+        eng = DuDeEngine.for_tree(tree, n_workers=3,
+                                  commit_format="topk_ef", interpret=True,
+                                  sparse_meta=sparse)
+        state = init_flat_train_state(eng, adamw(0.01), tree)
+        srv = state.engine
+        commit = jax.jit(eng.commit)
+        for t in range(6):
+            g = _zpad(spec, jnp.asarray(rng.normal(size=eng.P), jnp.float32))
+            srv, _ = commit(srv, jnp.int32(t % 3), g)
+        return state._replace(engine=srv)
+
+    # roundtrip: bitmaps stored and restored bit-exactly
+    state_s = populated(sparse=True)
+    assert state_s.engine.gw_touched is not None
+    save_checkpoint(str(tmp_path / "s"), 1, state_s, flat_spec=spec)
+    back = restore_checkpoint(str(tmp_path / "s"), 1, state_s,
+                              flat_spec=spec)
+    for a, b in zip(jax.tree.leaves(state_s), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+    # back-compat: dense checkpoint -> sparse_meta structure
+    state_d = populated(sparse=False)
+    save_checkpoint(str(tmp_path / "d"), 2, state_d, flat_spec=spec)
+    like = populated(sparse=True)
+    back = restore_checkpoint(str(tmp_path / "d"), 2, like, flat_spec=spec)
+    np.testing.assert_array_equal(np.asarray(back.engine.g_workers),
+                                  np.asarray(state_d.engine.g_workers))
+    np.testing.assert_array_equal(
+        np.asarray(back.engine.gw_touched, bool),
+        np.asarray(touched_tiles(state_d.engine.g_workers)))
+    np.testing.assert_array_equal(
+        np.asarray(back.engine.in_touched, bool),
+        np.asarray(touched_tiles(state_d.engine.inflight)))
+
+
+# ------------------------------------------------------ subprocess driver
+
+
+def test_sparse_transport_sharded_suite_subprocess():
+    """Run the in-process multidevice tests above on 8 host-platform
+    devices (they are skipped in a default single-device session)."""
+    if jax.device_count() >= NDEV:
+        pytest.skip("already multi-device in-process")
+    repo = Path(__file__).resolve().parent.parent
+    env = {
+        **os.environ,
+        "PYTHONPATH": "src",
+        "JAX_PLATFORMS": "cpu",
+        "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                      + f" --xla_force_host_platform_device_count={NDEV}"
+                      ).strip(),
+    }
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(Path(__file__).resolve()), "-k", "not subprocess"],
+        capture_output=True, text=True, timeout=540, env=env, cwd=repo,
+    )
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
+    assert "skipped" not in r.stdout.splitlines()[-1], r.stdout[-500:]
