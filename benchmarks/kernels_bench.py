@@ -60,11 +60,18 @@ measured server-side fold and worker-side encode throughput, and a bitwise
 |g_bar| pulse — the sparse scatter-fold must equal the dense commit
 bit-for-bit.
 
-``--json-out`` (default ``benchmarks/BENCH_8.json``) writes every row as
+The transport sweep (docs/async.md "Multi-host transport") prices the
+framed wire hop itself: the same 2-link hosted run (HostRunner + two
+run_worker client threads, full protocol incl. handshake/snapshots/
+heartbeats) over in-proc queues vs real loopback sockets — arrivals/sec
+and framed byte totals each way; the in-proc row is the protocol-only
+ceiling, the delta is the OS socket cost.
+
+``--json-out`` (default ``benchmarks/BENCH_9.json``) writes every row as
 machine-readable JSON — backend x (n, P) x sharded/unsharded, the
 round+apply grid, the session-dispatch rows, the arrival-throughput rows,
-the commit-format rows, the sparse-transport rows, and the unravel rows —
-so the perf trajectory is tracked across PRs.
+the commit-format rows, the sparse-transport rows, the transport rows,
+and the unravel rows — so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -443,6 +450,79 @@ def arrival_throughput_rows(points=((8, 1 << 14), (64, 1 << 16)),
     return rows
 
 
+def transport_sweep(n: int = 4, P0: int = 1 << 10,
+                    total_iters: int = 40) -> list[dict]:
+    """The framed multi-host hop: in-proc queues vs real loopback sockets.
+
+    The same 2-link hosted run (``HostRunner.serve`` + two ``run_worker``
+    client threads, topk_ef sparse snapshots, f32 commits) over
+    ``InProcTransport.pair()`` and over connected ``socket.socketpair()``
+    ends — arrivals/sec with the full protocol (handshake, snapshots,
+    commits, heartbeats) and the framed byte totals each way.  The delta
+    between the two rows is the OS socket cost; the in-proc row is the
+    protocol-only ceiling.
+    """
+    import socket
+    import threading
+
+    from repro.runtime.hostloop import HostRunner, run_worker
+    from repro.runtime.runner import AsyncRunner
+    from repro.runtime.transport import InProcTransport, SocketTransport
+
+    tree = jnp.zeros((P0,))
+    spec = make_flat_spec(tree)
+    grad_fn = lambda p, b, k: (jnp.sum(p * b), p - b)
+    sample = lambda i, rng: jnp.full((spec.padded_size,), float(i % 3))
+    groups = [tuple(range(n // 2)), tuple(range(n // 2, n))]
+
+    def hosted_run(make_pair):
+        eng = DuDeEngine(spec=spec, n_workers=n, commit_format="topk_ef",
+                         sparse_meta=True)
+        runner = AsyncRunner(eng, "dude", FLAT_OPTS["sgd"], grad_fn)
+        pairs = [make_pair() for _ in range(2)]
+        threads = [threading.Thread(
+            target=lambda i=i: run_worker(lambda: pairs[i][1], groups[i],
+                                          grad_fn, sample, spec,
+                                          poll_s=0.02),
+            daemon=True) for i in range(2)]
+        for t in threads:
+            t.start()
+        host = HostRunner(runner, heartbeat_s=2.0, dead_after_s=10.0,
+                          poll_s=0.01)
+        t0 = time.perf_counter()
+        res = host.serve([p[0] for p in pairs], total_iters,
+                         runner.init_state(tree), seed=0,
+                         record_every=10 ** 9)
+        dt = time.perf_counter() - t0
+        for t in threads:
+            t.join(timeout=10)
+        return res, dt
+
+    def sock_pair():
+        a, b = socket.socketpair()
+        return (SocketTransport(a, timeout=10.0),
+                SocketTransport(b, timeout=10.0))
+
+    rows = []
+    for label, make_pair in (("inproc", InProcTransport.pair),
+                             ("socket", sock_pair)):
+        res, dt = hosted_run(make_pair)
+        per = dt / max(1, res.stats.iters)
+        rows.append({
+            "name": f"runtime/transport/{label}/n{n}_P{P0}",
+            "n": n, "P": spec.padded_size,
+            "us_per_call": 1e6 * per,
+            "derived": 1.0 / per,       # arrivals/sec, wire included
+            "extra": {"arrivals_per_s": 1.0 / per,
+                      "iters": res.stats.iters,
+                      "wire_sent": res.wire_sent,
+                      "wire_recv": res.wire_recv,
+                      "commit_bytes_per_arrival":
+                          res.wire_recv / max(1, res.stats.iters)},
+        })
+    return rows
+
+
 def sparse_transport_sweep(points=((8, 1 << 14), (64, 1 << 16)),
                            tiles_touched: int = 32) -> list[dict]:
     """SparseRow vs dense topk_ef commit transport on structurally sparse
@@ -778,6 +858,7 @@ def run(backend: str = "all") -> list[dict]:
     rows += arrival_throughput_rows()
     rows += commit_format_sweep()
     rows += sparse_transport_sweep()
+    rows += transport_sweep()
     if jax.device_count() > 1:
         rows += engine_sweep(backends, sharded=True)
         rows += round_apply_sweep(backends, sharded=True)
@@ -853,7 +934,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_8.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_9.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -866,7 +947,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 8,
+                "pr": 9,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

@@ -12,11 +12,12 @@
   checkpoint.
 """
 
-from .config import CheckpointPolicy, ConfigError, OPTIMIZERS, TrainerConfig
+from .config import (CheckpointPolicy, ConfigError, OPTIMIZERS,
+                     TrainerConfig, TransportPolicy)
 from .serve import ServeConfig, ServeSession
 from .trainer import Trainer
 
 __all__ = [
     "CheckpointPolicy", "ConfigError", "OPTIMIZERS", "TrainerConfig",
-    "Trainer", "ServeConfig", "ServeSession",
+    "TransportPolicy", "Trainer", "ServeConfig", "ServeSession",
 ]

@@ -31,7 +31,8 @@ from ..core.engine import BACKENDS
 from ..models.config import ModelConfig
 from ..optim import Optimizer, adamw, momentum_sgd, sgd
 
-__all__ = ["ConfigError", "CheckpointPolicy", "TrainerConfig", "OPTIMIZERS"]
+__all__ = ["ConfigError", "CheckpointPolicy", "TransportPolicy",
+           "TrainerConfig", "OPTIMIZERS"]
 
 # name -> factory(lr) for the string form of ``TrainerConfig.optimizer``
 OPTIMIZERS = {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}
@@ -75,6 +76,42 @@ class CheckpointPolicy:
         if self.every > 0 and self.directory is None:
             raise ConfigError(
                 "CheckpointPolicy.every set without a directory")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportPolicy:
+    """Multi-host transport knobs (``runtime/hostloop.py``).
+
+    ``heartbeat_s`` is how long a link may stay silent before the server
+    PINGs it; past ``dead_after_s`` it is declared dead (its logical
+    workers become ``AsyncResult.dropouts``).  ``allow_reconnect`` lets a
+    dropped worker process re-handshake mid-run and resume its in-flight
+    job; ``timeout_s`` / ``retries`` / ``backoff_s`` shape each socket
+    send/recv (exponential backoff between attempts)."""
+
+    heartbeat_s: float = 5.0
+    dead_after_s: float = 20.0
+    poll_s: float = 0.05
+    hello_timeout_s: float = 30.0
+    timeout_s: float = 30.0
+    retries: int = 5
+    backoff_s: float = 0.05
+    allow_reconnect: bool = True
+
+    def __post_init__(self):
+        for name in ("heartbeat_s", "dead_after_s", "poll_s",
+                     "hello_timeout_s", "timeout_s", "backoff_s"):
+            if getattr(self, name) <= 0:
+                raise ConfigError(
+                    f"TransportPolicy.{name}={getattr(self, name)} must be "
+                    "> 0")
+        if self.dead_after_s <= self.heartbeat_s:
+            raise ConfigError(
+                f"TransportPolicy.dead_after_s={self.dead_after_s} must "
+                f"exceed heartbeat_s={self.heartbeat_s} (a PING needs time "
+                "to be answered before the link is declared dead)")
+        if self.retries < 0:
+            raise ConfigError(f"TransportPolicy.retries={self.retries} < 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +172,8 @@ class TrainerConfig:
                                         # depth (2 = double buffering)
     seed: int = 0
     checkpoint: CheckpointPolicy = CheckpointPolicy()
+    transport: TransportPolicy = TransportPolicy()  # multi-host serving
+                                                    # (trainer.serve_async)
 
     def __post_init__(self):
         if self.algo not in ROUND_ALGOS and self.algo not in ASYNC_ALGOS:

@@ -201,7 +201,8 @@ class Trainer:
     def run_async(self, arrivals, total_iters: int, sample_fn,
                   *, record_every: int = 10, eval_fn=None, ema: float = 0.9,
                   max_time: Optional[float] = None,
-                  seed: Optional[int] = None):
+                  seed: Optional[int] = None, key_mode: str = "arrival",
+                  record_digests: bool = False):
         """Drive ``total_iters`` per-arrival server iterations through the
         event-driven ``runtime.AsyncRunner`` — one ``engine.commit`` (or
         ASGD arrival rule) + flat optimizer apply per gradient arrival, on
@@ -246,7 +247,65 @@ class Trainer:
         res = self._runner.run(
             arrivals, total_iters, sample_fn, self.state,
             seed=seed, record_every=record_every,
-            eval_fn=eval_fn, ema=ema, max_time=max_time)
+            eval_fn=eval_fn, ema=ema, max_time=max_time,
+            key_mode=key_mode, record_digests=record_digests)
+        self.state = res.state
+        self.rounds += int(res.stats.iters)
+        return res
+
+    def serve_async(self, links, total_iters: int, *,
+                    record_every: int = 10, eval_fn=None, ema: float = 0.9,
+                    seed: Optional[int] = None, accept_fn=None,
+                    max_wall_s: Optional[float] = None):
+        """Multi-host twin of ``run_async``: drive ``total_iters`` server
+        iterations from commit frames arriving on ``links`` (connected
+        ``runtime.transport`` endpoints, e.g. ``runtime.accept_links``
+        output) instead of a simulated arrival process.
+
+        The transport knobs come from ``config.transport``
+        (``TransportPolicy``); ``accept_fn`` (e.g.
+        ``runtime.poll_accept_fn(listener)``) enables mid-run worker
+        reconnects.  Mid-run server-side checkpointing follows the
+        config's ``CheckpointPolicy`` — unlike the single-process runner,
+        the hosted loop CAN save every ``every`` applied iterations because
+        it owns the arrival loop.  Updates ``self.state``/``self.rounds``
+        and returns the ``runtime.AsyncResult`` whose recorded trace
+        replays bit-for-bit through ``run_async(TraceArrivals(trace), ...,
+        key_mode="worker")``.  See docs/async.md ("Multi-host transport").
+        """
+        from ..runtime.hostloop import HostRunner
+        from ..runtime.runner import AsyncRunner
+        if self.async_algo is None:
+            raise ConfigError(
+                f"algo {self.config.algo!r} has no arrival-granularity "
+                f"rule; async options: {ASYNC_ALGOS}")
+        if self.state is None:
+            raise ConfigError(
+                "abstract session has no state; use Trainer.create/restore")
+        if seed is None:
+            seed = self.config.seed + self.rounds
+        if self._runner is None:
+            self._runner = AsyncRunner(
+                self.engine, self.async_algo, self.opt,
+                self._model_grad_fn(),
+                queue_depth=self.config.arrival_queue_depth,
+                max_in_flight=self.config.max_in_flight)
+        tp = self.config.transport
+        host = HostRunner(self._runner, heartbeat_s=tp.heartbeat_s,
+                          dead_after_s=tp.dead_after_s, poll_s=tp.poll_s,
+                          hello_timeout_s=tp.hello_timeout_s,
+                          allow_reconnect=tp.allow_reconnect)
+        pol = self.config.checkpoint
+        ckpt_fn = None
+        if pol.directory and pol.every:
+            def ckpt_fn(state, it):
+                save_checkpoint(pol.directory, self.rounds + it, state,
+                                flat_spec=self.engine.spec)
+        res = host.serve(links, total_iters, self.state, seed=seed,
+                         record_every=record_every, eval_fn=eval_fn,
+                         ema=ema, accept_fn=accept_fn,
+                         checkpoint_every=pol.every or None,
+                         checkpoint_fn=ckpt_fn, max_wall_s=max_wall_s)
         self.state = res.state
         self.rounds += int(res.stats.iters)
         return res

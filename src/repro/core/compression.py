@@ -57,8 +57,10 @@ with no float slop.  Tested in ``tests/test_compression.py``.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import NamedTuple, Optional
 
+import numpy as np
 from jax import lax
 import jax.numpy as jnp
 
@@ -68,7 +70,7 @@ __all__ = [
     "COMMIT_FORMATS", "TILE", "CommitCodec", "SparseRow",
     "quantize", "dequantize", "topk_mask", "ef_encode", "ef_decode",
     "touched_tiles", "sparse_encode", "sparse_decode_q", "sparse_decode",
-    "sparse_wire_nbytes", "zero_tile_scale",
+    "sparse_wire_nbytes", "zero_tile_scale", "commit_digest",
 ]
 
 TILE = PAD_MULTIPLE  # 128 lanes per scale tile — the engine pad granularity
@@ -218,6 +220,28 @@ class SparseRow(NamedTuple):
 def sparse_wire_nbytes(row: SparseRow) -> int:
     """Actual bytes of one ``SparseRow`` on the wire (static, cap-sized)."""
     return sum(int(x.size) * x.dtype.itemsize for x in row)
+
+
+def commit_digest(*arrays) -> str:
+    """Canonical 8-hex-char digest of a commit's payload arrays.
+
+    CRC32 over each array's little-endian bytes, tagged with dtype and shape
+    so byte-identical buffers of different layouts cannot collide by
+    accident.  This is the per-arrival integrity stamp the multi-host
+    transport sends with every commit and the trace records (schema >= 2):
+    a replay recomputing the same gradients produces the same digests, so a
+    digest mismatch localizes WHICH arrival diverged (or which frame was
+    corrupted in flight) instead of only failing the final-params check.
+    Accepts jax or numpy arrays (device arrays are pulled to host — call it
+    on values the host already owns on hot paths).
+    """
+    crc = 0
+    for x in arrays:
+        a = np.asarray(x)
+        a = a.astype(a.dtype.newbyteorder("<"), copy=False)
+        tag = f"{a.dtype.str}{a.shape}".encode()
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), zlib.crc32(tag, crc))
+    return f"{crc & 0xFFFFFFFF:08x}"
 
 
 def touched_tiles(q: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:

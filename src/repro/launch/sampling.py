@@ -1,0 +1,60 @@
+"""The per-worker batch pipeline, shared by every launch entrypoint.
+
+``make_worker_sample_fn`` builds the ``sample_fn(worker, rng) -> batch``
+callable the async runtime consumes — token sampling from the
+heterogeneous per-worker distributions plus the model-specific batch
+shaping (codebook fan-out, prefix-label padding, frontend prefix
+embeddings) that used to live inline in ``launch/train.py``.
+
+It lives in its own module because multi-host runs need the IDENTICAL
+pipeline in three places: the recording server, the remote worker process
+(``launch/worker.py``), and the single-process replay — a batch drawn for
+``(worker, job)`` must be bit-identical in all three or the trace-replay
+oracle fails.  Everything here is driven only by ``(worker, rng)``: no
+global state, no arrival-order dependence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data import make_token_sampler
+from ..models.stubs import make_prefix_embeddings
+
+__all__ = ["make_worker_sample_fn"]
+
+
+def make_worker_sample_fn(cfg, *, seq_len: int, per_worker_batch: int,
+                          heterogeneity: float = 1.0, seed: int = 0):
+    """``sample_fn(worker, rng) -> batch`` for model config ``cfg``.
+
+    ``rng`` supplies ALL randomness (the async runtime hands each call the
+    stream matching its key_mode); ``seed`` only fixes the per-worker token
+    distributions and the frontend prefix embeddings, which are
+    deterministic per session.
+    """
+    sampler = make_token_sampler(
+        cfg.n_workers, cfg.vocab_size, seq_len, per_worker_batch,
+        heterogeneity=heterogeneity, seed=seed,
+    )
+    key = jax.random.PRNGKey(seed)
+
+    def sample_fn(i, rng):
+        per = sampler(i, rng)
+        toks, labs = np.asarray(per["tokens"]), np.asarray(per["labels"])
+        if cfg.num_codebooks > 1:
+            toks = np.repeat(toks[..., None], cfg.num_codebooks, -1)
+            labs = np.repeat(labs[..., None], cfg.num_codebooks, -1)
+        if cfg.num_prefix_tokens:
+            pad = -np.ones((per_worker_batch, cfg.num_prefix_tokens)
+                           + labs.shape[2:], labs.dtype)
+            labs = np.concatenate([pad, labs], axis=1)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        if cfg.frontend:
+            batch["prefix_emb"] = make_prefix_embeddings(
+                key, cfg, per_worker_batch)
+        return batch
+
+    return sample_fn

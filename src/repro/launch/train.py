@@ -34,15 +34,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import CheckpointPolicy, ConfigError, Trainer, TrainerConfig
+from repro.api import (CheckpointPolicy, ConfigError, Trainer,
+                       TrainerConfig, TransportPolicy)
 from repro.api.config import OPTIMIZERS
 from repro.core import (
     ASYNC_ALGOS, BACKENDS, COMMIT_FORMATS, ROUND_ALGOS, delay_stats,
     make_round_schedule,
     truncated_normal_speeds,
 )
-from repro.data import make_token_sampler
-from repro.models.stubs import make_prefix_embeddings
+from repro.launch.sampling import make_worker_sample_fn
 from repro.runtime import (
     ARRIVAL_KINDS, ExponentialArrivals, FixedArrivals, make_arrivals,
 )
@@ -123,6 +123,29 @@ def main():
                     help="bound on concurrent dispatched-but-unarrived "
                          "gradient jobs (back-pressure on simultaneously "
                          "stale work; default: all workers)")
+    # ---------------------------------------------- multi-host server flags
+    ap.add_argument("--serve", default=None, metavar="HOST:PORT",
+                    help="multi-host server mode (needs --async): listen "
+                         "here, accept --expect-links worker processes "
+                         "(launch/worker.py), and drive the server "
+                         "iteration from their commit frames "
+                         "(docs/async.md 'Multi-host transport')")
+    ap.add_argument("--expect-links", type=int, default=1,
+                    help="worker PROCESSES to wait for before serving "
+                         "(each may carry several logical workers)")
+    ap.add_argument("--link-timeout", type=float, default=120.0,
+                    help="seconds to wait for the initial links")
+    ap.add_argument("--heartbeat-s", type=float, default=5.0,
+                    help="PING a link silent this long")
+    ap.add_argument("--dead-after-s", type=float, default=20.0,
+                    help="declare a link dead after this much silence")
+    ap.add_argument("--max-wall-s", type=float, default=None,
+                    help="hard wall-clock bound on the serving loop")
+    ap.add_argument("--replay-check", action="store_true",
+                    help="after serving, replay the recorded trace through "
+                         "the single-process AsyncRunner and assert the "
+                         "final [P] params and per-arrival digests match "
+                         "bit-for-bit")
     ap.add_argument("--speed-std", type=float, default=1.0,
                     help="worker speed heterogeneity (paper std)")
     ap.add_argument("--heterogeneity", type=float, default=1.0,
@@ -149,9 +172,14 @@ def main():
             seed=args.seed,
             checkpoint=CheckpointPolicy(directory=args.ckpt_dir,
                                         every=args.ckpt_every),
+            transport=TransportPolicy(heartbeat_s=args.heartbeat_s,
+                                      dead_after_s=args.dead_after_s),
         )
     except ConfigError as e:
         ap.error(str(e))
+    if args.serve and not args.async_mode:
+        ap.error("--serve needs --async (the multi-host loop is arrival-"
+                 "granularity)")
 
     if args.resume and args.ckpt_dir:
         trainer = Trainer.restore(args.ckpt_dir, config)
@@ -167,29 +195,67 @@ def main():
     print(f"[train] params={trainer.param_count():,}")
 
     speeds = truncated_normal_speeds(n, std=args.speed_std, seed=args.seed + 1)
-    sampler = make_token_sampler(
-        n, cfg.vocab_size, args.seq_len, args.per_worker_batch,
-        heterogeneity=args.heterogeneity, seed=args.seed,
-    )
-    key = jax.random.PRNGKey(args.seed)
-
-    def worker_batch(per):
-        """One worker's sample -> model batch (no worker axis)."""
-        toks, labs = np.asarray(per["tokens"]), np.asarray(per["labels"])
-        if cfg.num_codebooks > 1:
-            toks = np.repeat(toks[..., None], cfg.num_codebooks, -1)
-            labs = np.repeat(labs[..., None], cfg.num_codebooks, -1)
-        if cfg.num_prefix_tokens:
-            pad = -np.ones((args.per_worker_batch, cfg.num_prefix_tokens)
-                           + labs.shape[2:], labs.dtype)
-            labs = np.concatenate([pad, labs], axis=1)
-        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
-        if cfg.frontend:
-            batch["prefix_emb"] = make_prefix_embeddings(
-                key, cfg, args.per_worker_batch)
-        return batch
+    # the one batch pipeline every mode shares — identical bytes for a given
+    # (worker, rng) in the server, a remote worker process, and a replay
+    sample_fn = make_worker_sample_fn(
+        cfg, seq_len=args.seq_len, per_worker_batch=args.per_worker_batch,
+        heterogeneity=args.heterogeneity, seed=args.seed)
 
     t0 = time.time()
+
+    if args.serve:
+        # ----------------------- multi-host serving (real worker links) ----
+        from repro.runtime.hostloop import accept_links, poll_accept_fn
+        from repro.runtime.transport import serve_listener
+        host, port = args.serve.rsplit(":", 1)
+        listener = serve_listener(host, int(port))
+        print(f"[serve] listening on {args.serve}, waiting for "
+              f"{args.expect_links} link(s)")
+        links = accept_links(listener, args.expect_links,
+                             timeout=args.link_timeout)
+        res = trainer.serve_async(links, args.rounds,
+                                  record_every=args.log_every,
+                                  seed=args.seed,
+                                  accept_fn=poll_accept_fn(listener),
+                                  max_wall_s=args.max_wall_s)
+        listener.close()
+        for t, it, loss in zip(res.times, res.iters, res.losses):
+            print(f"[arrival it={it:5d}] loss={loss:.4f}")
+        if args.trace_out:
+            res.trace.save(args.trace_out)
+            print(f"[serve] wrote arrival trace -> {args.trace_out}")
+        if args.ckpt_dir:
+            print(f"[serve] checkpoint -> {trainer.save()}")
+        replay_ok = None
+        if args.replay_check:
+            from repro.runtime import TraceArrivals
+            fresh = Trainer.create(config)
+            rep = fresh.run_async(
+                TraceArrivals(res.trace), args.rounds, sample_fn,
+                record_every=args.log_every, seed=args.seed,
+                key_mode="worker", record_digests=True)
+            params_ok = bool(np.array_equal(
+                np.asarray(rep.state.params), np.asarray(res.state.params)))
+            digest_ok = rep.digests == res.trace.digest
+            replay_ok = params_ok and digest_ok
+            print(f"[serve] replay-check: params_bitwise={params_ok} "
+                  f"digests={digest_ok}")
+        print(json.dumps({
+            "arch": cfg.name, "algo": args.algo, "mode": "serve",
+            "iters": int(res.stats.iters),
+            "arrivals": int(res.stats.arrivals),
+            "tau_max": int(res.tau_max),
+            "dropouts": int(res.dropouts),
+            "reconnects": int(res.reconnects),
+            "dropped_workers": list(res.dropped_workers),
+            "wire_sent": int(res.wire_sent), "wire_recv": int(res.wire_recv),
+            "last_loss": float(res.losses[-1]) if len(res.losses) else None,
+            "replay_ok": replay_ok,
+            "wall_s": round(time.time() - t0, 1),
+        }))
+        if args.replay_check and not replay_ok:
+            raise SystemExit("[serve] replay-check FAILED")
+        return
 
     if args.async_mode:
         # --------------------------- event-driven per-arrival training ----
@@ -203,9 +269,6 @@ def main():
             if args.trace_in is None:
                 ap.error("--arrival trace needs --trace-in")
             process = make_arrivals("trace", n, trace=args.trace_in)
-
-        def sample_fn(i, rng):
-            return worker_batch(sampler(i, rng))
 
         res = trainer.run_async(process, args.rounds, sample_fn,
                                 record_every=args.log_every)
@@ -237,7 +300,7 @@ def main():
     rng = np.random.default_rng(args.seed)
 
     def round_batch():
-        per = [worker_batch(sampler(i, rng)) for i in range(n)]
+        per = [sample_fn(i, rng) for i in range(n)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
     history = []

@@ -1,6 +1,6 @@
 """repro.runtime — the event-driven asynchronous training runtime.
 
-Three layers, documented in docs/async.md:
+Five layers, documented in docs/async.md:
 
 * ``arrivals`` — pluggable ``ArrivalProcess`` timing models (fixed-rate,
   exponential stragglers, trace replay) and the recordable ``ArrivalTrace``;
@@ -9,31 +9,52 @@ Three layers, documented in docs/async.md:
   and the production runner;
 * ``runner`` — ``AsyncRunner``: per-arrival ``commit`` + flat optimizer
   apply on the P-axis-sharded ``FlatTrainState``, with a double-buffered
-  host->device queue.
+  host->device queue;
+* ``transport`` — the framed wire protocol (commit rows worker -> server,
+  delta snapshots server -> worker) over sockets or the in-process twin;
+* ``hostloop`` — ``HostRunner`` / ``run_worker``: the multi-host server
+  loop driven by socket readiness, replayable bit-for-bit through
+  ``AsyncRunner``.
 
-``runner`` is exported lazily: it imports ``repro.core`` (engines, algos),
-which itself imports ``runtime.loop`` from the simulator — eager re-export
-here would close that cycle during ``repro.core``'s own import.
+``runner`` and ``hostloop`` are exported lazily: they import ``repro.core``
+(engines, algos), which itself imports ``runtime.loop`` from the simulator —
+eager re-export here would close that cycle during ``repro.core``'s own
+import.  ``transport`` is eager (it only touches ``core.compression``).
 """
 
 from .arrivals import (
-    ARRIVAL_KINDS, Arrival, ArrivalProcess, ArrivalTrace,
+    ARRIVAL_KINDS, TRACE_SCHEMA, Arrival, ArrivalProcess, ArrivalTrace,
     ExponentialArrivals, FixedArrivals, TraceArrivals, make_arrivals,
 )
 from .loop import ArrivalView, LoopStats, drive_arrivals
 
 __all__ = [
-    "ARRIVAL_KINDS", "Arrival", "ArrivalProcess", "ArrivalTrace",
+    "ARRIVAL_KINDS", "TRACE_SCHEMA", "Arrival", "ArrivalProcess",
+    "ArrivalTrace",
     "ExponentialArrivals", "FixedArrivals", "TraceArrivals", "make_arrivals",
     "ArrivalView", "LoopStats", "drive_arrivals",
     "AsyncResult", "AsyncRunner", "DeviceQueue",
+    "worker_key", "worker_rng",
+    "HostRunner", "run_worker", "accept_links", "poll_accept_fn",
+    "SocketTransport", "InProcTransport", "connect", "serve_listener",
 ]
 
-_RUNNER_EXPORTS = ("AsyncResult", "AsyncRunner", "DeviceQueue")
+_RUNNER_EXPORTS = ("AsyncResult", "AsyncRunner", "DeviceQueue",
+                   "worker_key", "worker_rng")
+_HOSTLOOP_EXPORTS = ("HostRunner", "run_worker", "accept_links",
+                     "poll_accept_fn")
+_TRANSPORT_EXPORTS = ("SocketTransport", "InProcTransport", "connect",
+                      "serve_listener")
 
 
 def __getattr__(name):  # PEP 562: break the core <-> runtime import cycle
     if name in _RUNNER_EXPORTS:
         from . import runner
         return getattr(runner, name)
+    if name in _HOSTLOOP_EXPORTS:
+        from . import hostloop
+        return getattr(hostloop, name)
+    if name in _TRANSPORT_EXPORTS:
+        from . import transport
+        return getattr(transport, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,12 +30,21 @@ from typing import Optional, Sequence
 import numpy as np
 
 __all__ = [
-    "ARRIVAL_KINDS", "Arrival", "ArrivalTrace", "ArrivalProcess",
-    "FixedArrivals", "ExponentialArrivals", "TraceArrivals", "make_arrivals",
+    "ARRIVAL_KINDS", "TRACE_SCHEMA", "Arrival", "ArrivalTrace",
+    "ArrivalProcess", "FixedArrivals", "ExponentialArrivals", "TraceArrivals",
+    "make_arrivals",
 ]
 
 # the --arrival CLI vocabulary (launch/train.py)
 ARRIVAL_KINDS = ("fixed", "exp", "trace")
+
+# ArrivalTrace JSON schema version.  v1 (implicit — files with no "schema"
+# key) carried only (n, worker, t_dispatch, t_arrive); v2 adds the explicit
+# "schema" field and the optional per-arrival commit "digest" list that
+# multi-host runs record (runtime/hostloop.py).  Traces now outlive the
+# code that wrote them, so load() upgrades v1 in place and REJECTS unknown
+# versions with a clear error instead of misparsing them.
+TRACE_SCHEMA = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +77,10 @@ class ArrivalTrace:
     worker: np.ndarray      # [m] int32, arrival order
     t_dispatch: np.ndarray  # [m] float64
     t_arrive: np.ndarray    # [m] float64
+    # per-arrival commit digests (core.compression.commit_digest hex strings)
+    # recorded by real multi-host runs; None on simulated traces.  Replay
+    # recomputes them (AsyncRunner record_digests) to localize divergence.
+    digest: Optional[tuple] = None
 
     def __len__(self) -> int:
         return int(self.worker.shape[0])
@@ -77,13 +90,18 @@ class ArrivalTrace:
                        float(self.t_arrive[k]))
 
     @classmethod
-    def from_arrivals(cls, n: int, arrivals: Sequence[Arrival]
+    def from_arrivals(cls, n: int, arrivals: Sequence[Arrival],
+                      digests: Optional[Sequence[str]] = None
                       ) -> "ArrivalTrace":
+        if digests is not None and len(digests) != len(arrivals):
+            raise ValueError(
+                f"{len(digests)} digests for {len(arrivals)} arrivals")
         return cls(
             n=n,
             worker=np.asarray([a.worker for a in arrivals], np.int32),
             t_dispatch=np.asarray([a.t_dispatch for a in arrivals]),
             t_arrive=np.asarray([a.t_arrive for a in arrivals]),
+            digest=None if digests is None else tuple(digests),
         )
 
     def durations_per_worker(self) -> list:
@@ -97,23 +115,36 @@ class ArrivalTrace:
     # ------------------------------------------------------- persistence
 
     def save(self, path: str) -> str:
+        d = {
+            "schema": TRACE_SCHEMA,
+            "n": self.n,
+            "worker": [int(w) for w in self.worker],
+            "t_dispatch": [float(t) for t in self.t_dispatch],
+            "t_arrive": [float(t) for t in self.t_arrive],
+        }
+        if self.digest is not None:
+            d["digest"] = list(self.digest)
         with open(path, "w") as f:
-            json.dump({
-                "n": self.n,
-                "worker": [int(w) for w in self.worker],
-                "t_dispatch": [float(t) for t in self.t_dispatch],
-                "t_arrive": [float(t) for t in self.t_arrive],
-            }, f)
+            json.dump(d, f)
         return path
 
     @classmethod
     def load(cls, path: str) -> "ArrivalTrace":
         with open(path) as f:
             d = json.load(f)
+        # v1 files predate the schema field: upgrade in place (no digests)
+        schema = int(d.get("schema", 1))
+        if schema < 1 or schema > TRACE_SCHEMA:
+            raise ValueError(
+                f"{path}: ArrivalTrace schema {schema} is not supported by "
+                f"this build (reads v1..v{TRACE_SCHEMA}); re-record the "
+                "trace or upgrade the repro package")
+        digest = d.get("digest")
         return cls(n=int(d["n"]),
                    worker=np.asarray(d["worker"], np.int32),
                    t_dispatch=np.asarray(d["t_dispatch"]),
-                   t_arrive=np.asarray(d["t_arrive"]))
+                   t_arrive=np.asarray(d["t_arrive"]),
+                   digest=None if digest is None else tuple(digest))
 
 
 class ArrivalProcess:

@@ -26,8 +26,28 @@ Differences from the simulator, by design:
   snapshot memory; commits themselves are compressed inside
   ``DuDeEngine.commit`` (int8 payload + per-tile scales + EF residual).
 
+The per-arrival math lives in ``_RunSession`` — one object exposing the
+``on_arrival`` / ``deliver`` callbacks ``drive_arrivals`` wants, plus the
+``commit`` / ``snapshot_arrays`` halves the multi-host ``HostRunner``
+(``runtime/hostloop.py``) drives off socket readiness — so the simulated
+and the distributed run execute the IDENTICAL commit/apply/record path and
+a recorded multi-host trace replays bit-for-bit through ``run()``.
+
+Two gradient keying modes (``key_mode``):
+
+* ``"arrival"`` (default, historical) — one global PRNG key split per
+  arrival and one shared sampling rng, consumed in arrival order.  Only a
+  simulator can do this: the key a gradient uses depends on WHEN it will
+  arrive.
+* ``"worker"`` — dispatch-deterministic: job ``j`` of worker ``w`` uses
+  ``fold_in(fold_in(key(seed), w), j)`` and a per-worker
+  ``np.random.SeedSequence([seed, w])`` sampling stream
+  (:func:`worker_rng`).  A physically distributed worker can compute this
+  WITHOUT knowing the global arrival order, so multi-host runs use it — and
+  a replay with the same mode reproduces every gradient bitwise.
+
 Documented in docs/async.md ("The AsyncRunner" / "In-flight depth and the
-device queue").
+device queue" / "Multi-host transport").
 """
 
 from __future__ import annotations
@@ -41,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.algos import AsyncAlgo, make_async_algo
+from ..core.compression import commit_digest
 from ..core.engine import DuDeEngine
 from ..optim import FlatOptState, FlatTrainState, flat_twin
 from .arrivals import ArrivalProcess, ArrivalTrace
@@ -48,7 +69,24 @@ from .loop import LoopStats, drive_arrivals
 
 Pytree = Any
 
-__all__ = ["AsyncResult", "DeviceQueue", "AsyncRunner"]
+__all__ = ["AsyncResult", "DeviceQueue", "AsyncRunner", "KEY_MODES",
+           "worker_rng", "worker_key"]
+
+KEY_MODES = ("arrival", "worker")
+
+
+def worker_rng(seed: int, worker: int) -> np.random.Generator:
+    """The per-worker sampling stream of ``key_mode="worker"`` runs — one
+    ``SeedSequence([seed, worker])`` generator per worker, constructible
+    identically on the server (replay) and on a remote worker process."""
+    return np.random.default_rng(np.random.SeedSequence([seed, worker]))
+
+
+def worker_key(seed: int, worker: int, job: int) -> jax.Array:
+    """The gradient PRNG key of worker ``worker``'s ``job``-th dispatch
+    under ``key_mode="worker"`` — pure fold_ins, no global split order."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), worker), job)
 
 
 class DeviceQueue:
@@ -97,17 +135,242 @@ class AsyncResult:
     n_grads: int             # stochastic gradients computed
     stats: LoopStats
     # sparse commit transport (engines with sparse_meta): SparseRow commits
-    # shipped host->device and their actual wire bytes (0 on dense runs)
+    # shipped host->device.  ``wire_bytes`` counts the FRAMED bytes a socket
+    # would carry (prefix + header + manifest + padding — runtime/transport
+    # framing; on multi-host runs, the bytes it actually carried);
+    # ``payload_bytes`` the analytic array payload alone (0 on dense runs).
     wire_rows: int = 0
     wire_bytes: int = 0
+    payload_bytes: int = 0
     # snapshot-encode cache: encodes actually run vs deliveries served from
     # the cache because params were unchanged since the last delivery
     snap_encodes: int = 0
     snap_reuses: int = 0
+    # per-arrival commit digests (record_digests runs / multi-host runs)
+    digests: Optional[tuple] = None
+    # multi-host robustness counters (HostRunner runs; 0 on simulated runs)
+    dropouts: int = 0
+    reconnects: int = 0
+    dropped_workers: tuple = ()
+    # server-end socket byte totals of a hosted run (all frames: handshakes,
+    # snapshots, commits, heartbeats), summed over every link ever attached
+    wire_sent: int = 0
+    wire_recv: int = 0
 
     @property
     def trace(self) -> ArrivalTrace:
         return self.stats.trace
+
+
+class _RunSession:
+    """The per-arrival math of ONE run, factored out of the event source.
+
+    ``drive_arrivals`` consumes ``on_arrival`` / ``deliver``; the multi-host
+    ``HostRunner`` calls ``commit`` (with a remotely computed gradient) and
+    ``snapshot_arrays`` (the delta encoding a delivery ships) — all four run
+    the same jits, counters and record points, so a simulated run, a hosted
+    run, and a trace replay share one code path.
+    """
+
+    def __init__(self, runner: "AsyncRunner", state: FlatTrainState,
+                 sample_fn: Optional[Callable], *, seed: int,
+                 record_every: int, eval_fn: Optional[Callable], ema: float,
+                 key_mode: str, record_digests: bool):
+        if key_mode not in KEY_MODES:
+            raise ValueError(
+                f"unknown key_mode {key_mode!r}; options: {KEY_MODES}")
+        r = self.r = runner
+        n = runner.engine.n_workers
+        self.sample_fn = sample_fn
+        self.seed = seed
+        self.record_every = record_every
+        self.eval_fn = eval_fn
+        self.ema = ema
+        self.key_mode = key_mode
+        self.state = state
+        self.key = jax.random.PRNGKey(seed)
+        self.rng = np.random.default_rng(seed)  # routing + "arrival" sampling
+        self.rngs = ([worker_rng(seed, w) for w in range(n)]
+                     if key_mode == "worker" else None)
+        if key_mode == "worker" and r.algo.route is not None:
+            raise ValueError(
+                f"key_mode='worker' needs the greedy route (algo "
+                f"{r.algo.name!r} routes {r.algo.route!r}): routed "
+                "deliveries draw from a shared rng no remote worker can see")
+        self.queue = DeviceQueue(r.queue_depth)
+        self.running = None
+        self.n_grads = 0
+        self.wire_rows = 0
+        self.wire_bytes = 0
+        self.payload_bytes = 0
+        self.snap_encodes = 0
+        self.snap_reuses = 0
+        self.arrived = [0] * n   # per-worker collected jobs (job id source)
+        self.digests: Optional[list] = [] if record_digests else None
+        self.times: list = []
+        self.iters: list = []
+        self.losses: list = []
+        self.gnorms: list = []
+        # deliver() cache: the params object the last snapshot encode ran
+        # on, and its encoding.  Identity (`is`) comparison — the arrival
+        # step returns a NEW params array whenever anything committed, so an
+        # unchanged object means an unchanged snapshot; a delivery between
+        # two commits (or before the first) reuses the last encode instead
+        # of re-running it.  The object itself is held (not id()) so a GC'd
+        # array can never alias a stale id.
+        self._snap_cache = {"params": None, "enc": None}
+        # every worker starts on the initial model (version 0)
+        if r._compressed:
+            # delta-encoded snapshots against the run-start master; the
+            # zero delta (q=0 decodes to exactly 0) is ONE encode delivered
+            # n ways — the first n cache reuses
+            self.base = state.params
+            zero_delta = r._snap_encode(self.base, self.base)
+            self.snap_encodes = 1
+            self.snap_reuses = n - 1
+            self._snap_cache.update(params=self.base, enc=zero_delta)
+            self.worker_snaps = [zero_delta for _ in range(n)]
+            self.worker_params = None
+        else:
+            self.base = None
+            self.worker_snaps = None
+            self.worker_params = [state.params for _ in range(n)]
+        if r._sparse:
+            from .transport import (commit_frame_nbytes, pack_arrays,
+                                    sparse_row_arrays)
+            # the framed size of a commit depends only on (worker, job) ids
+            # and the static SparseRow manifest — build the manifest once
+            # from the row layout so per-arrival accounting never syncs the
+            # device (and matches pack_arrays on a real row byte-for-byte)
+            cap, k = r.engine.cap_tiles, r.engine.codec.topk
+            self._row_manifest, _ = pack_arrays([
+                np.zeros((cap,), np.int32), np.zeros((cap, k), np.uint8),
+                np.zeros((cap, k), np.int8), np.zeros((cap,), np.float32),
+                np.zeros((), np.int32)])
+            self._commit_frame_nbytes = commit_frame_nbytes
+            self._sparse_row_arrays = sparse_row_arrays
+
+    # ------------------------------------------------------------ snapshots
+
+    def worker_model(self, w: int) -> Pytree:
+        r = self.r
+        if r._sparse:
+            return r._snap_unravel(self.base, self.worker_snaps[w])
+        if r._compressed:
+            q, s = self.worker_snaps[w]
+            return r._snap_unravel(self.base, q, s)
+        return r._unravel(self.worker_params[w])
+
+    def deliver(self, worker: int) -> None:
+        if self.r._compressed:
+            params = self.state.params
+            if self._snap_cache["params"] is not params:
+                self._snap_cache["params"] = params
+                self._snap_cache["enc"] = self.r._snap_encode(params,
+                                                              self.base)
+                self.snap_encodes += 1
+            else:
+                self.snap_reuses += 1
+            self.worker_snaps[worker] = self._snap_cache["enc"]
+        else:
+            self.worker_params[worker] = self.state.params
+
+    def snapshot_arrays(self, worker: int) -> tuple:
+        """The host-side arrays a delivery ships on the wire: the full f32
+        params (uncompressed formats) or the delta encoding vs the run-start
+        base — EXACTLY what ``worker_model`` would decode, so a remote
+        worker running the same ``_snap_unravel`` jit sees the same bits.
+        Materializes to numpy (a send must); call after ``deliver``."""
+        r = self.r
+        if r._sparse:
+            return self._sparse_row_arrays(self.worker_snaps[worker])
+        if r._compressed:
+            q, s = self.worker_snaps[worker]
+            return (np.asarray(q), np.asarray(s))
+        return (np.asarray(self.worker_params[worker]),)
+
+    # -------------------------------------------------------------- commits
+
+    def grad_for(self, view) -> tuple:
+        """Local gradient compute (single-process path): the arriving
+        worker's ``(loss, gflat)`` on the snapshot it holds, keyed per
+        ``key_mode``."""
+        w = view.worker
+        if self.key_mode == "worker":
+            k1 = worker_key(self.seed, w, self.arrived[w])
+            batch = self.sample_fn(w, self.rngs[w])
+        else:
+            self.key, k1 = jax.random.split(self.key)
+            batch = self.sample_fn(w, self.rng)
+        loss, g = self.r._grad(self.worker_model(w), batch, k1)
+        return loss, self.r._ravel(g)
+
+    def commit(self, view, loss, gflat) -> bool:
+        """One server iteration from an arrived gradient: encode/fold (or
+        dense commit) + flat apply + EMA/record bookkeeping.  ``loss`` and
+        ``gflat`` may be device values (local compute) or host arrays (a
+        frame's payload) — the math is the same jit either way."""
+        r = self.r
+        w = int(view.worker)
+        job = self.arrived[w]
+        self.arrived[w] = job + 1
+        self.n_grads += 1
+        gflat = jnp.asarray(gflat)
+        if self.digests is not None:
+            self.digests.append(commit_digest(np.asarray(gflat)))
+        if r._sparse:
+            st = self.state
+            srv, wire = r._encode(st.engine, jnp.int32(w), gflat)
+            self.wire_rows += 1
+            nbytes = r._wire_nbytes(wire)
+            self.payload_bytes += nbytes
+            self.wire_bytes += self._commit_frame_nbytes(
+                w, job, self._row_manifest, nbytes)
+            self.state, g_dir = r._step_sparse(
+                FlatTrainState(st.params, st.opt, srv), jnp.int32(w), wire)
+        else:
+            self.state, g_dir = r._step(self.state, jnp.int32(w), gflat)
+        # device-side EMA; the queue keeps the host <= depth steps ahead
+        # (g_dir comes out of the arrival step, so waiting on it bounds
+        # the whole grad+commit+apply chain of that arrival)
+        loss = jnp.asarray(loss, jnp.float32)
+        rn = self.running
+        self.running = (loss if rn is None
+                        else self.ema * rn + (1 - self.ema) * loss)
+        self.queue.push((self.running, g_dir))
+        it_after = view.iters + 1
+        if it_after % self.record_every == 0:
+            self.times.append(view.t)
+            self.iters.append(it_after)
+            if self.eval_fn is not None:
+                self.losses.append(float(self.eval_fn(
+                    r.engine.spec.unravel(self.state.params))))
+            else:
+                self.losses.append(float(self.running))
+            # norm of the RAW arriving gradient — what SimResult records
+            # (the folded direction g_dir only gates the device queue)
+            self.gnorms.append(float(jnp.sqrt(jnp.sum(jnp.square(gflat)))))
+        return True  # every async rule applies every arrival
+
+    def on_arrival(self, view) -> bool:
+        loss, gflat = self.grad_for(view)
+        return self.commit(view, loss, gflat)
+
+    # --------------------------------------------------------------- result
+
+    def result(self, stats: LoopStats, **extra) -> AsyncResult:
+        return AsyncResult(
+            name=self.r.algo.name,
+            times=np.asarray(self.times), iters=np.asarray(self.iters),
+            losses=np.asarray(self.losses), gnorms=np.asarray(self.gnorms),
+            state=self.state, tau_max=stats.tau_max,
+            n_grads=self.n_grads, stats=stats,
+            wire_rows=self.wire_rows, wire_bytes=self.wire_bytes,
+            payload_bytes=self.payload_bytes,
+            snap_encodes=self.snap_encodes, snap_reuses=self.snap_reuses,
+            digests=None if self.digests is None else tuple(self.digests),
+            **extra,
+        )
 
 
 class AsyncRunner:
@@ -160,7 +423,8 @@ class AsyncRunner:
         # splits into the sender encode (dense math, produces the O(k * cap)
         # SparseRow and advances EF) and the receiver fold (scatter-decode
         # straight into the slab) — the state crossing between them is the
-        # wire row, whose bytes the run counts (AsyncResult.wire_bytes).
+        # wire row, whose bytes the run counts (AsyncResult.wire_bytes /
+        # payload_bytes).
         self._sparse = engine.sparse_meta and self.algo.name == "dude"
         if self._sparse:
             from ..core.compression import sparse_wire_nbytes
@@ -212,6 +476,20 @@ class AsyncRunner:
         return init_flat_train_state(self.engine, self.fopt, params,
                                      algo=self.algo)
 
+    def session(self, state: FlatTrainState,
+                sample_fn: Optional[Callable] = None, *, seed: int = 0,
+                record_every: int = 10, eval_fn: Optional[Callable] = None,
+                ema: float = 0.9, key_mode: str = "arrival",
+                record_digests: bool = False) -> _RunSession:
+        """The per-arrival math session ``run`` drives — exposed so the
+        multi-host ``HostRunner`` can drive the identical path from socket
+        readiness (``sample_fn`` may be None when gradients arrive remotely
+        and ``grad_for`` is never called)."""
+        return _RunSession(self, state, sample_fn, seed=seed,
+                           record_every=record_every, eval_fn=eval_fn,
+                           ema=ema, key_mode=key_mode,
+                           record_digests=record_digests)
+
     # --------------------------------------------------------------- run
 
     def run(
@@ -226,119 +504,36 @@ class AsyncRunner:
         eval_fn: Optional[Callable] = None,
         ema: float = 0.9,
         max_time: Optional[float] = None,
+        key_mode: str = "arrival",
+        record_digests: bool = False,
     ) -> AsyncResult:
         """Drive ``total_iters`` per-arrival server iterations.
 
         ``sample_fn(worker, rng) -> batch`` draws from that worker's local
         data; ``seed`` feeds both the host rng (sampling + routing draws)
         and the gradient PRNG key — pass the seed a ``simulate`` run used
-        and a trace replay reproduces its parameters bit-for-bit.
+        and a trace replay reproduces its parameters bit-for-bit.  With
+        ``key_mode="worker"`` the keys and sampling streams are
+        dispatch-deterministic per worker (the multi-host convention — use
+        it to replay a ``HostRunner`` trace); ``record_digests`` stamps
+        every arrival's gradient (``AsyncResult.digests``) for comparison
+        against a recorded multi-host run.
         """
         n = self.engine.n_workers
         if process.n != n:
             raise ValueError(
                 f"process has n={process.n}, engine n_workers={n}")
-        rng = np.random.default_rng(seed)
-        key = jax.random.PRNGKey(seed)
-        queue = DeviceQueue(self.queue_depth)
-
-        box = {"state": state, "key": key, "running": None, "n_grads": 0,
-               "wire_rows": 0, "wire_bytes": 0,
-               "snap_encodes": 0, "snap_reuses": 0}
-        # deliver() cache: the params object the last snapshot encode ran
-        # on, and its encoding.  Identity (`is`) comparison — the arrival
-        # step returns a NEW params array whenever anything committed, so an
-        # unchanged object means an unchanged snapshot; a delivery between
-        # two commits (or before the first) reuses the last encode instead
-        # of re-running it.  The object itself is held (not id()) so a GC'd
-        # array can never alias a stale id.
-        snap_cache = {"params": None, "enc": None}
-        # every worker starts on the initial model (version 0)
-        if self._compressed:
-            # delta-encoded snapshots against the run-start master; the
-            # zero delta (q=0 decodes to exactly 0) is ONE encode delivered
-            # n ways — the first n cache reuses
-            base = state.params
-            zero_delta = self._snap_encode(base, base)
-            box["snap_encodes"] = 1
-            box["snap_reuses"] = n - 1
-            snap_cache.update(params=base, enc=zero_delta)
-            worker_snaps = [zero_delta for _ in range(n)]
-            worker_params = None
-        else:
-            worker_params = [state.params for _ in range(n)]
-        times, iters, losses, gnorms = [], [], [], []
-
-        def worker_model(w: int) -> Pytree:
-            if self._sparse:
-                return self._snap_unravel(base, worker_snaps[w])
-            if self._compressed:
-                q, s = worker_snaps[w]
-                return self._snap_unravel(base, q, s)
-            return self._unravel(worker_params[w])
-
-        def commit_arrival(worker, gflat):
-            if not self._sparse:
-                return self._step(box["state"], worker, gflat)
-            st = box["state"]
-            srv, wire = self._encode(st.engine, worker, gflat)
-            box["wire_rows"] += 1
-            box["wire_bytes"] += self._wire_nbytes(wire)
-            return self._step_sparse(FlatTrainState(st.params, st.opt, srv),
-                                     worker, wire)
-
-        def on_arrival(view) -> bool:
-            box["key"], k1 = jax.random.split(box["key"])
-            batch = sample_fn(view.worker, rng)
-            loss, g = self._grad(worker_model(view.worker), batch, k1)
-            gflat = self._ravel(g)
-            box["n_grads"] += 1
-            box["state"], g_dir = commit_arrival(jnp.int32(view.worker),
-                                                 gflat)
-            # device-side EMA; the queue keeps the host <= depth steps ahead
-            # (g_dir comes out of the arrival step, so waiting on it bounds
-            # the whole grad+commit+apply chain of that arrival)
-            r = box["running"]
-            box["running"] = loss if r is None else ema * r + (1 - ema) * loss
-            queue.push((box["running"], g_dir))
-            it_after = view.iters + 1
-            if it_after % record_every == 0:
-                times.append(view.t)
-                iters.append(it_after)
-                if eval_fn is not None:
-                    losses.append(float(eval_fn(
-                        self.engine.spec.unravel(box["state"].params))))
-                else:
-                    losses.append(float(box["running"]))
-                # norm of the RAW arriving gradient — what SimResult records
-                # (the folded direction g_dir only gates the device queue)
-                gnorms.append(float(jnp.sqrt(jnp.sum(jnp.square(gflat)))))
-            return True  # every async rule applies every arrival
-
-        def deliver(worker: int) -> None:
-            if self._compressed:
-                params = box["state"].params
-                if snap_cache["params"] is not params:
-                    snap_cache["params"] = params
-                    snap_cache["enc"] = self._snap_encode(params, base)
-                    box["snap_encodes"] += 1
-                else:
-                    box["snap_reuses"] += 1
-                worker_snaps[worker] = snap_cache["enc"]
-            else:
-                worker_params[worker] = box["state"].params
-
-        stats = drive_arrivals(
-            process, total_iters, on_arrival, deliver,
-            route=self.algo.route, rng=rng,
-            max_in_flight=self.max_in_flight, max_time=max_time)
-        queue.flush()
-        return AsyncResult(
-            name=self.algo.name,
-            times=np.asarray(times), iters=np.asarray(iters),
-            losses=np.asarray(losses), gnorms=np.asarray(gnorms),
-            state=box["state"], tau_max=stats.tau_max,
-            n_grads=box["n_grads"], stats=stats,
-            wire_rows=box["wire_rows"], wire_bytes=box["wire_bytes"],
-            snap_encodes=box["snap_encodes"], snap_reuses=box["snap_reuses"],
-        )
+        sess = self.session(state, sample_fn, seed=seed,
+                            record_every=record_every, eval_fn=eval_fn,
+                            ema=ema, key_mode=key_mode,
+                            record_digests=record_digests)
+        try:
+            stats = drive_arrivals(
+                process, total_iters, sess.on_arrival, sess.deliver,
+                route=self.algo.route, rng=sess.rng,
+                max_in_flight=self.max_in_flight, max_time=max_time)
+        finally:
+            # a crashed arrival callback must not leave in-flight device
+            # values dangling — flush the queue on every exit path
+            sess.queue.flush()
+        return sess.result(stats)

@@ -1,0 +1,471 @@
+"""Framed wire transport: commit rows and model snapshots between hosts.
+
+The multi-host runtime (``runtime/hostloop.py``) moves exactly two kinds of
+tensor payload: per-arrival commits worker -> server and delta-encoded model
+snapshots server -> worker.  This module owns the bytes: a length-prefixed
+frame format with a msgpack (or JSON-fallback) header and a raw
+concatenated-array payload whose codecs reproduce ``core/compression.py``'s
+arrays BYTE-FOR-BYTE — a ``SparseRow`` decoded from a frame is bitwise the
+``SparseRow`` that was encoded, so the engine's fold math cannot tell a
+socket hop from an in-process handoff.
+
+Frame layout (everything big-endian in the fixed prefix)::
+
+    0          2     3     4              8               12
+    +----------+-----+-----+--------------+----------------+---------+---------+-----+
+    | magic DD | ver | pad | header bytes | payload bytes  | header  | payload | pad |
+    +----------+-----+-----+--------------+----------------+---------+---------+-----+
+
+* ``magic`` = ``b"DD"`` (DuDe), ``ver`` = :data:`PROTOCOL_VERSION`; a frame
+  with the wrong magic/version fails fast with ``TransportError`` instead of
+  desynchronizing the stream.
+* the header is a small dict — message kind, worker/job ids, loss, digest,
+  and the payload's array manifest (dtype + shape per array) — serialized
+  with msgpack when available, JSON otherwise (the container may lack
+  msgpack; both ends negotiate nothing: the prefix ``pad`` byte carries the
+  header codec id so a JSON peer and a msgpack peer fail loudly, not
+  silently).
+* the payload is the arrays' raw little-endian bytes, concatenated in
+  manifest order, zero-padded so every frame is a multiple of
+  :data:`FRAME_ALIGN` bytes (receivers can keep slab-aligned ring buffers).
+
+Transports:
+
+* :class:`SocketTransport` — a stream socket endpoint with per-call
+  timeouts, exponential-backoff retry on transient send/recv errors, a
+  partial-frame receive buffer (a timeout mid-frame never loses bytes), and
+  byte counters (``wire_sent`` / ``wire_recv``).
+* :class:`InProcTransport` — the in-process twin: ``InProcTransport.pair()``
+  returns two connected endpoints whose queues carry the SAME encoded frame
+  bytes, so every protocol path (frame encode, header codec, payload
+  manifest, decode) is exercised without opening a socket.  Thread-safe;
+  ``close()`` makes the peer's ``recv`` raise ``TransportClosed`` once
+  drained — which is how tests simulate a dead worker.
+
+Byte accounting: ``framed_nbytes`` / ``commit_frame_nbytes`` compute the
+exact on-wire size of a frame without sending it — the single-process
+``AsyncRunner`` uses them so its ``wire_bytes`` counter reports what a
+socket WOULD carry (header + count + padding), not just the analytic
+payload (``AsyncResult.payload_bytes``).  Documented in docs/async.md
+("Multi-host transport").
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from ..core.compression import SparseRow, commit_digest  # noqa: F401 (re-export)
+
+__all__ = [
+    "PROTOCOL_VERSION", "FRAME_ALIGN", "Message",
+    "TransportError", "TransportClosed", "TransportTimeout",
+    "encode_frame", "decode_frame", "framed_nbytes", "commit_header",
+    "commit_frame_nbytes", "pack_arrays", "unpack_arrays",
+    "sparse_row_arrays", "sparse_row_from_arrays",
+    "SocketTransport", "InProcTransport", "connect", "serve_listener",
+]
+
+PROTOCOL_VERSION = 1
+FRAME_ALIGN = 8
+_MAGIC = b"DD"
+_PREFIX = struct.Struct("!2sBBII")  # magic, version, header-codec, hlen, plen
+
+try:
+    import msgpack  # type: ignore
+
+    _HEADER_CODEC = 1
+
+    def _dumps(obj) -> bytes:
+        return msgpack.packb(obj, use_bin_type=True)
+
+    def _loads(b: bytes):
+        return msgpack.unpackb(b, raw=False)
+except ImportError:  # pragma: no cover - container without msgpack
+    _HEADER_CODEC = 2
+
+    def _dumps(obj) -> bytes:
+        return json.dumps(obj, separators=(",", ":"), sort_keys=True).encode()
+
+    def _loads(b: bytes):
+        return json.loads(b.decode())
+
+
+class TransportError(Exception):
+    """A frame could not be sent, received, or parsed."""
+
+
+class TransportClosed(TransportError):
+    """The peer closed the connection (EOF) — dead-worker signal."""
+
+
+class TransportTimeout(TransportError):
+    """No complete frame inside the deadline (partial bytes are kept)."""
+
+
+class Message(NamedTuple):
+    """One decoded frame: a kind, its header metadata, and payload arrays."""
+
+    kind: str
+    meta: dict
+    arrays: tuple  # numpy arrays, in manifest order
+
+
+# ------------------------------------------------------------ array payloads
+
+def _wire_dtype(dt: np.dtype) -> str:
+    """Canonical little-endian dtype tag (``<f4``, ``<i4``, ``|i1``...)."""
+    return np.dtype(dt).newbyteorder("<").str
+
+
+def pack_arrays(arrays: Sequence[np.ndarray]) -> tuple[list, bytes]:
+    """Arrays -> (manifest, payload bytes).
+
+    The manifest is ``[[dtype_str, [shape...]], ...]``; the payload is the
+    arrays' little-endian C-order bytes concatenated in manifest order —
+    for a ``SparseRow`` that is exactly ``cap*(2k+8) + 4`` bytes, the
+    analytic ``sparse_wire_nbytes``.
+    """
+    manifest, chunks = [], []
+    for x in arrays:
+        a = np.asarray(x)
+        a = a.astype(a.dtype.newbyteorder("<"), copy=False)
+        # manifest BEFORE any contiguity fixup: ascontiguousarray promotes
+        # 0-d arrays to [1] and would corrupt scalar shapes (SparseRow.count)
+        manifest.append([_wire_dtype(a.dtype), list(a.shape)])
+        chunks.append(a.tobytes())  # tobytes is C-order regardless of layout
+    return manifest, b"".join(chunks)
+
+
+def unpack_arrays(manifest: Sequence, payload: bytes) -> tuple:
+    """Inverse of :func:`pack_arrays` — bitwise, dtype- and shape-exact."""
+    out, off = [], 0
+    for dt_str, shape in manifest:
+        dt = np.dtype(dt_str)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nb = n * dt.itemsize
+        if off + nb > len(payload):
+            raise TransportError(
+                f"payload truncated: manifest wants {nb} bytes at offset "
+                f"{off}, frame carries {len(payload)}")
+        a = np.frombuffer(payload, dt, count=n, offset=off)
+        out.append(a.reshape(tuple(shape)))
+        off += nb
+    return tuple(out)
+
+
+def sparse_row_arrays(row: SparseRow) -> tuple:
+    """``SparseRow`` -> its 5 wire arrays in field order (host numpy)."""
+    return tuple(np.asarray(x) for x in row)
+
+
+def sparse_row_from_arrays(arrays: Sequence[np.ndarray]) -> SparseRow:
+    """5 wire arrays -> ``SparseRow`` (numpy leaves; jnp lifts on use)."""
+    if len(arrays) != len(SparseRow._fields):
+        raise TransportError(
+            f"SparseRow payload has {len(arrays)} arrays, "
+            f"wants {len(SparseRow._fields)}")
+    return SparseRow(*arrays)
+
+
+# ------------------------------------------------------------------- framing
+
+def encode_frame(kind: str, meta: Optional[dict] = None,
+                 arrays: Sequence[np.ndarray] = ()) -> bytes:
+    """One complete wire frame for ``Message(kind, meta, arrays)``."""
+    header = dict(meta or {})
+    header["k"] = kind
+    manifest, payload = pack_arrays(arrays)
+    if manifest:
+        header["a"] = manifest
+    hb = _dumps(header)
+    body_len = _PREFIX.size + len(hb) + len(payload)
+    pad = (-body_len) % FRAME_ALIGN
+    return b"".join([
+        _PREFIX.pack(_MAGIC, PROTOCOL_VERSION, _HEADER_CODEC,
+                     len(hb), len(payload)),
+        hb, payload, b"\x00" * pad,
+    ])
+
+
+def framed_nbytes(kind: str, meta: Optional[dict] = None,
+                  arrays_nbytes: int = 0,
+                  manifest: Optional[list] = None) -> int:
+    """Exact on-wire size of a frame WITHOUT materializing its payload.
+
+    ``manifest`` is the ``pack_arrays`` manifest the header would carry
+    (pass it when the frame has arrays); ``arrays_nbytes`` their summed raw
+    bytes.  This is how the single-process runner accounts framed bytes
+    per commit with no device sync — the header is actually serialized, so
+    varint-width effects of worker/seq ids are captured exactly.
+    """
+    header = dict(meta or {})
+    header["k"] = kind
+    if manifest:
+        header["a"] = manifest
+    body_len = _PREFIX.size + len(_dumps(header)) + arrays_nbytes
+    return body_len + (-body_len) % FRAME_ALIGN
+
+
+def commit_header(worker: int, job: int, loss: float = 0.0,
+                  digest: str = "0" * 8) -> dict:
+    """The canonical COMMIT header — ONE constructor for both the hosted
+    sender (real loss/digest) and the simulated runner's byte accountant
+    (placeholders; msgpack float64 and the 8-hex digest are fixed-width, so
+    placeholder and real headers are the same size for the same ids)."""
+    return {"w": int(worker), "j": int(job), "loss": float(loss),
+            "dg": digest}
+
+
+def commit_frame_nbytes(worker: int, job: int, manifest: list,
+                        payload_nbytes: int) -> int:
+    """On-wire bytes of one COMMIT frame carrying ``payload_nbytes`` of
+    array payload described by ``manifest``."""
+    return framed_nbytes("commit", commit_header(worker, job),
+                         payload_nbytes, manifest)
+
+
+def decode_frame(buf: bytes) -> tuple[Message, int]:
+    """Decode one frame from the head of ``buf`` -> (message, bytes used).
+
+    Raises ``TransportTimeout`` when ``buf`` holds only a partial frame
+    (the caller keeps the bytes and retries) and ``TransportError`` on a
+    corrupt prefix.
+    """
+    if len(buf) < _PREFIX.size:
+        raise TransportTimeout("partial frame prefix")
+    magic, ver, codec, hlen, plen = _PREFIX.unpack_from(buf)
+    if magic != _MAGIC:
+        raise TransportError(f"bad frame magic {magic!r} (stream desync?)")
+    if ver != PROTOCOL_VERSION:
+        raise TransportError(
+            f"peer speaks protocol v{ver}, this end v{PROTOCOL_VERSION}")
+    if codec != _HEADER_CODEC:
+        raise TransportError(
+            f"peer frames headers with codec {codec}, this end "
+            f"{_HEADER_CODEC} (msgpack vs JSON fallback mismatch)")
+    body_len = _PREFIX.size + hlen + plen
+    total = body_len + (-body_len) % FRAME_ALIGN
+    if len(buf) < total:
+        raise TransportTimeout("partial frame body")
+    header = _loads(bytes(buf[_PREFIX.size:_PREFIX.size + hlen]))
+    payload = bytes(buf[_PREFIX.size + hlen:body_len])
+    kind = header.pop("k")
+    manifest = header.pop("a", [])
+    arrays = unpack_arrays(manifest, payload) if manifest else ()
+    return Message(kind, header, arrays), total
+
+
+# ---------------------------------------------------------------- transports
+
+class _BaseTransport:
+    """send/recv byte counters + the framed-message API both twins share.
+
+    ``send`` is serialized by a lock so a heartbeat thread (``run_worker``
+    pings while the main thread sits in a long gradient compute) can never
+    interleave its frame bytes with a commit's mid-stream.
+    """
+
+    def __init__(self):
+        self.wire_sent = 0
+        self.wire_recv = 0
+        self._send_lock = threading.Lock()
+
+    def send(self, kind: str, meta: Optional[dict] = None,
+             arrays: Sequence[np.ndarray] = ()) -> int:
+        frame = encode_frame(kind, meta, arrays)
+        with self._send_lock:
+            self._send_bytes(frame)
+            self.wire_sent += len(frame)
+        return len(frame)
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def _send_bytes(self, frame: bytes) -> None:
+        raise NotImplementedError
+
+
+class SocketTransport(_BaseTransport):
+    """One framed endpoint over a stream socket.
+
+    ``timeout`` bounds each send/recv call; transient failures (EAGAIN /
+    socket timeouts on send) retry with exponential backoff — ``retries``
+    attempts spaced ``backoff_s * 2**k`` — before raising
+    ``TransportTimeout``.  EOF raises ``TransportClosed`` (the heartbeat
+    loop's dead-worker signal).  A recv deadline that lands mid-frame keeps
+    the partial bytes buffered, so the next call resumes the same frame.
+    """
+
+    def __init__(self, sock: socket.socket, *, timeout: float = 30.0,
+                 retries: int = 5, backoff_s: float = 0.05):
+        super().__init__()
+        self.sock = sock
+        self.timeout = timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self._buf = bytearray()
+        sock.setblocking(True)
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass  # AF_UNIX socketpairs have no TCP layer
+
+    def fileno(self) -> int:
+        return self.sock.fileno()
+
+    def _send_bytes(self, frame: bytes) -> None:
+        view, attempt = memoryview(frame), 0
+        while view:
+            try:
+                self.sock.settimeout(self.timeout)
+                sent = self.sock.send(view)
+                if sent == 0:
+                    raise TransportClosed("peer closed during send")
+                view = view[sent:]
+                attempt = 0
+            except (socket.timeout, BlockingIOError, InterruptedError):
+                if attempt >= self.retries:
+                    raise TransportTimeout(
+                        f"send stalled after {self.retries} retries") from None
+                time.sleep(self.backoff_s * (2 ** attempt))
+                attempt += 1
+            except OSError as e:
+                raise TransportClosed(f"send failed: {e}") from None
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        deadline = time.monotonic() + (self.timeout if timeout is None
+                                       else timeout)
+        while True:
+            try:
+                msg, used = decode_frame(self._buf)
+                del self._buf[:used]
+                self.wire_recv += used
+                return msg
+            except TransportTimeout:
+                pass  # need more bytes
+            remain = deadline - time.monotonic()
+            if remain <= 0:
+                raise TransportTimeout(
+                    f"no complete frame in {timeout if timeout is not None else self.timeout:.3f}s "
+                    f"({len(self._buf)} partial bytes held)")
+            try:
+                self.sock.settimeout(remain)
+                chunk = self.sock.recv(1 << 16)
+            except socket.timeout:
+                continue
+            except (BlockingIOError, InterruptedError):
+                continue
+            except OSError as e:
+                raise TransportClosed(f"recv failed: {e}") from None
+            if not chunk:
+                raise TransportClosed("peer closed (EOF)")
+            self._buf.extend(chunk)
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+class InProcTransport(_BaseTransport):
+    """The socketless twin: a connected pair sharing byte queues.
+
+    Frames cross as the SAME encoded bytes a socket would carry — the
+    protocol (prefix, header codec, manifests, padding) is exercised end to
+    end, only the OS stream is replaced by a deque + condition variable.
+    Thread-safe: hostloop tests run worker clients in threads against one
+    server loop.  ``close()`` wakes the peer; its ``recv`` raises
+    ``TransportClosed`` once the queue drains (dead-worker simulation
+    without killing anything).
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._peer: Optional[InProcTransport] = None
+        self._q: deque = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+
+    @classmethod
+    def pair(cls) -> tuple["InProcTransport", "InProcTransport"]:
+        a, b = cls(), cls()
+        a._peer, b._peer = b, a
+        return a, b
+
+    def _send_bytes(self, frame: bytes) -> None:
+        peer = self._peer
+        if peer is None:
+            raise TransportError("unpaired InProcTransport")
+        with peer._cond:
+            if peer._closed or self._closed:
+                raise TransportClosed("peer closed")
+            peer._q.append(frame)
+            peer._cond.notify_all()
+
+    def recv(self, timeout: Optional[float] = None) -> Message:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not self._q:
+                if self._closed:
+                    raise TransportClosed("transport closed (EOF)")
+                remain = (None if deadline is None
+                          else deadline - time.monotonic())
+                if remain is not None and remain <= 0:
+                    raise TransportTimeout(f"no frame in {timeout:.3f}s")
+                self._cond.wait(remain)
+            frame = self._q.popleft()
+        msg, used = decode_frame(frame)
+        if used != len(frame):
+            raise TransportError("queued frame with trailing garbage")
+        self.wire_recv += used
+        return msg
+
+    def close(self) -> None:
+        for end in (self, self._peer):
+            if end is None:
+                continue
+            with end._cond:
+                end._closed = True
+                end._cond.notify_all()
+
+
+# ------------------------------------------------------------ socket helpers
+
+def connect(host: str, port: int, *, timeout: float = 30.0, retries: int = 8,
+            backoff_s: float = 0.1) -> SocketTransport:
+    """Dial the server with exponential backoff (workers may start before
+    the server's listener is up — the CI smoke launches them in parallel)."""
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        try:
+            sock = socket.create_connection((host, port), timeout=timeout)
+            return SocketTransport(sock, timeout=timeout,
+                                   backoff_s=backoff_s)
+        except OSError as e:
+            last = e
+            if attempt < retries:
+                time.sleep(backoff_s * (2 ** attempt))
+    raise TransportError(f"connect to {host}:{port} failed: {last}")
+
+
+def serve_listener(host: str, port: int, backlog: int = 16) -> socket.socket:
+    """A listening TCP socket (non-blocking accepts; the hostloop polls)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(backlog)
+    srv.setblocking(False)
+    return srv

@@ -488,15 +488,28 @@ def test_runner_sparse_transport_bitwise_and_counters():
     np.testing.assert_array_equal(np.asarray(res_s.state.engine.g_workers),
                                   np.asarray(res_d.state.engine.g_workers))
     np.testing.assert_array_equal(res_s.losses, res_d.losses)
-    # transport accounting
-    assert res_d.wire_rows == res_d.wire_bytes == 0
+    # transport accounting: payload_bytes is the analytic row bytes,
+    # wire_bytes the framed (prefix + header + padding) socket bytes
+    assert res_d.wire_rows == res_d.wire_bytes == res_d.payload_bytes == 0
     assert res_s.wire_rows == total
     cap, k = eng_s.cap_tiles, eng_s.codec.topk
-    assert res_s.wire_bytes == total * (cap * (2 * k + 8) + 4)
+    assert res_s.payload_bytes == total * (cap * (2 * k + 8) + 4)
     st0 = eng_s.init()
     _, row = jax.jit(eng_s.encode_sparse_commit)(
         st0, jnp.int32(0), jnp.zeros(eng_s.P))
-    assert res_s.wire_bytes == total * sparse_wire_nbytes(row)
+    assert res_s.payload_bytes == total * sparse_wire_nbytes(row)
+    from repro.runtime.transport import commit_frame_nbytes, pack_arrays
+    manifest, payload = pack_arrays([np.asarray(x) for x in row])
+    assert len(payload) == sparse_wire_nbytes(row)
+    # every framed commit strictly exceeds its payload; the exact total is
+    # the sum of per-(worker, job) header sizes over the recorded arrivals
+    jobs = {}
+    framed = 0
+    for w in np.asarray(res_s.trace.worker):
+        j = jobs.get(int(w), 0)
+        jobs[int(w)] = j + 1
+        framed += commit_frame_nbytes(int(w), j, manifest, len(payload))
+    assert res_s.wire_bytes == framed > res_s.payload_bytes
     # snapshot-encode cache: the init zero-delta is encoded once and shared
     # n ways; every applying delivery afterwards sees fresh params
     assert res_s.snap_encodes >= 1

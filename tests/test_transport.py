@@ -1,0 +1,548 @@
+"""Multi-host transport acceptance tests (docs/async.md, "Multi-host
+transport").
+
+* Frame codec: encode/decode roundtrips for f32 commits, int8+scales
+  pairs, and SparseRow payloads (zero-touched and cap-saturated rows
+  included) are BYTE-exact; ``framed_nbytes``/``commit_frame_nbytes``
+  predict the real frame sizes; corrupt prefixes fail loudly.
+* Real socket bytes: the same roundtrips through a connected
+  ``socket.socketpair`` via ``SocketTransport`` — including a
+  hypothesis property sweep over mixed dtypes/shapes when hypothesis is
+  installed — plus EOF/timeout semantics on both transport twins.
+* ArrivalTrace schema: v2 files carry digests, v1 files (no ``schema``
+  key) upgrade in place, unknown versions are rejected.
+* Hosted integration: 2-link loopback runs (InProc and socketpair)
+  driven by real ``run_worker`` clients replay through the
+  single-process ``AsyncRunner`` BIT-FOR-BIT (params, digests, losses,
+  times); a mid-run dead worker (EOF and silent-heartbeat variants) is
+  detected and the run still completes; a dropped link reconnects
+  through ``accept_fn`` and the resumed run still replays bitwise.
+"""
+
+import json
+import socket
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (SparseRow, commit_digest,
+                                    sparse_wire_nbytes)
+from repro.core.engine import DuDeEngine
+from repro.core.flatten import make_flat_spec
+from repro.optim import sgd
+from repro.runtime.arrivals import TRACE_SCHEMA, ArrivalTrace, TraceArrivals
+from repro.runtime.hostloop import HostRunner, run_worker
+from repro.runtime.runner import AsyncRunner
+from repro.runtime.transport import (FRAME_ALIGN, InProcTransport,
+                                     SocketTransport, TransportClosed,
+                                     TransportError, TransportTimeout,
+                                     commit_frame_nbytes, commit_header,
+                                     decode_frame, encode_frame,
+                                     framed_nbytes, pack_arrays,
+                                     sparse_row_arrays,
+                                     sparse_row_from_arrays, unpack_arrays)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis
+    HAVE_HYPOTHESIS = False
+
+N = 5
+LR = 0.05
+SEED = 3
+
+
+# ------------------------------------------------------------------ fixtures
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {"w": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+            "b": jnp.zeros((5,), jnp.float32)}
+
+
+_TARGETS = jnp.asarray(np.random.default_rng(1).normal(size=(3, 4)),
+                       jnp.float32)
+
+
+def _sample_fn(i, rng):
+    return {"i": np.int32(i), "noise": np.asarray(
+        rng.normal(size=(3, 4)), np.float32)}
+
+
+def _loss(params, batch, key):
+    noise = batch["noise"] * 0.01
+    return (jnp.sum((params["w"] - _TARGETS + noise) ** 2)
+            + jnp.sum(params["b"] ** 2) * 0.1
+            + 0.001 * batch["i"].astype(jnp.float32))
+
+
+def _grad_fn(params, batch, key):
+    return jax.value_and_grad(_loss)(params, batch, key)
+
+
+def make_runner(fmt="topk_ef", cap=None):
+    tree = _tree()
+    spec = make_flat_spec(tree)
+    eng = DuDeEngine.for_tree(tree, n_workers=N, interpret=True,
+                              commit_format=fmt,
+                              **({"sparse_meta": True, "sparse_cap": cap}
+                                 if fmt == "topk_ef" else {}))
+    return AsyncRunner(eng, "dude", sgd(LR), _grad_fn), spec, tree
+
+
+def _sparse_row(cap=4, k=16, count=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return SparseRow(
+        tiles=np.asarray(rng.integers(0, 100, cap), np.int32),
+        lanes=np.asarray(rng.integers(0, 128, (cap, k)), np.uint8),
+        vals=np.asarray(rng.integers(-127, 128, (cap, k)), np.int8),
+        scales=np.asarray(rng.normal(size=cap), np.float32),
+        count=np.asarray(count, np.int32),
+    )
+
+
+def _assert_arrays_equal(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        w = np.asarray(w)
+        assert g.dtype == w.dtype.newbyteorder("<") or g.dtype == w.dtype
+        assert g.shape == w.shape
+        np.testing.assert_array_equal(g, w)
+
+
+# -------------------------------------------------------------- frame codecs
+
+class TestFraming:
+    def test_f32_commit_roundtrip(self):
+        g = np.asarray(np.random.default_rng(0).normal(size=257), np.float32)
+        frame = encode_frame("commit", commit_header(3, 7, 1.25,
+                                                     commit_digest(g)), [g])
+        assert len(frame) % FRAME_ALIGN == 0
+        msg, used = decode_frame(frame)
+        assert used == len(frame)
+        assert msg.kind == "commit"
+        assert (msg.meta["w"], msg.meta["j"]) == (3, 7)
+        assert msg.meta["loss"] == 1.25
+        _assert_arrays_equal(msg.arrays, [g])
+        assert commit_digest(msg.arrays[0]) == msg.meta["dg"]
+
+    def test_int8_ef_pair_roundtrip(self):
+        rng = np.random.default_rng(1)
+        q = np.asarray(rng.integers(-127, 128, 384), np.int8)
+        s = np.asarray(rng.normal(size=3), np.float32)
+        msg, _ = decode_frame(encode_frame("snapshot", {"w": 0, "j": 2},
+                                           [q, s]))
+        _assert_arrays_equal(msg.arrays, [q, s])
+
+    @pytest.mark.parametrize("count", [0, 2, 4])  # zero-touched .. saturated
+    def test_sparse_row_roundtrip(self, count):
+        row = _sparse_row(cap=4, count=count)
+        arrays = sparse_row_arrays(row)
+        manifest, payload = pack_arrays(arrays)
+        assert len(payload) == sparse_wire_nbytes(row)
+        msg, _ = decode_frame(encode_frame("snapshot", {"w": 1}, arrays))
+        got = sparse_row_from_arrays(msg.arrays)
+        for f in SparseRow._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                          np.asarray(getattr(row, f)))
+
+    def test_mixed_dtypes_and_scalars(self):
+        arrays = [np.float64([[1.5, -2.0]]), np.int64(7),
+                  np.zeros((0, 3), np.float32), np.uint8([255, 0])]
+        msg, _ = decode_frame(encode_frame("x", None, arrays))
+        _assert_arrays_equal(msg.arrays, arrays)
+
+    def test_framed_nbytes_predicts_real_size(self):
+        g = np.ones(100, np.float32)
+        manifest, payload = pack_arrays([g])
+        meta = commit_header(2, 5, 0.5, commit_digest(g))
+        frame = encode_frame("commit", meta, [g])
+        assert framed_nbytes("commit", meta, len(payload),
+                             manifest) == len(frame)
+
+    def test_commit_frame_nbytes_fixed_width(self):
+        # placeholder and real loss/digest headers must be the SAME size
+        # for the same ids — the simulated runner's byte accountant
+        # depends on it
+        row = _sparse_row()
+        manifest, payload = pack_arrays(sparse_row_arrays(row))
+        want = commit_frame_nbytes(3, 11, manifest, len(payload))
+        real = encode_frame(
+            "commit", commit_header(3, 11, -1234.567, commit_digest(
+                np.ones(5, np.float32))), sparse_row_arrays(row))
+        assert len(real) == want
+
+    def test_bad_magic_and_version(self):
+        frame = bytearray(encode_frame("ping"))
+        bad = b"XX" + bytes(frame[2:])
+        with pytest.raises(TransportError, match="magic"):
+            decode_frame(bad)
+        frame[2] = 250  # absurd protocol version
+        with pytest.raises(TransportError, match="protocol v250"):
+            decode_frame(bytes(frame))
+
+    def test_partial_frame_is_timeout_not_error(self):
+        frame = encode_frame("commit", commit_header(0, 0),
+                             [np.ones(64, np.float32)])
+        for cut in (0, 3, len(frame) // 2, len(frame) - 1):
+            with pytest.raises(TransportTimeout):
+                decode_frame(frame[:cut])
+
+    def test_truncated_payload_rejected(self):
+        manifest, payload = pack_arrays([np.ones(16, np.float32)])
+        with pytest.raises(TransportError, match="truncated"):
+            unpack_arrays(manifest, payload[:-8])
+
+
+# ------------------------------------------------------------ real transports
+
+def _socketpair_transports(timeout=5.0):
+    a, b = socket.socketpair()
+    return (SocketTransport(a, timeout=timeout),
+            SocketTransport(b, timeout=timeout))
+
+
+class TestSocketTransport:
+    def test_roundtrip_over_real_socket_bytes(self):
+        a, b = _socketpair_transports()
+        try:
+            g = np.asarray(np.random.default_rng(2).normal(size=300),
+                           np.float32)
+            row = _sparse_row(cap=3, count=1, seed=3)
+            a.send("commit", commit_header(1, 4, 2.0, commit_digest(g)), [g])
+            a.send("snapshot", {"w": 1, "j": 5}, sparse_row_arrays(row))
+            m1 = b.recv(timeout=2.0)
+            m2 = b.recv(timeout=2.0)
+            _assert_arrays_equal(m1.arrays, [g])
+            got = sparse_row_from_arrays(m2.arrays)
+            np.testing.assert_array_equal(np.asarray(got.vals),
+                                          np.asarray(row.vals))
+            assert a.wire_sent == b.wire_recv > 0
+        finally:
+            a.close()
+            b.close()
+
+    def test_eof_raises_closed(self):
+        a, b = _socketpair_transports()
+        a.close()
+        with pytest.raises(TransportClosed):
+            b.recv(timeout=1.0)
+        b.close()
+
+    def test_timeout_keeps_partial_bytes(self):
+        a, b = _socketpair_transports()
+        try:
+            frame = encode_frame("commit", commit_header(0, 0),
+                                 [np.ones(32, np.float32)])
+            a.sock.sendall(frame[:10])  # raw partial write
+            with pytest.raises(TransportTimeout):
+                b.recv(timeout=0.05)
+            a.sock.sendall(frame[10:])
+            msg = b.recv(timeout=2.0)
+            assert msg.kind == "commit"
+        finally:
+            a.close()
+            b.close()
+
+
+class TestInProcTransport:
+    def test_pair_roundtrip_and_counters(self):
+        a, b = InProcTransport.pair()
+        g = np.arange(12, dtype=np.float32)
+        sent = a.send("commit", commit_header(0, 1), [g])
+        msg = b.recv(timeout=1.0)
+        _assert_arrays_equal(msg.arrays, [g])
+        assert a.wire_sent == b.wire_recv == sent
+
+    def test_timeout_then_close_drains_then_eof(self):
+        a, b = InProcTransport.pair()
+        with pytest.raises(TransportTimeout):
+            b.recv(timeout=0.01)
+        a.send("ping")
+        a.close()
+        assert b.recv(timeout=1.0).kind == "ping"  # queued frame survives
+        with pytest.raises(TransportClosed):
+            b.recv(timeout=1.0)
+        with pytest.raises(TransportClosed):
+            a.send("ping")
+
+
+if HAVE_HYPOTHESIS:
+    _DTYPES = st.sampled_from([np.float32, np.float64, np.int8, np.uint8,
+                               np.int32, np.int64])
+
+    @st.composite
+    def _array(draw):
+        dt = draw(_DTYPES)
+        shape = tuple(draw(st.lists(st.integers(0, 5), min_size=0,
+                                    max_size=3)))
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if np.issubdtype(dt, np.floating):
+            vals = draw(st.lists(
+                st.floats(allow_nan=False, width=32), min_size=n,
+                max_size=n))
+        else:
+            info = np.iinfo(dt)
+            vals = draw(st.lists(
+                st.integers(int(info.min), int(info.max)), min_size=n,
+                max_size=n))
+        return np.asarray(vals, dt).reshape(shape)
+
+    class TestHypothesisRoundtrips:
+        @settings(max_examples=25, deadline=None)
+        @given(arrays=st.lists(_array(), min_size=0, max_size=4),
+               meta=st.dictionaries(
+                   st.text(min_size=1, max_size=8).filter(
+                       lambda s: s not in ("k", "a")),
+                   st.integers(-2**31, 2**31 - 1), max_size=4))
+        def test_framed_roundtrip_through_socketpair(self, arrays, meta):
+            a, b = _socketpair_transports()
+            try:
+                a.send("x", meta, arrays)
+                msg = b.recv(timeout=5.0)
+                assert msg.kind == "x"
+                assert msg.meta == meta
+                _assert_arrays_equal(msg.arrays, arrays)
+            finally:
+                a.close()
+                b.close()
+
+
+# ------------------------------------------------------------- trace schema
+
+class TestTraceSchema:
+    def _trace(self, digests=None):
+        return ArrivalTrace(
+            n=2, worker=np.asarray([0, 1, 0], np.int32),
+            t_dispatch=np.asarray([0.0, 0.0, 1.0]),
+            t_arrive=np.asarray([1.0, 2.0, 3.0]),
+            digest=digests)
+
+    def test_v2_roundtrip_with_digests(self, tmp_path):
+        tr = self._trace(("aa" * 4, "bb" * 4, "cc" * 4))
+        path = tr.save(str(tmp_path / "t.json"))
+        with open(path) as f:
+            assert json.load(f)["schema"] == TRACE_SCHEMA
+        back = ArrivalTrace.load(path)
+        assert back.digest == tr.digest
+        np.testing.assert_array_equal(back.worker, tr.worker)
+
+    def test_v1_upgrades_in_place(self, tmp_path):
+        path = tmp_path / "v1.json"
+        path.write_text(json.dumps({  # pre-schema file: no "schema" key
+            "n": 2, "worker": [1, 0], "t_dispatch": [0.0, 0.0],
+            "t_arrive": [1.0, 2.0]}))
+        tr = ArrivalTrace.load(str(path))
+        assert tr.digest is None
+        assert len(tr) == 2 and int(tr.worker[0]) == 1
+
+    def test_unknown_schema_rejected(self, tmp_path):
+        path = tmp_path / "future.json"
+        path.write_text(json.dumps({
+            "schema": TRACE_SCHEMA + 1, "n": 1, "worker": [0],
+            "t_dispatch": [0.0], "t_arrive": [1.0]}))
+        with pytest.raises(ValueError, match="schema"):
+            ArrivalTrace.load(str(path))
+
+    def test_digest_count_mismatch_rejected(self):
+        from repro.runtime.arrivals import Arrival
+        with pytest.raises(ValueError, match="digests"):
+            ArrivalTrace.from_arrivals(
+                2, [Arrival(0, 0, 0.0, 1.0)], digests=("aa", "bb"))
+
+
+# ------------------------------------------------------- hosted integration
+
+def _spawn_workers(pairs, groups, spec, **kw):
+    """run_worker client threads, one per link; exceptions captured."""
+    stats = [None] * len(groups)
+    errors = [None] * len(groups)
+
+    def main(i):
+        try:
+            stats[i] = run_worker(lambda: pairs[i][1], groups[i],
+                                  _grad_fn, _sample_fn, spec,
+                                  poll_s=0.05, **kw)
+        except TransportError as e:
+            errors[i] = e
+
+    threads = [threading.Thread(target=main, args=(i,), daemon=True)
+               for i in range(len(groups))]
+    for t in threads:
+        t.start()
+    return threads, stats, errors
+
+
+def _replay(res, total, fmt="topk_ef"):
+    """Replay a hosted run's trace through the single-process runner and
+    assert params, digests, losses, and recorded times are all bitwise."""
+    runner2, _, tree = make_runner(fmt)
+    rep = runner2.run(TraceArrivals(res.trace), total, _sample_fn,
+                      runner2.init_state(_tree()), seed=SEED,
+                      record_every=10, key_mode="worker",
+                      record_digests=True)
+    np.testing.assert_array_equal(np.asarray(rep.state.params),
+                                  np.asarray(res.state.params))
+    assert rep.digests == res.trace.digest
+    np.testing.assert_array_equal(rep.losses, res.losses)
+    np.testing.assert_array_equal(rep.times, res.times)
+    return rep
+
+
+class TestHostedLoopback:
+    TOTAL = 30
+
+    def test_inproc_two_links_replays_bitwise(self):
+        runner, spec, tree = make_runner("topk_ef")
+        pairs = [InProcTransport.pair() for _ in range(2)]
+        threads, stats, errors = _spawn_workers(
+            pairs, [(0, 1, 2), (3, 4)], spec)
+        host = HostRunner(runner, heartbeat_s=1.0, dead_after_s=3.0,
+                          poll_s=0.02)
+        res = host.serve([p[0] for p in pairs], self.TOTAL,
+                         runner.init_state(tree), seed=SEED, record_every=10)
+        for t in threads:
+            t.join(timeout=30)
+        assert errors == [None, None]
+        assert res.stats.iters == self.TOTAL
+        assert res.dropouts == 0 and res.dropped_workers == ()
+        assert len(res.trace) == self.TOTAL
+        assert len(res.trace.digest) == self.TOTAL
+        assert sum(s["commits"] for s in stats) >= self.TOTAL
+        # server byte totals match what the clients saw
+        assert res.wire_recv == sum(s["wire_sent"] for s in stats)
+        _replay(res, self.TOTAL)
+
+    def test_socketpair_links_replay_bitwise_int8_ef(self):
+        runner, spec, tree = make_runner("int8_ef")
+        pairs = [_socketpair_transports() for _ in range(2)]
+        threads, stats, errors = _spawn_workers(
+            pairs, [(0, 1), (2, 3, 4)], spec)
+        host = HostRunner(runner, heartbeat_s=1.0, dead_after_s=3.0,
+                          poll_s=0.02)
+        res = host.serve([p[0] for p in pairs], self.TOTAL,
+                         runner.init_state(tree), seed=SEED, record_every=10)
+        for t in threads:
+            t.join(timeout=30)
+        assert errors == [None, None]
+        assert res.stats.iters == self.TOTAL
+        _replay(res, self.TOTAL, fmt="int8_ef")
+
+    def test_kill_one_worker_mid_run_completes(self):
+        runner, spec, tree = make_runner("topk_ef")
+        pairs = [InProcTransport.pair() for _ in range(2)]
+        threads, stats, errors = _spawn_workers(
+            pairs, [(0, 1, 2), (3, 4)], spec)
+        # kill link 1 (workers 3, 4) after 8 applied iterations — the
+        # checkpoint hook runs inside the server loop, so the EOF lands
+        # deterministically mid-run
+        host = HostRunner(runner, heartbeat_s=1.0, dead_after_s=3.0,
+                          poll_s=0.02)
+
+        def kill(state, it):
+            pairs[1][1].close()
+
+        res = host.serve([p[0] for p in pairs], self.TOTAL,
+                         runner.init_state(tree), seed=SEED, record_every=10,
+                         checkpoint_every=8, checkpoint_fn=kill)
+        for t in threads:
+            t.join(timeout=30)
+        assert res.stats.iters == self.TOTAL  # survivors finish the run
+        assert res.dropouts == 2
+        assert res.dropped_workers == (3, 4)
+        assert res.reconnects == 0
+        # the dead link's client saw the EOF (no reconnect budget)
+        assert isinstance(errors[1], TransportClosed)
+        _replay(res, self.TOTAL)  # dropout does not break the oracle
+
+    def test_silent_worker_detected_by_heartbeat(self):
+        runner, spec, tree = make_runner("topk_ef")
+        real = InProcTransport.pair()
+        silent = InProcTransport.pair()
+        # fast client heartbeat: the live link must stay audibly alive
+        # through jit compiles even against the test's 0.6s death clock
+        threads, stats, errors = _spawn_workers([real], [(0, 1, 2, 3)], spec,
+                                                heartbeat_s=0.2)
+        # the silent link says hello for worker 4, then never answers
+        # anything — its death must come from the heartbeat clock, not EOF
+        # (its 0.6s age-out elapses during the run's first jit compiles,
+        # while the live link stays audible through its heartbeat thread)
+        silent[1].send("hello", {"workers": [4]})
+        host = HostRunner(runner, heartbeat_s=0.2, dead_after_s=0.6,
+                          poll_s=0.02)
+        res = host.serve([real[0], silent[0]], self.TOTAL,
+                         runner.init_state(tree), seed=SEED, record_every=10)
+        for t in threads:
+            t.join(timeout=30)
+        assert errors[0] is None
+        assert res.stats.iters == self.TOTAL
+        assert res.dropouts == 1 and res.dropped_workers == (4,)
+        # the silent client was fully attached (welcomed and dispatched a
+        # job) before the heartbeat clock declared it dead; a PING may or
+        # may not have fit between first silence and the death threshold
+        kinds = []
+        while silent[1]._q:
+            kinds.append(silent[1].recv(timeout=0).kind)
+        assert kinds[:2] == ["welcome", "snapshot"]
+        _replay(res, self.TOTAL)
+
+    def test_dropped_link_reconnects_and_resyncs(self):
+        runner, spec, tree = make_runner("topk_ef")
+        first = InProcTransport.pair()
+        second = InProcTransport.pair()
+        dials = [first[1], second[1]]   # worker's endpoints, in dial order
+        accepts = [second[0]]           # what accept_fn hands the server
+        rejoin = []
+        stats = [None]
+        errors = [None]
+
+        def wmain():
+            try:
+                stats[0] = run_worker(
+                    lambda: dials.pop(0), tuple(range(N)),
+                    _grad_fn, _sample_fn, spec, poll_s=0.05,
+                    max_reconnects=2, reconnect_backoff_s=0.05)
+            except TransportError as e:
+                errors[0] = e
+
+        # drop the sole link after 10 applied iterations (the checkpoint
+        # hook runs inside the server loop, so the drop is deterministic);
+        # the dropped set then makes the server poll accept_fn, which
+        # hands it the second pair the reconnecting worker dials
+        def kill(state, it):
+            if not rejoin:
+                rejoin.append(True)
+                first[1].close()
+
+        host = HostRunner(runner, heartbeat_s=1.0, dead_after_s=3.0,
+                          poll_s=0.02)
+        th = threading.Thread(target=wmain, daemon=True)
+        th.start()
+        res = host.serve([first[0]], self.TOTAL, runner.init_state(tree),
+                         seed=SEED, record_every=10,
+                         accept_fn=lambda: (accepts.pop(0)
+                                            if rejoin and accepts else None),
+                         checkpoint_every=10, checkpoint_fn=kill)
+        th.join(timeout=30)
+        assert errors[0] is None
+        assert res.stats.iters == self.TOTAL
+        assert res.dropouts == N          # every logical worker dropped...
+        assert res.reconnects == N        # ...and every one rejoined
+        assert res.dropped_workers == ()  # none still missing at the end
+        assert stats[0]["reconnects"] == 1
+        _replay(res, self.TOTAL)  # retried in-flight jobs stay bitwise
+
+    def test_routed_algo_rejected(self):
+        tree = _tree()
+        eng = DuDeEngine.for_tree(tree, n_workers=N, interpret=True)
+        routed = AsyncRunner(eng, "uniform_asgd", sgd(LR), _grad_fn)
+        with pytest.raises(ValueError, match="greedy"):
+            HostRunner(routed)
+        with pytest.raises(ValueError, match="worker"):
+            routed.session(routed.init_state(tree), _sample_fn,
+                           key_mode="worker")
