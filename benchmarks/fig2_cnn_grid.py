@@ -66,8 +66,81 @@ def run(n: int = 10, alphas=(0.1, 0.5), stds=(1.0, 5.0), iters: int = 120,
     return rows
 
 
+def run_scenarios(n: int = 10, alphas=(0.1, 0.5), dropout_rates=(0.0, 0.2),
+                  iters: int = 120, seeds=(0,), n_data: int = 4000,
+                  batch: int = 32) -> list[dict]:
+    """Client-state scenario grid (PR 10): dropout-rate x label-skew alpha,
+    DuDe vs vanilla ASGD, each run under a ``ClientStateProcess`` with
+    mid-round dropout + reconnect and skew-correlated availability (the
+    most label-skewed shards are also the flakiest clients).  ``derived`` is
+    test accuracy; ``extra`` carries the trace's client-state telemetry so
+    the benchmark records how much chaos each run actually absorbed."""
+    from repro.data import label_distribution
+    from repro.runtime import (ClientStateProcess, FixedArrivals,
+                               SkewAvailability)
+
+    x, y = class_gaussian_images(n=n_data, seed=0)
+    xe, ye = jnp.asarray(x[:512]), jnp.asarray(y[:512])
+
+    def grad_fn(params, b, key):
+        return jax.value_and_grad(cnn_loss)(params, b)
+
+    rows = []
+    for alpha in alphas:
+        for drop in dropout_rates:
+            for name in ("dude_asgd", "vanilla_asgd"):
+                accs, losses, wall, stats = [], [], [], []
+                for seed in seeds:
+                    shards = dirichlet_partition(y, n, alpha, seed=seed)
+                    snp = make_sample_fn(x, y, shards, batch, seed=seed)
+
+                    def sample_fn(i, rng):
+                        b = snp(i, rng)
+                        return {"x": jnp.asarray(b["x"]),
+                                "y": jnp.asarray(b["y"])}
+
+                    dist = label_distribution(y, shards)
+                    skew = dist.max(axis=1)
+                    skew = (skew - skew.min()) / max(
+                        1e-9, float(np.ptp(skew)))
+                    speeds = truncated_normal_speeds(n, std=1.0,
+                                                     seed=seed + 5)
+                    proc = ClientStateProcess(
+                        FixedArrivals(np.asarray(speeds.times)),
+                        seed=seed + 21, dropout_rate=drop,
+                        reconnect_mean=2.0 if drop else None,
+                        availability=SkewAvailability(skew))
+                    t0 = time.perf_counter()
+                    res = simulate(
+                        make_algo(name, n), speeds, grad_fn, sample_fn,
+                        cnn_init(jax.random.PRNGKey(seed)), lr=0.01,
+                        total_iters=iters, record_every=10_000, seed=seed,
+                        arrivals=proc,
+                    )
+                    wall.append(time.perf_counter() - t0)
+                    accs.append(float(cnn_accuracy(res.params, xe, ye)))
+                    losses.append(
+                        float(cnn_loss(res.params, {"x": xe, "y": ye})))
+                    stats.append(res.trace.event_stats())
+                rows.append({
+                    "name": f"fig2scenario/n{n}/a{alpha}/drop{drop}/{name}",
+                    "us_per_call": 1e6 * float(np.mean(wall)) / iters,
+                    "derived": float(np.mean(accs)),
+                    "extra": {
+                        "loss": float(np.mean(losses)),
+                        "dropouts": float(np.mean(
+                            [s["dropouts"] for s in stats])),
+                        "wait_time": float(np.mean(
+                            [s["wait_time"] for s in stats])),
+                        "outage_time": float(np.mean(
+                            [s["outage_time"] for s in stats])),
+                    },
+                })
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run_scenarios():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']:.4f}")
 
 

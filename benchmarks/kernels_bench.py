@@ -850,12 +850,76 @@ def unravel_sweep(arch: str = "qwen2_0_5b", shape=(2, 4),
     return rows
 
 
+def scenario_grid_rows(iters: int = 150,
+                       dropout_rates=(0.0, 0.2),
+                       hets=(1.0, 5.0),
+                       algos=("dude", "dude_hinge", "dude_poly",
+                              "vanilla_asgd")) -> list[dict]:
+    """BENCH_10 scenario grid: dropout-rate x heterogeneity x staleness
+    rule, end-to-end through ``AsyncRunner`` under a ``ClientStateProcess``
+    (mid-round dropout + reconnect-from-stale-snapshot).  Each cell runs the
+    N-worker closed-form quadratic so ``derived`` is the exact
+    ||grad F||^2 at the final iterate — a convergence-quality number, not a
+    timing — while ``us_per_call`` keeps the loop's arrival latency and
+    ``extra`` records tau_max plus the trace's dropout telemetry."""
+    from repro.optim import flat_sgd
+    from repro.runtime import ClientStateProcess, FixedArrivals
+    from repro.runtime.runner import AsyncRunner
+
+    n, P = 8, 64
+    rows = []
+    for het in hets:
+        rng = np.random.default_rng(17)
+        A = np.stack([np.diag(rng.uniform(0.5, 2.0, P)) for _ in range(n)])
+        b = np.stack([rng.normal(size=P) * het for _ in range(n)])
+        Abar, bbar = A.mean(axis=0), b.mean(axis=0)
+        Aj = jnp.asarray(A, jnp.float32)
+        bj = jnp.asarray(b, jnp.float32)
+
+        def grad_fn(params, batch, key, Aj=Aj, bj=bj):
+            Ai, bi = Aj[batch], bj[batch]
+            g = Ai @ params - bi + 0.05 * jax.random.normal(key, (P,))
+            return 0.5 * params @ Ai @ params - bi @ params, g
+
+        sample_fn = (lambda i, rng_: jnp.int32(i))
+
+        for drop in dropout_rates:
+            for name in algos:
+                eng = DuDeEngine(spec=make_flat_spec(jnp.zeros(P)),
+                                 n_workers=n)
+                runner = AsyncRunner(eng, name, flat_sgd(0.03), grad_fn)
+                st = runner.init_state(jnp.zeros(P))
+                proc = ClientStateProcess(
+                    FixedArrivals(np.linspace(0.6, 2.0, n)),
+                    seed=23, dropout_rate=drop,
+                    reconnect_mean=1.0 if drop else None)
+                t0 = time.perf_counter()
+                res = runner.run(proc, iters, sample_fn, st, seed=0,
+                                 record_every=10 ** 9)
+                jax.block_until_ready(res.state.params)
+                t_loop = (time.perf_counter() - t0) / iters
+                w = np.asarray(eng.spec.unravel(res.state.params))
+                stats = res.stats.trace.event_stats()
+                rows.append({
+                    "name": f"scenario_grid/het{het}/drop{drop}/{name}",
+                    "n": n, "P": eng.spec.padded_size,
+                    "us_per_call": 1e6 * t_loop,
+                    "derived": float(np.sum((Abar @ w - bbar) ** 2)),
+                    "extra": {"tau_max": int(res.tau_max),
+                              "arrivals_per_s": 1.0 / t_loop,
+                              "dropouts": stats.get("dropouts", 0),
+                              "outage_time": stats.get("outage_time", 0.0)},
+                })
+    return rows
+
+
 def run(backend: str = "all") -> list[dict]:
     backends = BACKENDS if backend == "all" else (backend,)
     rows = engine_sweep(backends)
     rows += round_apply_sweep(backends)
     rows += session_dispatch_rows()
     rows += arrival_throughput_rows()
+    rows += scenario_grid_rows()
     rows += commit_format_sweep()
     rows += sparse_transport_sweep()
     rows += transport_sweep()
@@ -934,7 +998,7 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     choices=list(BACKENDS) + ["all"],
                     help="ServerEngine backend(s) to sweep")
-    ap.add_argument("--json-out", default="benchmarks/BENCH_9.json",
+    ap.add_argument("--json-out", default="benchmarks/BENCH_10.json",
                     help="write rows as machine-readable JSON here "
                          "('' disables)")
     args = ap.parse_args()
@@ -947,7 +1011,7 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({
-                "pr": 9,
+                "pr": 10,
                 "device_count": jax.device_count(),
                 "platform": jax.default_backend(),
                 "rows": rows,

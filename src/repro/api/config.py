@@ -24,12 +24,13 @@ from typing import Any, Optional, Union
 
 import jax.numpy as jnp
 
-from ..core.algos import ASYNC_ALGOS, ROUND_ALGOS
+from ..core.algos import ASYNC_ALGOS, ROUND_ALGOS, STALENESS_ASYNC
 from ..core.compression import COMMIT_FORMATS
 from ..core.dude import DuDeConfig
 from ..core.engine import BACKENDS
 from ..models.config import ModelConfig
 from ..optim import Optimizer, adamw, momentum_sgd, sgd
+from ..runtime.arrivals import SCENARIO_KINDS
 
 __all__ = ["ConfigError", "CheckpointPolicy", "TransportPolicy",
            "TrainerConfig", "OPTIMIZERS"]
@@ -170,6 +171,12 @@ class TrainerConfig:
                                          # flight)
     arrival_queue_depth: int = 2        # async runs: host->device step queue
                                         # depth (2 = double buffering)
+    scenario: str = "none"              # async runs: client-state scenario
+                                        # wrapped around the arrival process
+                                        # (runtime.make_scenario — dropout,
+                                        # partial gradients, availability
+                                        # cycles; docs/async.md
+                                        # "Client-state scenarios")
     seed: int = 0
     checkpoint: CheckpointPolicy = CheckpointPolicy()
     transport: TransportPolicy = TransportPolicy()  # multi-host serving
@@ -227,6 +234,15 @@ class TrainerConfig:
         if self.arrival_queue_depth < 1:
             raise ConfigError(
                 f"arrival_queue_depth={self.arrival_queue_depth} < 1")
+        if self.scenario not in SCENARIO_KINDS:
+            raise ConfigError(
+                f"unknown scenario {self.scenario!r}; "
+                f"options: {SCENARIO_KINDS}")
+        if self.algo in STALENESS_ASYNC and self.commit_format != "f32":
+            raise ConfigError(
+                f"algo {self.algo!r} mixes arrivals with the stored f32 "
+                "slab row (FedAsync s(tau) damping); it requires "
+                f"commit_format 'f32', got {self.commit_format!r}")
         from ..launch.steps import PARAMS_LAYOUTS
         if self.params_layout not in PARAMS_LAYOUTS:
             raise ConfigError(

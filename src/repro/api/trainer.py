@@ -219,9 +219,15 @@ class Trainer:
         self.rounds`` so segmented runs (repeated run_async calls on one
         session) continue the sampling/key stream instead of replaying it;
         pass it explicitly (e.g. the recording run's) for trace-replay
-        equivalence.  See docs/async.md.
+        equivalence.  When ``config.scenario`` is not ``"none"`` the
+        arrival process is wrapped in the named client-state scenario
+        (``runtime.make_scenario``: dropout/reconnect, partial gradients,
+        availability cycles) — except trace replays and processes that are
+        already a ``ClientStateProcess``, which carry their own client
+        state.  See docs/async.md.
         """
-        from ..runtime import make_arrivals
+        from ..runtime import make_arrivals, make_scenario
+        from ..runtime.arrivals import ClientStateProcess, TraceArrivals
         from ..runtime.runner import AsyncRunner
         if self.async_algo is None:
             raise ConfigError(
@@ -238,6 +244,10 @@ class Trainer:
             # speed-model-based heterogeneous fleet build the process
             # explicitly (as launch/train.py does)
             arrivals = make_arrivals(arrivals, self.cfg.n_workers, seed=seed)
+        if self.config.scenario != "none" and not isinstance(
+                arrivals, (TraceArrivals, ClientStateProcess)):
+            arrivals = make_scenario(self.config.scenario, arrivals,
+                                     seed=seed)
         if self._runner is None:
             self._runner = AsyncRunner(
                 self.engine, self.async_algo, self.opt,

@@ -48,14 +48,18 @@ Mask semantics per rule (all masks are ``[n]`` bool):
 
 Alongside the round registry lives the ARRIVAL-granularity one:
 ``AsyncAlgo`` rules consume one worker's gradient per server iteration —
-``arrival(state, worker, grad) -> (state, g)`` — and carry the routing
+``arrival(state, worker, grad, tau) -> (state, g)`` — and carry the routing
 discipline (greedy / uniform / shuffled) that the event loop
 (``runtime/loop.py``) schedules.  ``dude`` maps to ``DuDeEngine.commit``;
-the three ASGD disciplines are the identity rule under different routing.
-These are what ``runtime.AsyncRunner`` and ``Trainer.run_async`` drive on
-the flat train state, and what ``core/baselines.py`` wraps for the
-simulator.  Covered by docs/engine.md ("The server-rule registry and the
-session API") and docs/async.md ("Arrival-granularity algorithms").
+the three ASGD disciplines are the identity rule under different routing;
+the staleness-adaptive family (``dude_const`` / ``dude_hinge`` /
+``dude_poly``) mixes the arriving gradient with the worker's stored slab row
+by FedAsync's s(τ) weight before the DuDe commit — at s(τ)=1 it IS the dude
+rule, bitwise.  These are what ``runtime.AsyncRunner`` and
+``Trainer.run_async`` drive on the flat train state, and what
+``core/baselines.py`` wraps for the simulator.  Covered by docs/engine.md
+("The server-rule registry and the session API") and docs/async.md
+("Arrival-granularity algorithms" / "Staleness-adaptive rules").
 """
 
 from __future__ import annotations
@@ -74,7 +78,8 @@ Pytree = Any
 
 __all__ = [
     "ROUND_ALGOS", "RoundAlgo", "make_round_algo",
-    "ASYNC_ALGOS", "AsyncAlgo", "make_async_algo",
+    "ASYNC_ALGOS", "STALENESS_RULES", "STALENESS_ASYNC",
+    "AsyncAlgo", "make_async_algo", "staleness_weight",
     "sync_direction", "mifa_update", "fedbuff_fold",
 ]
 
@@ -82,7 +87,44 @@ __all__ = [
 ROUND_ALGOS = ("dude", "dude_accum", "sync_sgd", "mifa", "fedbuff")
 
 # arrival-granularity rules (--async mode); dude appears in both registries
-ASYNC_ALGOS = ("dude", "vanilla_asgd", "uniform_asgd", "shuffled_asgd")
+ASYNC_ALGOS = ("dude", "dude_const", "dude_hinge", "dude_poly",
+               "vanilla_asgd", "uniform_asgd", "shuffled_asgd")
+
+# FedAsync staleness weight vocabulary and the async algo names that use it
+STALENESS_RULES = ("const", "hinge", "poly")
+STALENESS_ASYNC = {"dude_const": "const", "dude_hinge": "hinge",
+                   "dude_poly": "poly"}
+
+# FedAsync / FLGo defaults for the s(tau) shapes
+HINGE_A = 10.0
+HINGE_B = 4.0
+POLY_A = 0.5
+
+
+def staleness_weight(rule: str, tau, *, hinge_a: float = HINGE_A,
+                     hinge_b: float = HINGE_B, poly_a: float = POLY_A):
+    """FedAsync's staleness weight s(τ) ∈ (0, 1] (Xie et al. 2019).
+
+    ``const``: s(τ) = 1 (plain DuDe).  ``hinge``: s(τ) = 1 for τ <= b, else
+    ``min(1, 1 / (a(τ - b)))`` — the min also closes the 1/0 hole just past
+    the knee, so the weight is finite, in (0, 1], and monotone
+    non-increasing for every τ >= 0.  ``poly``: s(τ) = (1 + τ)^(-a).
+    Elementwise jnp on float32, so the rule runs inside the mesh-native
+    arrival step; accepts scalars or arrays (the property tests sweep
+    arrays).
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    if rule == "const":
+        return jnp.ones_like(tau)
+    if rule == "hinge":
+        a, b = jnp.float32(hinge_a), jnp.float32(hinge_b)
+        return jnp.where(tau <= b, jnp.float32(1.0),
+                         jnp.minimum(jnp.float32(1.0),
+                                     jnp.float32(1.0) / (a * (tau - b))))
+    if rule == "poly":
+        return jnp.power(jnp.float32(1.0) + tau, -jnp.float32(poly_a))
+    raise ValueError(
+        f"unknown staleness rule {rule!r}; options: {STALENESS_RULES}")
 
 
 # ------------------------------------------------------------- rule cores
@@ -284,12 +326,16 @@ class AsyncAlgo:
     """One per-arrival server rule bound to an engine, for the fully-async
     path (``runtime.AsyncRunner`` / ``Trainer.run_async``).
 
-    ``arrival(state, worker, grad)`` consumes ONE worker's flat ``[P]``
-    gradient and returns ``(state, g)`` — the descent direction the flat
+    ``arrival(state, worker, grad, tau)`` consumes ONE worker's flat ``[P]``
+    gradient (with its model staleness ``tau``, which only the
+    staleness-adaptive rules read — it defaults to 0 for callers that
+    predate it) and returns ``(state, g)`` — the descent direction the flat
     optimizer applies that same iteration.  The rule body is elementwise on
     P (``DuDeEngine.commit`` runs under the engine's P-axis ``shard_map``
-    when meshed; the ASGD identity needs no collective at all), so a
-    sharded arrival step moves zero bytes, exactly like the round rules.
+    when meshed; the ASGD identity needs no collective at all; the
+    staleness mix reads the worker's ``[n, P]`` row along the REPLICATED
+    worker axis), so a sharded arrival step moves zero bytes, exactly like
+    the round rules.
 
     ``route`` is the SCHEDULING half of the algorithm — who receives the
     post-update model — consumed by ``runtime.loop.drive_arrivals``:
@@ -302,7 +348,8 @@ class AsyncAlgo:
     engine: DuDeEngine
     route: Any                        # None | "uniform" | "shuffled"
     init_fn: Callable[[], Pytree]
-    # (state, worker i32 scalar, grad [P] f32) -> (state, g [P] f32)
+    # (state, worker i32 scalar, grad [P] f32, tau i32 scalar)
+    #   -> (state, g [P] f32)
     arrival_fn: Callable[..., tuple]
     state_shapes_fn: Callable[[], Pytree] = None
 
@@ -315,9 +362,10 @@ class AsyncAlgo:
             return self.state_shapes_fn()
         return jax.eval_shape(self.init_fn)
 
-    def arrival(self, state, worker, grad):
+    def arrival(self, state, worker, grad, tau=0):
         return self.arrival_fn(state, jnp.asarray(worker, jnp.int32),
-                               grad.astype(jnp.float32))
+                               grad.astype(jnp.float32),
+                               jnp.asarray(tau, jnp.int32))
 
 
 def make_async_algo(name: str, engine: DuDeEngine) -> AsyncAlgo:
@@ -327,25 +375,58 @@ def make_async_algo(name: str, engine: DuDeEngine) -> AsyncAlgo:
     (``DuDeEngine.commit``: fold ``(g - g_workers[w]) / n`` into ``g_bar``,
     remember ``g`` as worker ``w``'s latest) — greedy scheduling, full
     aggregation.  The three ASGD disciplines all descend along the raw
-    arriving gradient and differ only in routing.
+    arriving gradient and differ only in routing.  The staleness-adaptive
+    family damps a stale arrival toward the worker's stored row before the
+    commit:
+
+        g_eff = s(τ)·g + (1 − s(τ))·g_workers[w]        (FedAsync mixing)
+
+    so the fold becomes ``s(τ)·(g − g_workers[w]) / n`` — at s=1 the rule
+    IS ``dude`` bitwise, and a maximally stale gradient barely perturbs the
+    dual-delayed average.  The mix reads the worker's row in f32, so these
+    rules require the uncompressed slab (``commit_format="f32"``, enforced
+    here and at ``TrainerConfig`` build time).
     """
-    if name == "dude":
+    if name == "dude" or name in STALENESS_ASYNC:
         if engine.accumulate:
             raise ValueError(
-                "async dude runs per-arrival commits; the accumulate "
+                f"async {name} runs per-arrival commits; the accumulate "
                 "running-mean latch is a round-mode (dude_accum) feature")
+        if name == "dude":
+            def dude_arrival(state: EngineState, worker, grad, tau):
+                return engine.commit(state, worker, grad)
 
-        def dude_arrival(state: EngineState, worker, grad):
-            return engine.commit(state, worker, grad)
+            return AsyncAlgo("dude", engine, route=None,
+                             init_fn=engine.init, arrival_fn=dude_arrival,
+                             state_shapes_fn=engine.state_shapes)
 
-        return AsyncAlgo("dude", engine, route=None,
-                         init_fn=engine.init, arrival_fn=dude_arrival,
+        rule = STALENESS_ASYNC[name]
+        if engine.codec.compressed:
+            raise ValueError(
+                f"async {name} mixes the arriving gradient with the stored "
+                f"f32 slab row; it requires commit_format='f32', not "
+                f"{engine.codec.format!r}")
+
+        def staleness_arrival(state: EngineState, worker, grad, tau):
+            s = staleness_weight(rule, tau)
+            # row gather along the REPLICATED worker axis of the [n, P]
+            # slab: with P-axis sharding this slices shard-locally, keeping
+            # the arrival step collective-free (asserted by
+            # tests/test_scenarios.py on the 8-device mesh)
+            old = jax.lax.dynamic_index_in_dim(
+                state.g_workers, worker, axis=0, keepdims=False
+            ).astype(jnp.float32)
+            g_eff = s * grad + (jnp.float32(1.0) - s) * old
+            return engine.commit(state, worker, g_eff)
+
+        return AsyncAlgo(name, engine, route=None,
+                         init_fn=engine.init, arrival_fn=staleness_arrival,
                          state_shapes_fn=engine.state_shapes)
     if name in ("vanilla_asgd", "uniform_asgd", "shuffled_asgd"):
         route = {"vanilla_asgd": None, "uniform_asgd": "uniform",
                  "shuffled_asgd": "shuffled"}[name]
 
-        def asgd_arrival(state, worker, grad):
+        def asgd_arrival(state, worker, grad, tau):
             return state, grad
 
         return AsyncAlgo(name, engine, route=route,

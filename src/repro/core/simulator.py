@@ -167,6 +167,12 @@ def simulate(
         key, k1 = jax.random.split(key)
         batch = sample_fn(i, rng)
         loss, g = grad_fn(worker_params[i], batch, k1)
+        if view.completeness != 1.0:
+            # partial-gradient client state: scale the pytree leaves by the
+            # exact f32 completeness; elementwise f32 multiply commutes with
+            # ravel, so the runner's flat-side scaling is bitwise identical
+            cg = jnp.float32(view.completeness)
+            g = jax.tree.map(lambda x: cg * x, g)
         n_grads += 1
         state, params, _applied = on_gradient(state, jnp.int32(i), g,
                                               params, lr)

@@ -44,7 +44,8 @@ from repro.core import (
 )
 from repro.launch.sampling import make_worker_sample_fn
 from repro.runtime import (
-    ARRIVAL_KINDS, ExponentialArrivals, FixedArrivals, make_arrivals,
+    ARRIVAL_KINDS, SCENARIO_KINDS, ExponentialArrivals, FixedArrivals,
+    make_arrivals,
 )
 
 
@@ -119,6 +120,16 @@ def main():
                     help="ArrivalTrace JSON to replay (--arrival trace)")
     ap.add_argument("--trace-out", default=None,
                     help="record this run's ArrivalTrace JSON here")
+    ap.add_argument("--scenario", default="none",
+                    choices=list(SCENARIO_KINDS),
+                    help="client-state scenario wrapped around the arrival "
+                         "process (--async only): dropout = mid-round "
+                         "disconnect + reconnect-from-stale-snapshot, "
+                         "partial = partial-gradient completeness, "
+                         "sin/lognormal/skew = availability cycles, chaos = "
+                         "all of it (docs/async.md 'Client-state "
+                         "scenarios'); trace replays carry their own "
+                         "recorded client state")
     ap.add_argument("--max-in-flight", type=int, default=None,
                     help="bound on concurrent dispatched-but-unarrived "
                          "gradient jobs (back-pressure on simultaneously "
@@ -169,6 +180,7 @@ def main():
             params_layout=args.params_layout,
             fedbuff_buffer_size=args.fedbuff_buffer_size,
             max_in_flight=args.max_in_flight,
+            scenario=args.scenario,
             seed=args.seed,
             checkpoint=CheckpointPolicy(directory=args.ckpt_dir,
                                         every=args.ckpt_every),
@@ -180,6 +192,8 @@ def main():
     if args.serve and not args.async_mode:
         ap.error("--serve needs --async (the multi-host loop is arrival-"
                  "granularity)")
+    if args.scenario != "none" and not args.async_mode:
+        ap.error("--scenario needs --async (client state is per-arrival)")
 
     if args.resume and args.ckpt_dir:
         trainer = Trainer.restore(args.ckpt_dir, config)
@@ -284,13 +298,16 @@ def main():
             print(f"[train] checkpoint -> {trainer.save()}")
         print(json.dumps({
             "arch": cfg.name, "algo": args.algo, "mode": "async",
-            "arrival": args.arrival, "iters": int(res.stats.iters),
+            "arrival": args.arrival, "scenario": args.scenario,
+            "iters": int(res.stats.iters),
             "arrivals": int(res.stats.arrivals),
             "tau_max": int(res.tau_max),
             "max_in_flight": int(res.stats.max_in_flight),
             "first_loss": float(res.losses[0]) if len(res.losses) else None,
             "last_loss": float(res.losses[-1]) if len(res.losses) else None,
             "wall_s": round(time.time() - t0, 1),
+            **({"scenario_stats": res.trace.event_stats()}
+               if res.trace is not None and res.trace.events else {}),
         }))
         return
 

@@ -3,7 +3,10 @@
 Five layers, documented in docs/async.md:
 
 * ``arrivals`` — pluggable ``ArrivalProcess`` timing models (fixed-rate,
-  exponential stragglers, trace replay) and the recordable ``ArrivalTrace``;
+  exponential stragglers, trace replay), the client-state scenario engine
+  (``ClientStateProcess`` + availability models, behind ``make_scenario`` /
+  ``--scenario``) and the recordable ``ArrivalTrace`` (schema v3 with
+  per-arrival ``ClientEvent`` rows);
 * ``loop`` — the ONE dispatch/collect event loop (routing disciplines,
   staleness bookkeeping, bounded in-flight depth) shared by the simulator
   and the production runner;
@@ -23,15 +26,21 @@ import.  ``transport`` is eager (it only touches ``core.compression``).
 """
 
 from .arrivals import (
-    ARRIVAL_KINDS, TRACE_SCHEMA, Arrival, ArrivalProcess, ArrivalTrace,
-    ExponentialArrivals, FixedArrivals, TraceArrivals, make_arrivals,
+    ARRIVAL_KINDS, SCENARIO_KINDS, TRACE_SCHEMA, Arrival, ArrivalProcess,
+    ArrivalTrace, AvailabilityModel, ClientEvent, ClientStateProcess,
+    ExponentialArrivals, FixedArrivals, LognormalAvailability,
+    SinAvailability, SkewAvailability, TraceArrivals, make_arrivals,
+    make_scenario,
 )
 from .loop import ArrivalView, LoopStats, drive_arrivals
 
 __all__ = [
-    "ARRIVAL_KINDS", "TRACE_SCHEMA", "Arrival", "ArrivalProcess",
-    "ArrivalTrace",
+    "ARRIVAL_KINDS", "SCENARIO_KINDS", "TRACE_SCHEMA", "Arrival",
+    "ArrivalProcess", "ArrivalTrace",
+    "AvailabilityModel", "ClientEvent", "ClientStateProcess",
+    "LognormalAvailability", "SinAvailability", "SkewAvailability",
     "ExponentialArrivals", "FixedArrivals", "TraceArrivals", "make_arrivals",
+    "make_scenario",
     "ArrivalView", "LoopStats", "drive_arrivals",
     "AsyncResult", "AsyncRunner", "DeviceQueue",
     "worker_key", "worker_rng",

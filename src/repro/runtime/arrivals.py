@@ -1,4 +1,4 @@
-"""Arrival processes: who finishes a gradient, and when (host-side).
+"""Arrival processes and client-state scenarios (host-side timing models).
 
 The asynchronous algorithms in this repo are distinguished by their arrival
 *process* — the continuous-time stream of worker completions — not by their
@@ -6,7 +6,7 @@ server math (AsGrad, Islamov et al. 2023).  This module makes that process a
 first-class, pluggable object: an ``ArrivalProcess`` draws the compute
 DURATION of each dispatched gradient job, and the event loop
 (``runtime/loop.py``) turns those draws into a deterministic dispatch/collect
-event stream.  Three processes ship:
+event stream.  Three base processes ship:
 
 * ``FixedArrivals`` — the paper's fixed-computation-speed model (worker ``i``
   always takes ``times[i]``); ``from_speeds`` adapts a ``SpeedModel``.
@@ -17,34 +17,67 @@ event stream.  Three processes ship:
   per worker in dispatch order, so the deterministic event loop reproduces
   the identical arrival sequence.
 
+On top of the bases sits the **client-state scenario engine**:
+``ClientStateProcess`` wraps any base process and composes the failure modes
+federated deployments actually exhibit (FLGo's system simulator is the
+model): time-varying availability (``SinAvailability``,
+``LognormalAvailability``, label-skew-correlated ``SkewAvailability``),
+mid-round dropout with reconnect-from-stale-snapshot, partial-gradient
+completeness, and lognormal responsiveness jitter.  Every job's client-state
+outcome is summarized in a ``ClientEvent`` that the loop records into the
+``ArrivalTrace`` (schema v3), so chaos runs replay bit-for-bit: the trace
+carries both the timing AND the per-arrival completeness that scaled the
+gradient.  ``make_scenario`` is the CLI/Trainer-facing factory behind
+``--scenario``.
+
 Everything here is plain numpy on the host.  Documented in docs/async.md
-("Arrival processes").
+("Client-state scenarios").
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
+import math
 from typing import Optional, Sequence
 
 import numpy as np
 
 __all__ = [
-    "ARRIVAL_KINDS", "TRACE_SCHEMA", "Arrival", "ArrivalTrace",
+    "ARRIVAL_KINDS", "SCENARIO_KINDS", "TRACE_SCHEMA",
+    "Arrival", "ArrivalTrace", "ClientEvent",
     "ArrivalProcess", "FixedArrivals", "ExponentialArrivals", "TraceArrivals",
-    "make_arrivals",
+    "AvailabilityModel", "SinAvailability", "LognormalAvailability",
+    "SkewAvailability", "ClientStateProcess",
+    "make_arrivals", "make_scenario",
 ]
 
 # the --arrival CLI vocabulary (launch/train.py)
 ARRIVAL_KINDS = ("fixed", "exp", "trace")
 
+# the --scenario CLI vocabulary (launch/train.py); "none" is the identity
+SCENARIO_KINDS = ("none", "dropout", "partial", "sin", "lognormal", "skew",
+                  "chaos")
+
 # ArrivalTrace JSON schema version.  v1 (implicit — files with no "schema"
-# key) carried only (n, worker, t_dispatch, t_arrive); v2 adds the explicit
+# key) carried only (n, worker, t_dispatch, t_arrive); v2 added the explicit
 # "schema" field and the optional per-arrival commit "digest" list that
-# multi-host runs record (runtime/hostloop.py).  Traces now outlive the
-# code that wrote them, so load() upgrades v1 in place and REJECTS unknown
+# multi-host runs record (runtime/hostloop.py); v3 adds the optional
+# per-arrival client-state "events" rows (completeness, drops, wait, outage)
+# written when the run used a ClientStateProcess.  Traces outlive the code
+# that wrote them, so load() upgrades v1/v2 in place and REJECTS unknown
 # versions with a clear error instead of misparsing them.
-TRACE_SCHEMA = 2
+TRACE_SCHEMA = 3
+
+
+def _config_error_type():
+    # ConfigError lives in api/config.py, two layers above this module;
+    # import at call time so the runtime layer stays import-light and free
+    # of cycles.  ConfigError subclasses ValueError, so callers that catch
+    # the old plain ValueError keep working.
+    from ..api.config import ConfigError
+    return ConfigError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,14 +96,44 @@ class Arrival:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClientEvent:
+    """Client-state outcome of one gradient job (one per arrival).
+
+    ``completeness`` is the fraction of the local batch work the client
+    finished before submitting (the server scales the gradient by it — the
+    value is an exact float32 so replay is bitwise); ``drops`` counts
+    mid-compute disconnects the job survived (each one restarted the SAME
+    job from the worker's stale snapshot, the hostloop resync semantics);
+    ``wait`` is the availability wait before compute started and ``outage``
+    the total lost-compute + offline time of the drops, both in loop-time
+    units.
+    """
+
+    completeness: float = 1.0
+    drops: int = 0
+    wait: float = 0.0
+    outage: float = 0.0
+
+    def to_row(self) -> list:
+        return [self.completeness, self.drops, self.wait, self.outage]
+
+    @classmethod
+    def from_row(cls, row) -> "ClientEvent":
+        return cls(completeness=float(row[0]), drops=int(row[1]),
+                   wait=float(row[2]), outage=float(row[3]))
+
+
+@dataclasses.dataclass(frozen=True)
 class ArrivalTrace:
     """A recorded arrival schedule — the ground truth for trace-replay.
 
     Stores the per-arrival ``(worker, t_dispatch, t_arrive)`` triples in
-    arrival order.  Replay does not re-enact these rows directly: each
-    worker's jobs are sequential, so the per-worker sequence of *durations*
-    fully determines the event evolution under the deterministic loop, and
-    ``TraceArrivals`` re-serves exactly those durations.
+    arrival order, plus (schema v3) the per-arrival ``ClientEvent`` when the
+    recording run used a ``ClientStateProcess``.  Replay does not re-enact
+    these rows directly: each worker's jobs are sequential, so the
+    per-worker sequence of *durations* (and events) fully determines the
+    event evolution under the deterministic loop, and ``TraceArrivals``
+    re-serves exactly those.
     """
 
     n: int
@@ -81,6 +144,9 @@ class ArrivalTrace:
     # recorded by real multi-host runs; None on simulated traces.  Replay
     # recomputes them (AsyncRunner record_digests) to localize divergence.
     digest: Optional[tuple] = None
+    # per-arrival ClientEvent rows (schema v3); None when the recording run
+    # had no client-state scenario (plain arrival processes).
+    events: Optional[tuple] = None
 
     def __len__(self) -> int:
         return int(self.worker.shape[0])
@@ -91,17 +157,22 @@ class ArrivalTrace:
 
     @classmethod
     def from_arrivals(cls, n: int, arrivals: Sequence[Arrival],
-                      digests: Optional[Sequence[str]] = None
+                      digests: Optional[Sequence[str]] = None,
+                      events: Optional[Sequence[ClientEvent]] = None,
                       ) -> "ArrivalTrace":
         if digests is not None and len(digests) != len(arrivals):
             raise ValueError(
                 f"{len(digests)} digests for {len(arrivals)} arrivals")
+        if events is not None and len(events) != len(arrivals):
+            raise ValueError(
+                f"{len(events)} client events for {len(arrivals)} arrivals")
         return cls(
             n=n,
             worker=np.asarray([a.worker for a in arrivals], np.int32),
             t_dispatch=np.asarray([a.t_dispatch for a in arrivals]),
             t_arrive=np.asarray([a.t_arrive for a in arrivals]),
             digest=None if digests is None else tuple(digests),
+            events=None if events is None else tuple(events),
         )
 
     def durations_per_worker(self) -> list:
@@ -111,6 +182,31 @@ class ArrivalTrace:
             out[int(self.worker[k])].append(
                 float(self.t_arrive[k]) - float(self.t_dispatch[k]))
         return out
+
+    def events_per_worker(self) -> Optional[list]:
+        """Per-worker FIFO of ClientEvents, aligned with
+        ``durations_per_worker`` (same per-worker job order)."""
+        if self.events is None:
+            return None
+        out = [[] for _ in range(self.n)]
+        for k in range(len(self)):
+            out[int(self.worker[k])].append(self.events[k])
+        return out
+
+    def event_stats(self) -> dict:
+        """Aggregate client-state telemetry over the recorded events
+        (empty dict when the trace carries none)."""
+        if self.events is None:
+            return {}
+        comp = [e.completeness for e in self.events]
+        return {
+            "events": len(self.events),
+            "dropouts": int(sum(e.drops for e in self.events)),
+            "partial_jobs": int(sum(1 for c in comp if c < 1.0)),
+            "mean_completeness": float(np.mean(comp)) if comp else 1.0,
+            "wait_time": float(sum(e.wait for e in self.events)),
+            "outage_time": float(sum(e.outage for e in self.events)),
+        }
 
     # ------------------------------------------------------- persistence
 
@@ -124,6 +220,8 @@ class ArrivalTrace:
         }
         if self.digest is not None:
             d["digest"] = list(self.digest)
+        if self.events is not None:
+            d["events"] = [e.to_row() for e in self.events]
         with open(path, "w") as f:
             json.dump(d, f)
         return path
@@ -132,7 +230,8 @@ class ArrivalTrace:
     def load(cls, path: str) -> "ArrivalTrace":
         with open(path) as f:
             d = json.load(f)
-        # v1 files predate the schema field: upgrade in place (no digests)
+        # v1 files predate the schema field: upgrade in place (no digests,
+        # no events); v2 files carry no events.
         schema = int(d.get("schema", 1))
         if schema < 1 or schema > TRACE_SCHEMA:
             raise ValueError(
@@ -140,11 +239,14 @@ class ArrivalTrace:
                 f"this build (reads v1..v{TRACE_SCHEMA}); re-record the "
                 "trace or upgrade the repro package")
         digest = d.get("digest")
+        events = d.get("events")
         return cls(n=int(d["n"]),
                    worker=np.asarray(d["worker"], np.int32),
                    t_dispatch=np.asarray(d["t_dispatch"]),
                    t_arrive=np.asarray(d["t_arrive"]),
-                   digest=None if digest is None else tuple(digest))
+                   digest=None if digest is None else tuple(digest),
+                   events=None if events is None else tuple(
+                       ClientEvent.from_row(r) for r in events))
 
 
 class ArrivalProcess:
@@ -160,6 +262,20 @@ class ArrivalProcess:
 
     def duration(self, worker: int) -> float:
         raise NotImplementedError
+
+    def duration_at(self, worker: int, t: float) -> float:
+        """Duration of a job dispatched at absolute loop time ``t``.  The
+        event loop calls this hook; the default ignores ``t`` (stationary
+        processes).  Time-varying processes (availability cycles) override
+        it."""
+        return self.duration(worker)
+
+    def client_event(self, worker: int) -> Optional[ClientEvent]:
+        """Client-state outcome of ``worker``'s arriving job, or None for
+        plain timing processes.  The loop pops this once per arrival; jobs
+        per worker are strictly sequential, so a per-worker FIFO filled at
+        dispatch time and drained here stays aligned."""
+        return None
 
 
 class FixedArrivals(ArrivalProcess):
@@ -211,15 +327,17 @@ class ExponentialArrivals(ArrivalProcess):
 class TraceArrivals(ArrivalProcess):
     """Replay of a recorded ``ArrivalTrace``.
 
-    Serves each worker's recorded durations back in dispatch order; the
-    deterministic event loop then reproduces the recorded arrival sequence
-    exactly (same order, same times) — asserted per run by the loop when it
-    finishes, and end-to-end by ``tests/test_runtime.py`` (simulator and
-    runner produce bit-identical parameters from one trace).  A worker whose
-    recorded jobs are exhausted gets an INFINITE duration: the recording run
-    dispatched that trailing job too but it never arrived inside the
-    recorded window, so in replay it never arrives either (the loop stops
-    when only never-arriving jobs remain).
+    Serves each worker's recorded durations (and, for v3 traces, client
+    events) back in dispatch order; the deterministic event loop then
+    reproduces the recorded arrival sequence exactly (same order, same
+    times, same completeness) — asserted per run by the loop when it
+    finishes, and end-to-end by ``tests/test_runtime.py`` /
+    ``tests/test_scenarios.py`` (simulator and runner produce bit-identical
+    parameters from one trace).  A worker whose recorded jobs are exhausted
+    gets an INFINITE duration: the recording run dispatched that trailing
+    job too but it never arrived inside the recorded window, so in replay
+    it never arrives either (the loop stops when only never-arriving jobs
+    remain).
     """
 
     def __init__(self, trace: ArrivalTrace):
@@ -230,6 +348,8 @@ class TraceArrivals(ArrivalProcess):
     def reset(self) -> None:
         self._cursor = [0] * self.n
         self._durations = self.trace.durations_per_worker()
+        self._events = self.trace.events_per_worker()
+        self._ecursor = [0] * self.n
 
     def duration(self, worker: int) -> float:
         c = self._cursor[worker]
@@ -238,6 +358,233 @@ class TraceArrivals(ArrivalProcess):
         self._cursor[worker] = c + 1
         return self._durations[worker][c]
 
+    def client_event(self, worker: int) -> Optional[ClientEvent]:
+        if self._events is None:
+            return None
+        c = self._ecursor[worker]
+        self._ecursor[worker] = c + 1
+        return self._events[worker][c]
+
+
+# --------------------------------------------------------------------------
+# availability models (when is a client willing to START a job)
+
+
+class AvailabilityModel:
+    """Availability policy: ``wait(worker, t, rng)`` returns how long a job
+    dispatched to ``worker`` at loop time ``t`` waits before the client is
+    online and compute starts (0.0 = immediately available).  Draws come
+    from the per-worker ``rng`` stream the ``ClientStateProcess`` owns, so
+    waits depend only on (seed, worker, job index) — replayable."""
+
+    def wait(self, worker: int, t: float, rng) -> float:
+        raise NotImplementedError
+
+
+class SinAvailability(AvailabilityModel):
+    """Sin-cycle availability (FLGo system simulator idiom): worker ``w``
+    is online at time ``t`` with probability
+
+        p_w(t) = lo + (hi - lo) * (1 + sin(2π(t/period + phase_w))) / 2
+
+    i.e. a diurnal cycle between ``lo`` and ``hi``, phase-shifted per worker
+    by the golden ratio so the fleet never synchronizes.  ``wait`` draws
+    slotted Bernoulli checks every ``slot`` time units until one passes."""
+
+    def __init__(self, period: float = 8.0, slot: float = 0.25,
+                 lo: float = 0.05, hi: float = 1.0):
+        if period <= 0 or slot <= 0:
+            raise ValueError("period and slot must be positive")
+        if not (0.0 <= lo <= hi <= 1.0) or hi == 0.0:
+            raise ValueError("need 0 <= lo <= hi <= 1 with hi > 0")
+        self.period = float(period)
+        self.slot = float(slot)
+        self.lo = float(lo)
+        self.hi = float(hi)
+
+    def wait(self, worker: int, t: float, rng) -> float:
+        ph = (worker * 0.6180339887498949) % 1.0
+        wait = 0.0
+        while True:
+            p = self.lo + (self.hi - self.lo) * 0.5 * (
+                1.0 + math.sin(2.0 * math.pi * ((t + wait) / self.period + ph)))
+            if rng.random() < p:
+                return wait
+            wait += self.slot
+
+
+class LognormalAvailability(AvailabilityModel):
+    """Static per-worker availability with a lognormal population (FLGo's
+    ``lognormal`` mode): worker ``w`` draws ``x_w ~ LogNormal(0, sigma)``
+    once (from its own seed stream, independent of job order) and is online
+    each ``slot`` with probability ``p_w = x_w / (1 + x_w)`` ∈ (0, 1).
+    Larger ``sigma`` widens the availability spread across the fleet."""
+
+    def __init__(self, sigma: float = 1.0, slot: float = 0.5, seed: int = 0):
+        if sigma < 0 or slot <= 0:
+            raise ValueError("sigma must be >= 0 and slot > 0")
+        self.sigma = float(sigma)
+        self.slot = float(slot)
+        self.seed = int(seed)
+        self._p: dict = {}
+
+    def prob(self, worker: int) -> float:
+        p = self._p.get(worker)
+        if p is None:
+            x = float(np.random.default_rng(
+                np.random.SeedSequence([self.seed, int(worker)])
+            ).lognormal(0.0, self.sigma))
+            p = self._p[worker] = x / (1.0 + x)
+        return p
+
+    def wait(self, worker: int, t: float, rng) -> float:
+        return self.slot * float(rng.geometric(self.prob(worker)) - 1)
+
+
+class SkewAvailability(AvailabilityModel):
+    """Label-skew-correlated availability: workers holding the most skewed
+    data are online the least, the adversarial pattern for heterogeneity
+    claims (the rare data lives on the flakiest clients).  ``skew`` is a
+    per-worker score in [0, 1]; worker ``w`` is online each ``slot`` with
+    probability ``clip(1 - beta * skew_w, p_min, 1)``."""
+
+    def __init__(self, skew, beta: float = 0.8, slot: float = 0.5,
+                 p_min: float = 0.1):
+        skew = np.asarray(skew, np.float64)
+        if skew.ndim != 1 or not np.all(np.isfinite(skew)):
+            raise ValueError("skew must be a 1-D array of finite scores")
+        if np.any(skew < 0) or np.any(skew > 1):
+            raise ValueError("skew scores must lie in [0, 1]")
+        if not (0.0 < p_min <= 1.0) or beta < 0 or slot <= 0:
+            raise ValueError("need 0 < p_min <= 1, beta >= 0, slot > 0")
+        self.skew = skew
+        self.slot = float(slot)
+        self.p = np.clip(1.0 - float(beta) * skew, p_min, 1.0)
+
+    def wait(self, worker: int, t: float, rng) -> float:
+        return self.slot * float(rng.geometric(self.p[worker]) - 1)
+
+
+# --------------------------------------------------------------------------
+# client-state scenario engine
+
+
+class ClientStateProcess(ArrivalProcess):
+    """Composable client-state scenario wrapped around a base process.
+
+    Each dispatched job runs the client-state machine (see docs/async.md):
+
+        dispatched → [wait: availability] → computing
+        computing  → (dropout_rate) dropped → offline Exp(reconnect_mean)
+                   → reconnect with the STALE snapshot → recompute same job
+        computing  → done, completeness c ∈ [partial_min, 1]
+
+    The returned duration is ``wait + outage + c · d · jitter`` where ``d``
+    is the base draw, ``jitter ~ LogNormal(0, responsiveness_sigma)``, and
+    ``outage`` sums each drop's lost compute plus its offline time.  A drop
+    with ``reconnect_mean=None`` kills the worker (infinite duration — the
+    hostloop dropout accounting).  Dropout/reconnect deliberately keeps the
+    SAME job on the SAME dispatch snapshot, matching the hostloop resync
+    path: the server re-sends the worker's stale snapshot row, so replaying
+    the extended duration is bit-exact server-side.
+
+    All draws come from per-worker ``SeedSequence([seed, w])`` streams, so a
+    job's outcome depends only on (seed, worker, job index) — never on how
+    other workers' arrivals interleave — which is what makes recorded traces
+    replay bit-for-bit.  The per-job ``ClientEvent`` is queued at dispatch
+    and popped by the loop at arrival (jobs per worker are sequential).
+    """
+
+    def __init__(self, base: ArrivalProcess, *, seed: int = 0,
+                 availability: Optional[AvailabilityModel] = None,
+                 dropout_rate: float = 0.0,
+                 reconnect_mean: Optional[float] = None,
+                 partial_min: float = 1.0,
+                 responsiveness_sigma: float = 0.0):
+        if not isinstance(base, ArrivalProcess):
+            raise ValueError(f"base must be an ArrivalProcess, got {base!r}")
+        if availability is not None and not isinstance(availability,
+                                                       AvailabilityModel):
+            raise ValueError(
+                f"availability must be an AvailabilityModel, "
+                f"got {availability!r}")
+        if not (0.0 <= dropout_rate < 1.0):
+            raise ValueError(
+                f"dropout_rate must lie in [0, 1), got {dropout_rate}")
+        if reconnect_mean is not None and reconnect_mean <= 0:
+            raise ValueError(
+                f"reconnect_mean must be positive or None, "
+                f"got {reconnect_mean}")
+        if not (0.0 < partial_min <= 1.0):
+            raise ValueError(
+                f"partial_min must lie in (0, 1], got {partial_min}")
+        if responsiveness_sigma < 0:
+            raise ValueError(
+                f"responsiveness_sigma must be >= 0, "
+                f"got {responsiveness_sigma}")
+        self.base = base
+        self.n = base.n
+        self.seed = int(seed)
+        self.availability = availability
+        self.dropout_rate = float(dropout_rate)
+        self.reconnect_mean = (None if reconnect_mean is None
+                               else float(reconnect_mean))
+        self.partial_min = float(partial_min)
+        self.responsiveness_sigma = float(responsiveness_sigma)
+        self.reset()
+
+    def reset(self) -> None:
+        self.base.reset()
+        self._rngs = [np.random.default_rng(np.random.SeedSequence(
+            [self.seed, w])) for w in range(self.n)]
+        self._events = [collections.deque() for _ in range(self.n)]
+
+    def duration(self, worker: int) -> float:
+        return self.duration_at(worker, 0.0)
+
+    def duration_at(self, worker: int, t: float) -> float:
+        rng = self._rngs[worker]
+        wait = 0.0
+        if self.availability is not None:
+            wait = float(self.availability.wait(worker, t, rng))
+        d = float(self.base.duration_at(worker, t + wait))
+        if not math.isfinite(d):
+            # base exhausted (trace replay past the window): job never
+            # arrives, its queued event is never popped.
+            self._events[worker].append(ClientEvent(wait=wait))
+            return d
+        if self.responsiveness_sigma > 0.0:
+            d *= float(rng.lognormal(0.0, self.responsiveness_sigma))
+        completeness = 1.0
+        if self.partial_min < 1.0:
+            # exact float32 so the trace row, the runner's flat scale and
+            # the simulator's pytree scale all use the identical constant
+            completeness = float(np.float32(
+                rng.uniform(self.partial_min, 1.0)))
+            d *= completeness
+        drops, outage = 0, 0.0
+        if self.dropout_rate > 0.0:
+            while rng.random() < self.dropout_rate:
+                drops += 1
+                lost = float(rng.uniform(0.0, 1.0)) * d
+                if self.reconnect_mean is None:
+                    # permanent dropout: the worker dies mid-compute and the
+                    # job (and every later one) never arrives
+                    self._events[worker].append(ClientEvent(
+                        completeness, drops, wait, float("inf")))
+                    return float("inf")
+                outage += lost + float(rng.exponential(self.reconnect_mean))
+        self._events[worker].append(ClientEvent(
+            completeness=completeness, drops=drops, wait=wait, outage=outage))
+        return wait + outage + d
+
+    def client_event(self, worker: int) -> Optional[ClientEvent]:
+        return self._events[worker].popleft()
+
+
+# --------------------------------------------------------------------------
+# factories
+
 
 def make_arrivals(kind: str, n: int, *, times=None, mean=1.0, seed: int = 0,
                   trace: Optional[str] = None) -> ArrivalProcess:
@@ -245,17 +592,94 @@ def make_arrivals(kind: str, n: int, *, times=None, mean=1.0, seed: int = 0,
 
     ``fixed`` uses ``times`` (defaults to all-ones), ``exp`` draws
     ``Exp(mean)`` durations with ``seed``, ``trace`` loads the
-    ``ArrivalTrace`` JSON at ``trace``.
+    ``ArrivalTrace`` JSON at ``trace``.  Rejects unknown kinds and invalid
+    arguments with the typed ``ConfigError`` from ``api/config.py`` (a
+    ``ValueError`` subclass) so misconfiguration fails at build time, not
+    deep inside the event loop.
     """
+    ConfigError = _config_error_type()
     if kind == "fixed":
-        return FixedArrivals(np.ones(n) if times is None else times)
+        try:
+            return FixedArrivals(np.ones(n) if times is None else times)
+        except ValueError as e:
+            raise ConfigError(f"arrival kind 'fixed': {e}") from None
     if kind == "exp":
-        return ExponentialArrivals(n, mean=mean, seed=seed)
+        try:
+            return ExponentialArrivals(n, mean=mean, seed=seed)
+        except ValueError as e:
+            raise ConfigError(f"arrival kind 'exp': {e}") from None
     if kind == "trace":
         if trace is None:
-            raise ValueError("arrival kind 'trace' needs a trace path")
+            raise ConfigError("arrival kind 'trace' needs a trace path")
         t = ArrivalTrace.load(trace)
         if t.n != n:
-            raise ValueError(f"trace has n={t.n} workers, run has n={n}")
+            raise ConfigError(f"trace has n={t.n} workers, run has n={n}")
         return TraceArrivals(t)
-    raise ValueError(f"unknown arrival kind {kind!r}; options: {ARRIVAL_KINDS}")
+    raise ConfigError(
+        f"unknown arrival kind {kind!r}; options: {ARRIVAL_KINDS}")
+
+
+# per-kind option vocabulary of make_scenario; values are the defaults
+_SCENARIO_DEFAULTS = {
+    "none": {},
+    "dropout": {"dropout_rate": 0.15, "reconnect_mean": 2.0},
+    "partial": {"partial_min": 0.25},
+    "sin": {"period": 8.0, "slot": 0.25, "lo": 0.05, "hi": 1.0},
+    "lognormal": {"sigma": 1.0, "slot": 0.5},
+    "skew": {"skew": None, "beta": 0.8, "slot": 0.5, "p_min": 0.1},
+    "chaos": {"dropout_rate": 0.1, "reconnect_mean": 2.0, "partial_min": 0.5,
+              "responsiveness_sigma": 0.5, "period": 6.0},
+}
+
+
+def make_scenario(kind: str, base: ArrivalProcess, *, seed: int = 0,
+                  **kw) -> ArrivalProcess:
+    """CLI/Trainer-facing factory for ``--scenario``: wrap ``base`` in the
+    named client-state scenario.
+
+    ``none`` returns ``base`` unchanged; ``dropout`` adds mid-round
+    disconnect + reconnect-from-stale-snapshot; ``partial`` submits
+    partial-completeness gradients; ``sin`` / ``lognormal`` / ``skew`` gate
+    job starts on the matching availability model (``skew`` defaults to a
+    linear 0..1 skew score across workers); ``chaos`` composes dropout,
+    partial gradients, responsiveness jitter and a sin cycle.  Unknown kinds,
+    unknown options and invalid values raise the typed ``ConfigError``.
+    """
+    ConfigError = _config_error_type()
+    if kind not in SCENARIO_KINDS:
+        raise ConfigError(
+            f"unknown scenario kind {kind!r}; options: {SCENARIO_KINDS}")
+    defaults = _SCENARIO_DEFAULTS[kind]
+    unknown = sorted(set(kw) - set(defaults))
+    if unknown:
+        raise ConfigError(
+            f"scenario {kind!r} got unknown option(s) {unknown}; "
+            f"accepts {sorted(defaults)}")
+    if kind == "none":
+        return base
+    opts = {**defaults, **kw}
+    try:
+        if kind in ("dropout", "partial"):
+            return ClientStateProcess(base, seed=seed, **opts)
+        if kind == "sin":
+            return ClientStateProcess(
+                base, seed=seed, availability=SinAvailability(**opts))
+        if kind == "lognormal":
+            return ClientStateProcess(
+                base, seed=seed,
+                availability=LognormalAvailability(seed=seed, **opts))
+        if kind == "skew":
+            skew = opts.pop("skew")
+            if skew is None:
+                skew = np.linspace(0.0, 1.0, base.n)
+            return ClientStateProcess(
+                base, seed=seed, availability=SkewAvailability(skew, **opts))
+        # chaos
+        period = opts.pop("period")
+        return ClientStateProcess(
+            base, seed=seed, availability=SinAvailability(period=period),
+            **opts)
+    except ValueError as e:
+        if isinstance(e, ConfigError):
+            raise
+        raise ConfigError(f"scenario {kind!r}: {e}") from None

@@ -39,7 +39,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .arrivals import Arrival, ArrivalProcess, ArrivalTrace, TraceArrivals
+from .arrivals import (Arrival, ArrivalProcess, ArrivalTrace, ClientEvent,
+                       TraceArrivals)
 
 __all__ = ["ArrivalView", "LoopStats", "drive_arrivals"]
 
@@ -53,7 +54,10 @@ class ArrivalView:
     ``iters`` is the number of APPLIED server iterations before this
     arrival; ``tau`` the model staleness ``iters + 1 - version(worker)``
     (the paper's model delay: how many server iterations elapsed since the
-    arriving gradient's model version was produced).
+    arriving gradient's model version was produced).  ``completeness`` is
+    the client-state partial-gradient fraction (1.0 unless the run's
+    process is a ``ClientStateProcess`` or a v3 trace replay): the caller
+    must scale the arriving gradient by it before the server update.
     """
 
     seq: int        # arrival index, 0-based
@@ -61,6 +65,7 @@ class ArrivalView:
     t: float        # arrival time (simulated clock)
     tau: int
     iters: int
+    completeness: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +115,7 @@ def drive_arrivals(
     version_iter = [0] * n     # server iter that produced each worker's model
     shuffle_order: list = []
     arrivals: list = []
+    events: list = []          # per-arrival ClientEvent (or None)
     it = 0
     t_now = 0.0
     tau_max = 0
@@ -121,7 +127,7 @@ def drive_arrivals(
         if max_in_flight is not None and len(heap) >= max_in_flight:
             pending.append(w)
             return
-        heapq.heappush(heap, (t + process.duration(w), w, t))
+        heapq.heappush(heap, (t + process.duration_at(w, t), w, t))
         inflight_max = max(inflight_max, len(heap))
 
     def drain(t: float) -> None:
@@ -150,9 +156,13 @@ def drive_arrivals(
         # earlier waiters instead of starving them at the bound
         drain(t_now)
         arrivals.append(Arrival(seq, i, t_disp, t_now))
+        ev = process.client_event(i)
+        events.append(ev)
         tau = it + 1 - version_iter[i]
         tau_max = max(tau_max, tau)
-        applied = bool(on_arrival(ArrivalView(seq, i, t_now, tau, it)))
+        applied = bool(on_arrival(ArrivalView(
+            seq, i, t_now, tau, it,
+            completeness=1.0 if ev is None else ev.completeness)))
         seq += 1
         if applied:
             it += 1
@@ -176,7 +186,13 @@ def drive_arrivals(
                 queues[j] += 1
                 dispatch(j, t_now)
 
-    trace = ArrivalTrace.from_arrivals(n, arrivals)
+    # a process without client state yields all-None events -> no v3 rows;
+    # otherwise normalize stray Nones to the default event so the trace
+    # stays one row per arrival
+    trace = ArrivalTrace.from_arrivals(
+        n, arrivals,
+        events=None if all(e is None for e in events)
+        else [ClientEvent() if e is None else e for e in events])
     if isinstance(process, TraceArrivals):
         _check_replay(trace, process.trace)
     return LoopStats(arrivals=seq, iters=it, tau_max=tau_max, t_end=t_now,
@@ -200,3 +216,13 @@ def _check_replay(got: ArrivalTrace, want: ArrivalTrace) -> None:
             f"says worker {int(want.worker[k])} @ "
             f"t={float(want.t_arrive[k]):.6g} — was the replay run "
             "configured with the recording run's route/rng?")
+    if want.events is not None:
+        if got.events is None:
+            raise AssertionError(
+                "replay of a v3 trace produced no client events")
+        for k in range(m):
+            if got.events[k].completeness != want.events[k].completeness:
+                raise AssertionError(
+                    f"trace replay diverged at arrival {k}: completeness "
+                    f"{got.events[k].completeness} != recorded "
+                    f"{want.events[k].completeness}")

@@ -309,13 +309,20 @@ class _RunSession:
         """One server iteration from an arrived gradient: encode/fold (or
         dense commit) + flat apply + EMA/record bookkeeping.  ``loss`` and
         ``gflat`` may be device values (local compute) or host arrays (a
-        frame's payload) — the math is the same jit either way."""
+        frame's payload) — the math is the same jit either way.  A partial
+        arrival (client-state ``view.completeness`` < 1) scales the flat
+        gradient BEFORE digesting/committing — the scale is an exact f32
+        constant from the trace, and an elementwise f32 multiply commutes
+        with ravel, so the simulator's pytree-side scaling stays bitwise
+        identical."""
         r = self.r
         w = int(view.worker)
         job = self.arrived[w]
         self.arrived[w] = job + 1
         self.n_grads += 1
         gflat = jnp.asarray(gflat)
+        if view.completeness != 1.0:
+            gflat = jnp.float32(view.completeness) * gflat
         if self.digests is not None:
             self.digests.append(commit_digest(np.asarray(gflat)))
         if r._sparse:
@@ -329,7 +336,8 @@ class _RunSession:
             self.state, g_dir = r._step_sparse(
                 FlatTrainState(st.params, st.opt, srv), jnp.int32(w), wire)
         else:
-            self.state, g_dir = r._step(self.state, jnp.int32(w), gflat)
+            self.state, g_dir = r._step(self.state, jnp.int32(w), gflat,
+                                        jnp.int32(view.tau))
         # device-side EMA; the queue keeps the host <= depth steps ahead
         # (g_dir comes out of the arrival step, so waiting on it bounds
         # the whole grad+commit+apply chain of that arrival)
@@ -460,10 +468,11 @@ class AsyncRunner:
                     lambda base, q, s: spec.unravel(
                         base + codec.decode(q, s)))
 
-    def _arrival_step(self, state: FlatTrainState, worker, grad):
-        """One server iteration: algo rule (commit for DuDe) + flat apply,
-        all elementwise on the (possibly P-sharded) slabs."""
-        srv, g = self.algo.arrival(state.engine, worker, grad)
+    def _arrival_step(self, state: FlatTrainState, worker, grad, tau):
+        """One server iteration: algo rule (commit for DuDe, s(τ)-damped
+        commit for the staleness family) + flat apply, all elementwise on
+        the (possibly P-sharded) slabs."""
+        srv, g = self.algo.arrival(state.engine, worker, grad, tau)
         t_new = state.opt.step + 1
         pf, slots = self.fopt.update(state.params, g, state.opt.slots, t_new)
         return FlatTrainState(pf, FlatOptState(t_new, slots), srv), g

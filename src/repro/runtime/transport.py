@@ -255,11 +255,22 @@ def decode_frame(buf: bytes) -> tuple[Message, int]:
     total = body_len + (-body_len) % FRAME_ALIGN
     if len(buf) < total:
         raise TransportTimeout("partial frame body")
-    header = _loads(bytes(buf[_PREFIX.size:_PREFIX.size + hlen]))
     payload = bytes(buf[_PREFIX.size + hlen:body_len])
-    kind = header.pop("k")
-    manifest = header.pop("a", [])
-    arrays = unpack_arrays(manifest, payload) if manifest else ()
+    try:
+        header = _loads(bytes(buf[_PREFIX.size:_PREFIX.size + hlen]))
+        kind = header.pop("k")
+        manifest = header.pop("a", [])
+    except Exception as e:
+        # corrupt header bytes surface as msgpack/JSON/KeyError internals;
+        # wrap them so every malformed frame fails with the structured
+        # protocol error (fuzzed by tests/test_transport.py)
+        raise TransportError(f"corrupt frame header: {e!r}") from None
+    try:
+        arrays = unpack_arrays(manifest, payload) if manifest else ()
+    except TransportError:
+        raise
+    except Exception as e:
+        raise TransportError(f"corrupt payload manifest: {e!r}") from None
     return Message(kind, header, arrays), total
 
 

@@ -296,7 +296,9 @@ def test_async_algo_registry_validation():
         make_async_algo("dude", acc)
     for name in ASYNC_ALGOS:
         algo = make_async_algo(name, eng)
-        assert (algo.route is None) == (name in ("dude", "vanilla_asgd"))
+        # greedy scheduling everywhere except the two routed disciplines
+        assert (algo.route is None) == (
+            name not in ("uniform_asgd", "shuffled_asgd"))
 
 
 def test_runner_rejects_mismatched_process():

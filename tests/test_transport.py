@@ -199,6 +199,174 @@ class TestFraming:
             unpack_arrays(manifest, payload[:-8])
 
 
+# --------------------------------------------------------- malformed frames
+
+def _fuzz_frame(seed=0):
+    """A realistic frame to mutilate: header meta + two payload arrays."""
+    rng = np.random.default_rng(seed)
+    g = np.asarray(rng.normal(size=57), np.float32)
+    q = np.asarray(rng.integers(-127, 128, 23), np.int8)
+    return encode_frame("commit", commit_header(2, 9, 0.75,
+                                                commit_digest(g)), [g, q])
+
+
+class TestFrameFuzz:
+    """decode_frame on adversarial bytes: every malformed input must fail
+    with a STRUCTURED protocol error (TransportError for corruption,
+    TransportTimeout for incompleteness) — never a raw struct/msgpack/key
+    error, and never a hang."""
+
+    def test_every_truncation_is_timeout(self):
+        frame = _fuzz_frame()
+        for cut in range(len(frame)):
+            with pytest.raises(TransportTimeout):
+                decode_frame(frame[:cut])
+
+    def test_every_protocol_version_rejected(self):
+        frame = bytearray(_fuzz_frame())
+        for ver in range(256):
+            if ver == frame[2]:
+                continue
+            bad = bytes(frame[:2]) + bytes([ver]) + bytes(frame[3:])
+            with pytest.raises(TransportError, match="protocol"):
+                decode_frame(bad)
+
+    def test_unknown_header_codec_rejected(self):
+        frame = bytearray(_fuzz_frame())
+        for codec in (7, 99, 255):
+            bad = bytes(frame[:3]) + bytes([codec]) + bytes(frame[4:])
+            with pytest.raises(TransportError, match="codec"):
+                decode_frame(bad)
+
+    def test_corrupt_header_bytes_are_structured(self):
+        """Flipping bytes inside the msgpack header region must surface as
+        TransportError (wrapped parse failure), TransportTimeout (a length
+        byte grew the frame), or a silently-still-valid decode — never a
+        raw msgpack/KeyError/Unicode exception."""
+        frame = _fuzz_frame()
+        import struct
+        hlen = struct.unpack("!I", frame[4:8])[0]
+        for k in range(12, 12 + hlen):
+            for flip in (0x00, 0xFF, frame[k] ^ 0x41):
+                bad = frame[:k] + bytes([flip]) + frame[k + 1:]
+                try:
+                    msg, used = decode_frame(bad)
+                    assert used <= len(bad)
+                except (TransportError, TransportTimeout):
+                    pass
+
+    def test_random_byte_flips_never_leak_raw_errors(self):
+        frame = _fuzz_frame()
+        rng = np.random.default_rng(12345)
+        for _ in range(400):
+            bad = bytearray(frame)
+            for k in rng.integers(0, len(frame), rng.integers(1, 5)):
+                bad[int(k)] = int(rng.integers(0, 256))
+            try:
+                msg, used = decode_frame(bytes(bad))
+                assert used <= len(bad)
+            except (TransportError, TransportTimeout):
+                pass
+
+    def test_random_garbage_never_leaks_raw_errors(self):
+        rng = np.random.default_rng(7)
+        for _ in range(300):
+            blob = rng.integers(0, 256, int(rng.integers(0, 200)),
+                                dtype=np.uint8).tobytes()
+            try:
+                decode_frame(blob)
+            except (TransportError, TransportTimeout):
+                pass
+
+    def test_lying_payload_length_truncates_structured(self):
+        """Shrinking the prefix's payload-length field starves the array
+        manifest -> structured 'truncated' TransportError; growing it makes
+        the frame incomplete -> TransportTimeout (recv would keep waiting
+        until its deadline, never misparse)."""
+        import struct
+        frame = _fuzz_frame()
+        plen = struct.unpack("!I", frame[8:12])[0]
+        shrunk = frame[:8] + struct.pack("!I", 8) + frame[12:]
+        with pytest.raises(TransportError, match="truncated"):
+            decode_frame(shrunk)
+        grown = frame[:8] + struct.pack("!I", plen + 4096) + frame[12:]
+        with pytest.raises(TransportTimeout):
+            decode_frame(grown)
+
+    def test_recv_deadline_on_partial_frame_never_hangs(self):
+        """A peer that sends half a frame and goes silent: recv must raise
+        TransportTimeout promptly at its deadline (holding the partial
+        bytes), not block forever."""
+        import time
+        a, b = _socketpair_transports()
+        try:
+            frame = _fuzz_frame()
+            a.sock.sendall(frame[: len(frame) // 2])
+            t0 = time.monotonic()
+            with pytest.raises(TransportTimeout, match="partial"):
+                b.recv(timeout=0.2)
+            assert time.monotonic() - t0 < 5.0
+            # the held bytes are not lost: completing the frame delivers it
+            a.sock.sendall(frame[len(frame) // 2:])
+            assert b.recv(timeout=2.0).kind == "commit"
+        finally:
+            a.close()
+            b.close()
+
+    def test_mid_payload_disconnect_raises_closed(self):
+        """EOF halfway through a frame is a structured TransportClosed, not
+        a timeout loop or a misparse."""
+        a, b = _socketpair_transports()
+        try:
+            frame = _fuzz_frame()
+            a.sock.sendall(frame[: len(frame) - 7])
+            a.close()
+            with pytest.raises(TransportClosed):
+                b.recv(timeout=2.0)
+        finally:
+            b.close()
+
+    def test_corrupt_frame_then_valid_frame_on_socket(self):
+        """A corrupt frame poisons the stream loudly (recv raises
+        TransportError) instead of silently resynchronizing on garbage."""
+        a, b = _socketpair_transports()
+        try:
+            bad = bytearray(_fuzz_frame())
+            bad[0] = 0x58  # break the magic
+            a.sock.sendall(bytes(bad))
+            with pytest.raises(TransportError, match="magic"):
+                b.recv(timeout=2.0)
+        finally:
+            a.close()
+            b.close()
+
+
+if HAVE_HYPOTHESIS:
+    class TestFrameFuzzHypothesis:
+        @settings(max_examples=120, deadline=None)
+        @given(blob=st.binary(min_size=0, max_size=256))
+        def test_arbitrary_bytes_fail_structured(self, blob):
+            try:
+                msg, used = decode_frame(blob)
+                assert used <= len(blob)
+            except (TransportError, TransportTimeout):
+                pass
+
+        @settings(max_examples=80, deadline=None)
+        @given(cut=st.integers(0, 10_000), xor=st.integers(1, 255),
+               pos=st.integers(0, 10_000))
+        def test_single_corruption_fails_structured(self, cut, xor, pos):
+            frame = _fuzz_frame()
+            pos = pos % len(frame)
+            bad = frame[:pos] + bytes([frame[pos] ^ xor]) + frame[pos + 1:]
+            bad = bad[: max(1, cut % (len(bad) + 1))]
+            try:
+                msg, used = decode_frame(bad)
+                assert used <= len(bad)
+            except (TransportError, TransportTimeout):
+                pass
+
+
 # ------------------------------------------------------------ real transports
 
 def _socketpair_transports(timeout=5.0):
